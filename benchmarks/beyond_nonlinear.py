@@ -1,0 +1,58 @@
+"""Beyond-paper: non-linear analytic heads (paper §5 future work).
+
+AFL with kernel/activation feature maps φ before the Gram statistics: the
+regression stays linear in φ-space, so exactness and partition invariance
+hold verbatim while the head becomes non-linear in the inputs. Benchmarked
+on (a) a linearly-inseparable XOR-style task and (b) the shared feature task.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.config import FLConfig
+from repro.core.features import relu_map, rff_map
+from repro.data import synthetic as D
+from repro.fl import afl
+
+from benchmarks.common import feature_data, print_table
+
+
+def _rings(n, seed=0):
+    """Two concentric rings — rotation-invariant, linearly inseparable."""
+    rng = np.random.default_rng(seed)
+    r = np.where(rng.random(n) < 0.5, 1.0, 2.2)
+    th = rng.uniform(0, 2 * np.pi, n)
+    x = np.stack([r * np.cos(th), r * np.sin(th)], 1)
+    x += rng.standard_normal((n, 2)) * 0.15
+    return D.Dataset(x.astype(np.float32), (r > 1.5).astype(int), 2)
+
+
+def run(quick: bool = False) -> list[dict]:
+    n = 2000 if quick else 6000
+    fl = FLConfig(num_clients=10 if quick else 40, partition="niid1", alpha=0.1)
+    rows, out = [], []
+    for name, ds in [("rings(2d)", _rings(n))]:
+        train, test = D.train_test_split(ds, 0.25, seed=0)
+        d_in = train.x.shape[1]
+        lin = afl.run_afl(train, test, fl)
+        rff = afl.run_afl(train, test, fl,
+                          feature_map=rff_map(d_in, 512, lengthscale=0.7, seed=1))
+        relu = afl.run_afl(train, test, fl,
+                           feature_map=relu_map(d_in, 512, seed=1))
+        rows.append([name, f"{lin.accuracy:.4f}", f"{rff.accuracy:.4f}",
+                     f"{relu.accuracy:.4f}"])
+        out.append(dict(task=name, linear=lin.accuracy, rff=rff.accuracy,
+                        relu=relu.accuracy))
+    # the standard feature task: φ should not hurt
+    train, test = feature_data()
+    d_in = train.x.shape[1]
+    lin = afl.run_afl(train, test, fl)
+    rff = afl.run_afl(train, test, fl,
+                      feature_map=rff_map(d_in, 1024, lengthscale=8.0, seed=2))
+    rows.append(["features(128d)", f"{lin.accuracy:.4f}",
+                 f"{rff.accuracy:.4f}", "-"])
+    out.append(dict(task="features", linear=lin.accuracy, rff=rff.accuracy))
+    print_table("Beyond-paper — non-linear analytic heads (AFL, single round)",
+                ["task", "linear", "RFF-512/1024", "ReLU-512"], rows)
+    return out

@@ -1,0 +1,55 @@
+"""Beyond-paper: partial participation & stragglers (paper §5 limitation).
+
+The paper flags waiting-for-all-clients as AFL's open operational problem.
+The AA law dissolves it: the server's running aggregate is the *exact* joint
+solution over whichever clients have reported. We simulate a straggler
+timeline and report accuracy as arrivals accumulate, plus the same timeline
+under SecAgg-style pairwise masking (bit-exact for AFL's sum-aggregation).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.fl.afl import evaluate
+from repro.fl.partition import make_partition
+from repro.fl.server import AFLServer, make_report, masked_reports
+
+from benchmarks.common import feature_data, print_table
+
+
+def run(quick: bool = False) -> list[dict]:
+    train, test = feature_data()
+    k = 20 if quick else 50
+    d, c = train.x.shape[1], train.num_classes
+    y_onehot = np.eye(c)[train.y]
+    parts = make_partition(train.y, k, "niid1", alpha=0.1, seed=0)
+    reports = [make_report(i, train.x[idx], y_onehot[idx], 1.0)
+               for i, idx in enumerate(parts)]
+    rng = np.random.default_rng(1)
+    arrival = rng.permutation(k)        # stragglers = late arrivals
+
+    srv = AFLServer(d, c, gamma=1.0)
+    rows, out = [], []
+    checkpoints = [max(1, k // 10), k // 4, k // 2, 3 * k // 4, k]
+    seen = 0
+    for stop in checkpoints:
+        while seen < stop:
+            srv.submit(reports[arrival[seen]])
+            seen += 1
+        acc = evaluate(srv.solve(), test.x, test.y)
+        rows.append([f"{stop}/{k}", f"{acc:.4f}"])
+        out.append(dict(arrived=stop, accuracy=acc))
+    print_table(
+        "Beyond-paper — accuracy vs clients arrived (exact at every point; "
+        "no rounds, no staleness)", ["arrived", "accuracy"], rows)
+
+    # masked protocol: identical final aggregate
+    srv_m = AFLServer(d, c, gamma=1.0)
+    srv_m.submit_many(masked_reports(reports, seed=3))
+    acc_m = evaluate(srv_m.solve(), test.x, test.y)
+    dev = float(np.abs(srv_m.solve() - srv.solve()).max())
+    print(f"secure (pairwise-masked) aggregation: acc={acc_m:.4f}, "
+          f"max |ΔW| vs unmasked = {dev:.2e}")
+    out.append(dict(masked_accuracy=acc_m, masked_deviation=dev))
+    return out

@@ -1,0 +1,45 @@
+"""Shared helpers for the per-table benchmark modules.
+
+Offline substitution (see DESIGN.md §2): the paper's CIFAR/Tiny-ImageNet +
+ImageNet-pretrained backbones are unavailable here, so the accuracy tables run
+on a synthetic Gaussian-mixture feature task whose difficulty is tuned so the
+paper's *qualitative* structure reproduces (gradient FL degrades with
+heterogeneity; AFL is invariant and matches the joint solve exactly). The
+exactness/invariance results (ΔW tables) are backbone-independent and
+reproduce the paper's numbers in kind.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+from repro.data import synthetic as D
+
+# One moderately hard feature task shared by the accuracy tables.
+FEATURES = dict(n=8_000, dim=128, num_classes=40, separation=0.45, seed=0)
+
+
+def feature_data():
+    ds = D.gaussian_mixture(**FEATURES)
+    return D.train_test_split(ds, 0.25, seed=0)
+
+
+def fmt_row(cells, widths):
+    return " | ".join(str(c).ljust(w) for c, w in zip(cells, widths))
+
+
+def print_table(title: str, header: list, rows: list) -> None:
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows)) if rows
+              else len(str(h)) for i, h in enumerate(header)]
+    print(f"\n== {title}")
+    print(fmt_row(header, widths))
+    print("-+-".join("-" * w for w in widths))
+    for r in rows:
+        print(fmt_row(r, widths))
+
+
+def timed(fn: Callable):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, time.perf_counter() - t0

@@ -1,0 +1,52 @@
+"""Kernel microbenchmarks: Pallas (interpret-mode) vs jnp reference.
+
+On CPU, interpret mode executes the kernel body in Python — the numbers are
+correctness artifacts, not perf (the perf story is the §Roofline analysis).
+What this bench adds over the tests: max-abs-error across a realistic shape
+sweep, verifying the TPU tiling logic end to end.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+from benchmarks.common import print_table
+
+
+def run(quick: bool = False) -> list[dict]:
+    key = jax.random.key(0)
+    shapes = [(256, 128, 16), (512, 256, 100)] if quick else [
+        (256, 128, 16), (512, 256, 100), (1024, 512, 128), (640, 384, 40),
+    ]
+    rows, out = [], []
+    for n, d, c in shapes:
+        kx, ky = jax.random.split(jax.random.fold_in(key, n))
+        x = jax.random.normal(kx, (n, d), jnp.float32)
+        y = jax.nn.one_hot(
+            jax.random.randint(ky, (n,), 0, c), c, dtype=jnp.float32)
+        g_k, q_k = ops.gram_update(x, y, interpret=True)
+        g_r, q_r = ref.gram_ref(x, y)
+        err = max(float(jnp.abs(g_k - g_r).max()), float(jnp.abs(q_k - q_r).max()))
+        rows.append([f"gram {n}x{d} C={c}", f"{err:.2e}"])
+        out.append(dict(kernel="gram", n=n, d=d, c=c, max_err=err))
+
+    attn_shapes = [(1, 4, 2, 128, 64)] if quick else [
+        (1, 4, 2, 128, 64), (2, 8, 2, 256, 64), (1, 4, 4, 512, 128),
+    ]
+    for b, h, hk, s, hd in attn_shapes:
+        ks = jax.random.split(jax.random.fold_in(key, s), 3)
+        q = jax.random.normal(ks[0], (b, h, s, hd), jnp.float32)
+        k = jax.random.normal(ks[1], (b, hk, s, hd), jnp.float32)
+        v = jax.random.normal(ks[2], (b, hk, s, hd), jnp.float32)
+        o_k = ops.flash_attention(q, k, v, causal=True, interpret=True)
+        o_r = ref.mha_ref(q, k, v, causal=True)
+        err = float(jnp.abs(o_k - o_r).max())
+        rows.append([f"flash b{b} h{h}/{hk} s{s} d{hd}", f"{err:.2e}"])
+        out.append(dict(kernel="flash", b=b, h=h, s=s, hd=hd, max_err=err))
+    print_table("Pallas kernels vs jnp oracle (interpret mode)",
+                ["case", "max |err|"], rows)
+    return out

@@ -1,0 +1,132 @@
+"""§Roofline: three-term roofline table from the dry-run artifacts.
+
+Reads ``results/dryrun/*.json`` (produced by ``repro.launch.dryrun``) and
+prints, per (arch × shape × mesh):
+
+  compute_s    = HLO_FLOPs_global   / (chips × 197e12)
+  memory_s     = HLO_bytes_global   / (chips × 819e9)
+  collective_s = coll_bytes_global  / (chips × 50e9)
+
+plus the dominant term, MODEL_FLOPS = 2·N_active·D for forward-only analytic
+steps (6·N·D for the gradient arm), and the MODEL/HLO FLOPs ratio (useful-
+compute fraction — catches remat/redundancy waste). The §Roofline table in
+EXPERIMENTS.md is generated from this module (single-pod rows).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+
+from repro.config import INPUT_SHAPES
+from repro.configs.registry import get_config
+from repro.launch.dryrun import resolve_config
+
+from benchmarks.common import print_table
+
+RESULTS = pathlib.Path("results/dryrun")
+
+
+def count_params(cfg) -> tuple[int, int]:
+    """(total, active) parameter counts from the config arithmetic."""
+    d, v = cfg.d_model, cfg.vocab_size
+    hd = cfg.resolved_head_dim
+    attn = d * hd * (cfg.num_heads * 2 + cfg.num_kv_heads * 2)
+    n_mats = 3 if cfg.activation == "swiglu" else 2
+    if cfg.moe is not None:
+        ffn_total = cfg.moe.num_experts * n_mats * d * cfg.d_ff + d * cfg.moe.num_experts
+        ffn_active = cfg.moe.top_k * n_mats * d * cfg.d_ff + d * cfg.moe.num_experts
+    else:
+        ffn_total = ffn_active = n_mats * d * cfg.d_ff
+    if cfg.arch_type == "hybrid":
+        ssm = cfg.ssm
+        d_inner = ssm.expand * d
+        mix = d * (2 * d_inner + 2 * ssm.d_state) + d_inner * d
+        per_layer = mix
+        n_attn = cfg.num_layers // cfg.shared_attn_every
+        total = cfg.num_layers * per_layer + n_attn * (attn + ffn_total)
+        active = total
+    elif cfg.arch_type == "xlstm":
+        d_inner = 2 * d
+        per_layer = d * 2 * d_inner + d_inner * 3 * d_inner + d_inner * d
+        total = active = cfg.num_layers * per_layer
+    elif cfg.arch_type == "encdec":
+        per_layer = attn + ffn_total
+        total = (cfg.num_layers * (2 * attn + ffn_total)
+                 + cfg.encoder_layers * per_layer)
+        active = total
+    else:
+        total = cfg.num_layers * (attn + ffn_total)
+        active = cfg.num_layers * (attn + ffn_active)
+    embed = v * d * (1 if cfg.tie_embeddings else 2)
+    return total + embed, active + embed
+
+
+def model_flops(arch: str, shape_name: str, variant: str = "baseline") -> float:
+    """2·N_active·D forward-only (analytic train / prefill / decode)."""
+    shape = INPUT_SHAPES[shape_name]
+    cfg = resolve_config(arch, shape, variant)
+    if cfg is None:
+        return 0.0
+    _, active = count_params(cfg)
+    # embedding lookup is not a matmul; exclude the embed table from N_active
+    active -= cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    if shape.kind == "decode":
+        tokens = shape.global_batch  # one new token per sequence
+    else:
+        tokens = shape.global_batch * shape.seq_len
+    return 2.0 * active * tokens
+
+
+def load(mesh: str = "single", variant: str = "baseline") -> list[dict]:
+    recs = []
+    for p in sorted(RESULTS.glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("mesh") != mesh or r.get("variant", "baseline") != variant:
+            continue
+        recs.append(r)
+    return recs
+
+
+def rows_for(recs: list[dict]) -> tuple[list, list[dict]]:
+    rows, out = [], []
+    for r in recs:
+        tag = f"{r['arch']} × {r['shape']}"
+        if r.get("skipped"):
+            rows.append([tag, "skip", "-", "-", "-", "-", "-"])
+            continue
+        if not r.get("ok"):
+            rows.append([tag, "FAIL", "-", "-", "-", "-", "-"])
+            continue
+        rf = r["roofline"]
+        mf = model_flops(r["arch"], r["shape"], r.get("variant", "baseline"))
+        ratio = mf / rf["flops"] if rf["flops"] else 0.0
+        rows.append([
+            tag,
+            f"{rf['compute_s']*1e3:.2f}",
+            f"{rf['memory_s']*1e3:.2f}",
+            f"{rf['collective_s']*1e3:.2f}",
+            rf["dominant"],
+            f"{ratio:.2f}",
+            f"{r['memory']['peak_bytes_per_device']/2**30:.1f}",
+        ])
+        out.append(dict(arch=r["arch"], shape=r["shape"], **rf,
+                        model_flops=mf, useful_ratio=ratio))
+    return rows, out
+
+
+def run(quick: bool = False) -> list[dict]:
+    recs = load("single")
+    if not recs:
+        print("\n== Roofline: no dry-run artifacts found (run "
+              "`python -m repro.launch.dryrun` first)")
+        return []
+    rows, out = rows_for(recs)
+    print_table(
+        "§Roofline — single-pod (16×16 = 256 chips), per-step seconds ×1e-3",
+        ["arch × shape", "compute(ms)", "memory(ms)", "coll(ms)", "dominant",
+         "useful", "peak GiB/dev*"], rows)
+    print("* CPU stand-in peak; bf16 loop carries legalized to f32 inflate "
+          "this vs the TPU target (see EXPERIMENTS.md §Dry-run).")
+    return out

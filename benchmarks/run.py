@@ -1,0 +1,66 @@
+"""Benchmark driver: one module per paper table/figure + the roofline report.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only table1,...]
+
+Writes results/bench/<name>.json per module and prints each table.
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import pathlib
+import time
+import traceback
+
+MODULES = [
+    ("tableA1_dummy", "Table A.1 — AA-law exactness (dummy data)"),
+    ("table1_noniid", "Table 1 — non-IID accuracy comparison"),
+    ("table2_heterogeneity", "Table 2 — heterogeneity invariance"),
+    ("fig2_clients", "Figure 2 — client-number invariance"),
+    ("table3_ri_ablation", "Table 3 — RI / gamma ablation"),
+    ("table4_backbones", "Table 4 — different backbones"),
+    ("tableA2_local", "Table A.2 — FL vs local-only"),
+    ("tableA3_oneshot", "Table A.3 — single-round competitors"),
+    ("fig3_timing", "Figure 3 — training efficiency"),
+    ("beyond_stragglers", "Beyond-paper — stragglers & secure aggregation"),
+    ("beyond_nonlinear", "Beyond-paper — non-linear analytic heads"),
+    ("kernels_micro", "Pallas kernel correctness sweep"),
+    ("roofline", "§Roofline — dry-run derived"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sizes (CI-scale)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated module names")
+    args = ap.parse_args()
+
+    outdir = pathlib.Path("results/bench")
+    outdir.mkdir(parents=True, exist_ok=True)
+    only = {m for m in args.only.split(",") if m}
+    failures = []
+    t_start = time.perf_counter()
+    for name, desc in MODULES:
+        if only and name not in only:
+            continue
+        print(f"\n########## {desc}")
+        t0 = time.perf_counter()
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            rows = mod.run(quick=args.quick)
+            (outdir / f"{name}.json").write_text(json.dumps(rows, indent=1))
+            print(f"[{name}: {time.perf_counter()-t0:.1f}s]")
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    print(f"\ntotal: {time.perf_counter()-t_start:.1f}s")
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

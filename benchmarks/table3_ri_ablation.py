@@ -1,0 +1,62 @@
+"""Paper Table 3: RI ablation — accuracy w/o and w/ the RI restore across
+γ ∈ {0, 0.1, 1, 10, 100} and K ∈ {100, 500, 1000}.
+
+Paper structure: γ=0 breaks for large K (rank-deficient local Grams); without
+RI the accumulated KγI bias costs accuracy as γ grows; with RI every (γ>0, K)
+cell lands on the same joint-solution accuracy.
+
+Honesty note: on our well-conditioned synthetic features the KγI shrinkage is
+near-isotropic, so argmax accuracy barely moves even at γ=100 — the paper's
+9-point drop needs the ill-conditioned spectra of real CNN features. The bias
+is demonstrated in *weight space* instead (Table A.1 deviations); this table
+still shows the γ=0 rank-deficiency failure and the w/ RI identity.
+"""
+
+from __future__ import annotations
+
+from repro.config import FLConfig
+from repro.fl import afl
+
+from benchmarks.common import feature_data, print_table
+
+GAMMAS = [0.0, 0.1, 1.0, 10.0, 100.0]
+
+
+def run(quick: bool = False) -> list[dict]:
+    train, test = feature_data()
+    ks = [100, 400] if quick else [100, 500, 1000]
+    rows, out = [], []
+    for k in ks:
+        cells = [f"K={k}"]
+        for gamma in GAMMAS:
+            accs = {}
+            for use_ri in (False, True):
+                if gamma == 0.0:
+                    if use_ri:
+                        accs[use_ri] = None
+                        continue
+                    try:
+                        # paper Algorithm 1 (pairwise recursion): γ=0 with
+                        # N_k < d inverts singular Grams → the breakdown the
+                        # paper reports. (The production sufficient-stats
+                        # path is exact even here — see Table A.1 note.)
+                        fl = FLConfig(num_clients=k, gamma=0.0, use_ri=False,
+                                      partition="iid")
+                        accs[use_ri] = afl.run_afl(train, test, fl,
+                                                   pairwise=True).accuracy
+                    except Exception:
+                        accs[use_ri] = float("nan")
+                else:
+                    fl = FLConfig(num_clients=k, gamma=gamma, use_ri=use_ri,
+                                  partition="iid")
+                    accs[use_ri] = afl.run_afl(train, test, fl,
+                                               pairwise=True).accuracy
+            wo = "N/A" if accs[False] is None else f"{accs[False]:.4f}"
+            w = "N/A" if accs[True] is None else f"{accs[True]:.4f}"
+            cells.append(f"{wo}/{w}")
+            out.append(dict(clients=k, gamma=gamma,
+                            acc_no_ri=accs[False], acc_ri=accs[True]))
+        rows.append(cells)
+    print_table("Table 3 analogue — RI ablation (cells: w/o RI / w/ RI)",
+                ["", *(f"g={g}" for g in GAMMAS)], rows)
+    return out

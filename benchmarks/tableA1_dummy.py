@@ -1,0 +1,60 @@
+"""Paper Table A.1 (Supp. D): AA-law exactness on the dummy dataset.
+
+ΔW = ||Ŵ_joint − Ŵ_agg,K||₁ on a random 512-dim, 10k-sample, 10-class dataset,
+K ∈ {2, 10, 20, 50, 100, 200}, with and without the RI process. The paper
+reports ~1e-13 growing to 3.67e12 without RI, and ~1e-10 flat with RI.
+This is the paper's own validation of Theorems 1–2 and we reproduce it
+exactly (it is backbone-free).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.config import FLConfig
+from repro.core import analytic as al
+from repro.data import synthetic as D
+from repro.fl.partition import make_partition
+
+from benchmarks.common import print_table
+
+KS = [2, 10, 20, 50, 100, 200]
+
+
+def deviation(train: D.Dataset, k: int, gamma: float, use_ri: bool,
+              pairwise: bool, seed: int = 0) -> float:
+    y_onehot = np.eye(train.num_classes, dtype=np.float64)[train.y]
+    w_joint = al.ridge_solve(train.x, y_onehot, 0.0)
+    parts = make_partition(train.y, k, "iid", seed=seed)
+    updates = [al.local_stage(train.x[idx].astype(np.float64), y_onehot[idx],
+                              gamma) for idx in parts]
+    w_agg = al.afl_aggregate(updates, use_ri=use_ri, pairwise=pairwise)
+    return float(np.abs(w_joint - w_agg).sum())
+
+
+def run(quick: bool = False) -> list[dict]:
+    train = D.dummy_regression(seed=0)
+    ks = [2, 20, 100] if quick else KS
+    n_runs = 2 if quick else 3
+    rows, out = [], []
+    for label, gamma, use_ri in [("w/o RI", 0.0, False), ("w/ RI", 1.0, True)]:
+        cells = [label]
+        for k in ks:
+            devs = [deviation(train, k, gamma, use_ri, pairwise=True,
+                              seed=s) for s in range(n_runs)]
+            d = float(np.mean(devs))
+            cells.append(f"{d:.2e}")
+            out.append(dict(mode=label, clients=k, deviation=d))
+        rows.append(cells)
+    print_table(
+        f"Table A.1 — ΔW joint vs aggregated (avg of {n_runs} runs; "
+        "paper Algorithm 1 pairwise AA recursion)",
+        ["", *(f"K={k}" for k in ks)], rows)
+    # The production sufficient-statistics form (used on-device) stays exact
+    # even where the γ=0 pairwise recursion breaks — report it alongside.
+    for k in (ks[-1],):
+        d = deviation(train, k, 0.0, False, pairwise=False)
+        print(f"sufficient-stats form, γ=0, K={k}: ΔW = {d:.2e} "
+              "(exact — Q_k = C_k·W_k holds for the MP solution)")
+        out.append(dict(mode="suff-stats g=0", clients=k, deviation=d))
+    return out

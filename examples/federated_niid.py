@@ -1,0 +1,59 @@
+"""Federated non-IID sweep with a real (reduced) transformer backbone.
+
+End-to-end AFL over one of the assigned architectures as the frozen
+feature extractor: tokens → backbone forward → pooled embeddings → per-client
+analytic local stages → single-round aggregation — then the same data run
+through the gradient-FL baseline for contrast, across heterogeneity levels.
+
+  PYTHONPATH=src python examples/federated_niid.py [--arch qwen3_32b]
+"""
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.config import FLConfig
+from repro.configs.registry import get_config
+from repro.data import synthetic as D
+from repro.fl import afl, baselines
+from repro.models import transformer as T
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3_32b")
+    ap.add_argument("--samples", type=int, default=3000)
+    ap.add_argument("--clients", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced(vocab_size=512)
+    params = T.init_params(jax.random.key(0), cfg)
+
+    @jax.jit
+    def embed(tokens):
+        return T.pool(T.forward(params, cfg, {"tokens": tokens}))
+
+    print(f"backbone: {cfg.name} (reduced: {cfg.num_layers}L d={cfg.d_model})")
+    raw = D.token_classification(n=args.samples, seq=32, vocab=cfg.vocab_size,
+                                 num_classes=16, skew=2.0, seed=0)
+    feats = np.concatenate(
+        [np.asarray(embed(raw.x[i:i + 256])) for i in range(0, len(raw), 256)])
+    ds = D.Dataset(feats, raw.y, raw.num_classes)
+    train, test = D.train_test_split(ds, 0.25, seed=0)
+
+    print(f"{'setting':16s} {'FedAvg(30r)':>12s} {'AFL(1r)':>12s}")
+    for label, kw in [("IID", dict(partition="iid")),
+                      ("NIID-1 a=0.1", dict(partition="niid1", alpha=0.1)),
+                      ("NIID-1 a=0.01", dict(partition="niid1", alpha=0.01)),
+                      ("NIID-2 s=2", dict(partition="niid2", shards_per_client=2))]:
+        fl = FLConfig(num_clients=args.clients, **kw)
+        fa = baselines.run_gradient_fl(train, test, fl, rounds=30)
+        res = afl.run_afl(train, test, fl)
+        print(f"{label:16s} {fa.accuracy:12.4f} {res.accuracy:12.4f}")
+    print("\nAFL column is constant by construction (AA law); FedAvg drifts "
+          "with heterogeneity.")
+
+
+if __name__ == "__main__":
+    main()

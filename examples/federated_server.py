@@ -1,0 +1,59 @@
+"""Operational AFL: stragglers, checkpoint/restart, secure aggregation.
+
+A compressed "day in the life" of the AFL server (the paper's §5 limitations,
+dissolved by the AA law — see fl/server.py):
+
+  t0  60 % of clients report (the rest are stragglers)     → exact solve #1
+  t1  server checkpoints and "restarts"                    → state restored
+  t2  stragglers report, out of order, pairwise-masked     → exact solve #2
+      (the server never sees any individual client's statistics)
+
+  PYTHONPATH=src python examples/federated_server.py
+"""
+
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro.core import analytic as al
+from repro.data import synthetic as D
+from repro.fl.afl import evaluate
+from repro.fl.partition import make_partition
+from repro.fl.server import AFLServer, make_report, masked_reports
+
+K, GAMMA = 30, 1.0
+
+ds = D.gaussian_mixture(n=8000, dim=128, num_classes=40, separation=0.45)
+train, test = D.train_test_split(ds, 0.25, seed=0)
+y_onehot = np.eye(train.num_classes)[train.y]
+parts = make_partition(train.y, K, "niid1", alpha=0.05, seed=0)
+
+# The stragglers (last 40%) mask their uploads pairwise: any single report is
+# noise to the server, the cohort sum is exact.
+reports = [make_report(i, train.x[idx], y_onehot[idx], GAMMA)
+           for i, idx in enumerate(parts)]
+on_time, stragglers = reports[: int(K * 0.6)], reports[int(K * 0.6):]
+stragglers = masked_reports(stragglers, seed=42)
+
+server = AFLServer(dim=train.x.shape[1], num_classes=train.num_classes,
+                   gamma=GAMMA)
+server.submit_many(on_time)
+acc1 = evaluate(server.solve(), test.x, test.y)
+print(f"t0: {server.num_clients}/{K} clients → acc {acc1:.4f} "
+      "(exact joint solution of the arrived subset)")
+
+ckpt.save_server("/tmp/afl_server_ckpt", server, metadata={"phase": "t0"})
+server = ckpt.load_server("/tmp/afl_server_ckpt")
+print(f"t1: checkpoint → restart (state: {server.num_clients} clients, "
+      "2 matrices, 1 id-set)")
+
+rng = np.random.default_rng(7)
+for r in rng.permutation(len(stragglers)):
+    server.submit(stragglers[r])
+acc2 = evaluate(server.solve(), test.x, test.y)
+
+w_joint = al.ridge_solve(train.x, y_onehot, 0.0)
+dev = np.abs(server.solve() - w_joint).max()
+print(f"t2: all {server.num_clients}/{K} in (masked, shuffled) → acc "
+      f"{acc2:.4f}; max |ΔW| vs centralized = {dev:.2e}")
+assert dev < 1e-8
+print("single-round, straggler-tolerant, secure — and still exact.")

@@ -1,0 +1,94 @@
+"""End-to-end driver: pre-train a ~100M-param LM for a few hundred steps,
+then AFL-probe it — the paper's full "pre-trained backbone + analytic
+downstream" pipeline in one script.
+
+Stage 1 pre-trains a ~100M dense decoder (a scaled-down minicpm family
+member, WSD schedule) with the generic gradient train step on synthetic
+token streams. Stage 2 freezes it and runs AFL over 50 non-IID clients,
+verifying the federated probe equals the centralized probe.
+
+  PYTHONPATH=src python examples/train_100m.py [--steps 200]
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.config import FLConfig, ModelConfig
+from repro.data import synthetic as D
+from repro.fl import afl
+from repro.launch import steps as ST
+from repro.launch.inputs import sample_batch
+from repro.models import transformer as T
+from repro.optim import wsd_schedule
+
+# ~100M params: 12L, d=768, 12H, ffn 2048, vocab 32k (embed ≈ 2×24.6M).
+CFG_100M = ModelConfig(
+    name="dense-100m", arch_type="dense", num_layers=12, d_model=768,
+    num_heads=12, num_kv_heads=4, d_ff=2048, vocab_size=32_000,
+    num_classes=16, source="scaled minicpm family [arXiv:2404.06395]")
+
+
+def count_params(params) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = CFG_100M
+    params = T.init_params(jax.random.key(0), cfg)
+    print(f"model: {cfg.name}, {count_params(params)/1e6:.1f}M params")
+
+    # ---- stage 1: LM pre-training (gradient, WSD schedule) ----
+    step = jax.jit(ST.make_full_train_step(cfg))
+    sched = wsd_schedule(0.1, warmup=max(args.steps // 10, 5), total=args.steps)
+    t0, losses = time.time(), []
+    for i in range(args.steps):
+        batch = {"tokens": D.lm_stream(args.batch, args.seq, cfg.vocab_size,
+                                       seed=i)}
+        params, loss = step(params, batch, sched(i))
+        losses.append(float(loss))
+        if i % max(args.steps // 10, 1) == 0:
+            print(f"  step {i:4d} loss {losses[-1]:.4f} lr {float(sched(i)):.2e}")
+    head_m = float(np.mean(losses[:5]))
+    tail_m = float(np.mean(losses[-5:]))
+    print(f"pre-training: loss {head_m:.3f} → {tail_m:.3f} "
+          f"(smoothed; {time.time()-t0:.0f}s)")
+    assert tail_m < head_m, "LM loss should decrease"
+
+    # ---- stage 2: freeze + AFL downstream probe ----
+    # Note: with a synthetic 32k-vocab task the absolute probe accuracy is
+    # modest — the claims checked are (i) the federated probe is *identical*
+    # to the centralized probe and (ii) it beats chance. The paper's absolute
+    # numbers need ImageNet-pretrained backbones (see DESIGN.md §2).
+    raw = D.token_classification(n=2500, seq=64, vocab=cfg.vocab_size,
+                                 num_classes=16, skew=5.0, seed=1)
+
+    @jax.jit
+    def embed(tokens):
+        return T.pool(T.forward(params, cfg, {"tokens": tokens}))
+
+    feats = np.concatenate(
+        [np.asarray(embed(raw.x[i:i + 128])) for i in range(0, len(raw), 128)])
+    ds = D.Dataset(feats, raw.y, raw.num_classes)
+    train, test = D.train_test_split(ds, 0.25, seed=0)
+    fl = FLConfig(num_clients=50, partition="niid1", alpha=0.05)
+    res = afl.run_afl(train, test, fl)
+    _, acc_joint = afl.joint_ridge(train, test, gamma=0.0)
+    chance = 1.0 / raw.num_classes
+    print(f"AFL probe: {res.accuracy:.4f} (centralized: {acc_joint:.4f}, "
+          f"chance: {chance:.4f}) — K=50, α=0.05, single round")
+    assert abs(res.accuracy - acc_joint) < 1e-9, "AA-law equivalence violated"
+    assert res.accuracy > chance, "probe should beat chance"
+
+
+if __name__ == "__main__":
+    main()

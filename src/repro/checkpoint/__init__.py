@@ -1,0 +1,97 @@
+"""Checkpointing: params / analytic state / FL-server state, sharding-aware.
+
+Layout (a directory per checkpoint):
+    <dir>/manifest.json     pytree structure + leaf metadata + user metadata
+    <dir>/arrays.npz        leaf arrays keyed by flattened path
+
+Works on any pytree of jax or numpy arrays. For sharded arrays the save path
+pulls addressable shards and reassembles the global array on host (fine for
+the head/statistics scale this framework checkpoints — the frozen backbone is
+reproducible from its seed and is usually *not* checkpointed, which is itself
+an AFL property: the only trained state is (C_agg, Q_agg, W)).
+
+``save_server`` / ``load_server`` round-trip an :class:`repro.fl.server.
+AFLServer`, enabling the straggler workflow: checkpoint mid-aggregation,
+restart, late clients keep submitting.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "save_server", "load_server"]
+
+_SEP = "/"
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
+        out[key or "_root"] = np.asarray(leaf)
+    return out
+
+
+def save(path, tree: Any, metadata: Optional[dict] = None) -> None:
+    """Write a pytree checkpoint (atomic-ish: npz then manifest last)."""
+    path = pathlib.Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+    arrays = _flatten(tree)
+    np.savez(path / "arrays.npz", **arrays)
+    treedef = jax.tree_util.tree_structure(tree)
+    manifest = {
+        "treedef": str(treedef),
+        "keys": sorted(arrays),
+        "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                   for k, v in arrays.items()},
+        "metadata": metadata or {},
+    }
+    (path / "manifest.json").write_text(json.dumps(manifest, indent=1))
+
+
+def restore(path, like: Any = None) -> Any:
+    """Read a checkpoint. With ``like`` (a pytree of the same structure —
+    arrays or ShapeDtypeStructs), returns that structure filled with the
+    stored arrays, validating shapes; without it, returns {key: array}."""
+    path = pathlib.Path(path)
+    manifest = json.loads((path / "manifest.json").read_text())
+    with np.load(path / "arrays.npz") as z:
+        arrays = {k: z[k] for k in z.files}
+    if sorted(arrays) != manifest["keys"]:
+        raise ValueError("checkpoint corrupt: manifest/npz key mismatch")
+    if like is None:
+        return arrays
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for pth, leaf in flat:
+        key = _SEP.join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in pth)
+        key = key or "_root"
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch at {key!r}: ckpt {arr.shape} vs {leaf.shape}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_server(path, server, metadata: Optional[dict] = None) -> None:
+    meta = dict(metadata or {})
+    meta["kind"] = "afl_server"
+    save(path, server.state(), metadata=meta)
+
+
+def load_server(path):
+    from repro.fl.server import AFLServer
+
+    state = restore(path)
+    return AFLServer.from_state(state)

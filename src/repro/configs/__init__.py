@@ -1,0 +1,1 @@
+from repro.configs.registry import get_config, list_archs, canonical  # noqa: F401

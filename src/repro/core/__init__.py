@@ -1,0 +1,24 @@
+"""AFL core: analytic (closed-form) federated learning.
+
+Host path (float64, paper-literal): :mod:`repro.core.analytic`
+Device path (f32, jit/shard_map):   :mod:`repro.core.streaming`,
+                                    :mod:`repro.core.distributed`
+"""
+
+from repro.core.analytic import (  # noqa: F401
+    ClientUpdate,
+    aa_merge,
+    afl_aggregate,
+    aggregate_pairwise,
+    aggregate_sufficient_stats,
+    local_stage,
+    ridge_solve,
+    ri_restore,
+)
+from repro.core.streaming import (  # noqa: F401
+    AnalyticState,
+    init_state,
+    merge_states,
+    solve,
+    update_state,
+)

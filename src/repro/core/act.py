@@ -1,0 +1,82 @@
+"""Activation-sharding policy: logical constraints the model code can emit.
+
+The model definitions stay mesh-agnostic; they call ``constrain(x, dims)``
+with *logical* dim labels ("batch", "model", None). When a policy is active
+(the launchers install one around trace time), the label resolves to mesh
+axes with a divisibility guard and a ``with_sharding_constraint`` is applied;
+with no policy (CPU smoke tests, examples) it is the identity.
+
+This is what keeps GSPMD from drifting into batch-replicated layouts inside
+the layer scan when a head count (e.g. minicpm's 36) does not divide the
+tensor-parallel axis.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_POLICY: contextvars.ContextVar[Optional[dict]] = contextvars.ContextVar(
+    "activation_policy", default=None)
+
+
+@contextlib.contextmanager
+def activation_policy(mesh: Mesh, batch_axes: Sequence[str],
+                      model_axes: Sequence[str], *,
+                      flash_surrogate: bool = False):
+    token = _POLICY.set({
+        "mesh": mesh,
+        "batch": tuple(batch_axes),
+        "model": tuple(model_axes),
+        "flash_surrogate": flash_surrogate,
+    })
+    try:
+        yield
+    finally:
+        _POLICY.reset(token)
+
+
+def active() -> bool:
+    return _POLICY.get() is not None
+
+
+def flash_surrogate_active() -> bool:
+    """True when the dry-run stands in the Pallas flash-attention kernel.
+
+    The surrogate (see layers.sdpa) reads q/k/v once and writes the output —
+    exactly the HBM boundary traffic of the fused kernel — so the compiled
+    HLO's memory analysis models the kernel-integrated step; the kernel's MXU
+    FLOPs are added analytically by the dry-run (launch/dryrun.py).
+    """
+    pol = _POLICY.get()
+    return bool(pol and pol.get("flash_surrogate"))
+
+
+def constrain(x: jax.Array, dims: Sequence[Optional[str]]) -> jax.Array:
+    """dims: one logical label per array dim — "batch" | "model" | None."""
+    pol = _POLICY.get()
+    if pol is None:
+        return x
+    mesh: Mesh = pol["mesh"]
+    entries = []
+    for label, size in zip(dims, x.shape):
+        axes = pol.get(label) if label else ()
+        total = math.prod(mesh.shape[a] for a in axes) if axes else 1
+        entries.append(tuple(axes) if total > 1 and size % total == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))
+
+
+def constrain_bsd(x: jax.Array) -> jax.Array:
+    """(B, S, D) activations: batch over the federation axes."""
+    return constrain(x, ("batch", None, None))
+
+
+def constrain_heads(x: jax.Array) -> jax.Array:
+    """(B, H, S, hd): batch + heads over 'model' when the count divides."""
+    return constrain(x, ("batch", "model", None, None))

@@ -1,0 +1,89 @@
+"""Device-side streaming Gram statistics (jit-able, f32, TPU path).
+
+The AFL local stage never needs to materialize the full ``(N, d)`` embedding
+matrix: ``C = XᵀX`` and ``Q = XᵀY`` are additive over batches, so a client (or
+a TPU data shard standing in for a client cohort) folds mini-batches into an
+``AnalyticState`` accumulator. This is the in-graph half of the analytic
+module; the float64 host half (literal AA law / RI) lives in
+``repro.core.analytic``.
+
+The Gram update itself is the AFL compute hot spot beyond the backbone — it is
+backed by the Pallas kernel in ``repro.kernels.gram`` (``use_kernel=True``)
+with ``repro.kernels.ref`` as oracle.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AnalyticState", "init_state", "update_state", "merge_states", "solve"]
+
+
+class AnalyticState(NamedTuple):
+    """Sufficient statistics of a (partial) analytic regression.
+
+    gram:  ``Σ XᵀX``  (d, d), f32
+    moment: ``Σ XᵀY`` (d, C), f32
+    count: number of samples folded in (scalar f32; used for diagnostics and
+      per-client sample-count bookkeeping, not needed by the solve itself).
+    """
+
+    gram: jax.Array
+    moment: jax.Array
+    count: jax.Array
+
+
+def init_state(dim: int, num_classes: int, dtype=jnp.float32) -> AnalyticState:
+    return AnalyticState(
+        gram=jnp.zeros((dim, dim), dtype),
+        moment=jnp.zeros((dim, num_classes), dtype),
+        count=jnp.zeros((), dtype),
+    )
+
+
+def update_state(
+    state: AnalyticState,
+    embeddings: jax.Array,
+    targets: jax.Array,
+    *,
+    use_kernel: bool = False,
+) -> AnalyticState:
+    """Fold a batch of (embeddings, one-hot targets) into the statistics.
+
+    embeddings: (N, d) — any leading dims are flattened.
+    targets: (N, C) one-hot (or soft) labels.
+    """
+    x = embeddings.reshape(-1, embeddings.shape[-1]).astype(jnp.float32)
+    y = targets.reshape(-1, targets.shape[-1]).astype(jnp.float32)
+    if use_kernel:
+        from repro.kernels import ops as _kops
+
+        gram_upd, moment_upd = _kops.gram_update(x, y)
+    else:
+        gram_upd = x.T @ x
+        moment_upd = x.T @ y
+    return AnalyticState(
+        gram=state.gram + gram_upd,
+        moment=state.moment + moment_upd,
+        count=state.count + x.shape[0],
+    )
+
+
+def merge_states(a: AnalyticState, b: AnalyticState) -> AnalyticState:
+    """AA law in sufficient-statistics form: statistics simply add."""
+    return AnalyticState(a.gram + b.gram, a.moment + b.moment, a.count + b.count)
+
+
+def solve(state: AnalyticState, gamma: float | jax.Array = 0.0) -> jax.Array:
+    """Ridge solve ``(C + γI)^{-1} Q`` in-graph (f32 Cholesky).
+
+    For γ=0 on rank-deficient C this is the caller's responsibility (use the
+    host f64 path with pinv fallback); in-graph we always add γI.
+    """
+    d = state.gram.shape[0]
+    a = state.gram + gamma * jnp.eye(d, dtype=state.gram.dtype)
+    cf = jax.scipy.linalg.cho_factor(a)
+    return jax.scipy.linalg.cho_solve(cf, state.moment)

@@ -1,0 +1,98 @@
+"""End-to-end AFL driver (Algorithm 1) over a client partition.
+
+Two feature paths:
+  * feature-space datasets (x already embeddings): clients run local_stage
+    directly — this is the configuration of every paper table.
+  * token datasets + a frozen backbone: clients first embed their shard with
+    the shared pre-trained backbone (repro.models), then run local_stage.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.config import FLConfig
+from repro.core import analytic as al
+from repro.data.synthetic import Dataset
+from repro.fl.partition import make_partition
+
+
+@dataclasses.dataclass
+class AFLResult:
+    weight: np.ndarray
+    accuracy: float
+    train_seconds: float
+    num_clients: int
+    client_sizes: list
+
+
+def embed_with_backbone(backbone_fn: Callable, x: np.ndarray,
+                        batch: int = 256) -> np.ndarray:
+    """Run the frozen backbone over token inputs in mini-batches → (N, d)."""
+    outs = []
+    for i in range(0, len(x), batch):
+        outs.append(np.asarray(backbone_fn(x[i : i + batch])))
+    return np.concatenate(outs, 0)
+
+
+def evaluate(weight: np.ndarray, x: np.ndarray, y: np.ndarray) -> float:
+    pred = np.argmax(x @ weight, axis=-1)
+    return float(np.mean(pred == y))
+
+
+def run_afl(
+    train: Dataset,
+    test: Dataset,
+    fl: FLConfig,
+    *,
+    backbone_fn: Optional[Callable] = None,
+    feature_map: Optional[Callable] = None,
+    pairwise: bool = False,
+) -> AFLResult:
+    """Full AFL: partition → local stages (one epoch each) → single-round
+    aggregation (+ RI restore) → evaluate.
+
+    ``feature_map``: optional shared non-linear projection φ applied to the
+    (backbone) features before the analytic head (paper §5 / core.features) —
+    the regression stays linear in φ-space, so every AFL invariance holds.
+    """
+    t0 = time.perf_counter()
+    x_tr, x_te = train.x, test.x
+    if backbone_fn is not None:
+        x_tr = embed_with_backbone(backbone_fn, x_tr)
+        x_te = embed_with_backbone(backbone_fn, x_te)
+    if feature_map is not None:
+        x_tr = np.asarray(feature_map(x_tr))
+        x_te = np.asarray(feature_map(x_te))
+    y_tr = np.eye(train.num_classes, dtype=np.float64)[train.y]
+
+    parts = make_partition(train.y, fl.num_clients, fl.partition,
+                           alpha=fl.alpha, shards_per_client=fl.shards_per_client,
+                           seed=fl.seed)
+    updates = []
+    for idx in parts:
+        # empty clients still upload (0-solution, γI Gram) — the AA law and
+        # the RI restore handle them exactly.
+        xi = x_tr[idx].astype(np.float64)
+        yi = y_tr[idx]
+        updates.append(al.local_stage(xi, yi, fl.gamma))
+    weight = al.afl_aggregate(updates, use_ri=fl.use_ri, pairwise=pairwise)
+    dt = time.perf_counter() - t0
+    acc = evaluate(weight, x_te.astype(np.float64), test.y)
+    return AFLResult(weight, acc, dt, fl.num_clients, [len(p) for p in parts])
+
+
+def joint_ridge(train: Dataset, test: Dataset, gamma: float = 0.0,
+                backbone_fn: Optional[Callable] = None):
+    """Centralized joint-training reference (the equivalence target)."""
+    x_tr, x_te = train.x, test.x
+    if backbone_fn is not None:
+        x_tr = embed_with_backbone(backbone_fn, x_tr)
+        x_te = embed_with_backbone(backbone_fn, x_te)
+    y = np.eye(train.num_classes, dtype=np.float64)[train.y]
+    w = al.ridge_solve(x_tr.astype(np.float64), y, gamma)
+    return w, evaluate(w, x_te.astype(np.float64), test.y)

@@ -1,0 +1,27 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+On CPU (this container) the kernels execute via the Pallas interpreter;
+on TPU the same calls compile through Mosaic. ``repro.kernels.ref`` holds the
+pure-jnp oracles used by the tests and by the models' default (portable) path.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import gram as _gram
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+def gram_update(x: jax.Array, y: jax.Array, **kw) -> tuple[jax.Array, jax.Array]:
+    """Fused (XᵀX, XᵀY). Interpreted off-TPU, Mosaic-compiled on TPU."""
+    kw.setdefault("interpret", not _ON_TPU)
+    return _gram.gram_update(x, y, **kw)
+
+
+def flash_attention(q, k, v, **kw) -> jax.Array:
+    """Causal/GQA/sliding-window flash attention."""
+    kw.setdefault("interpret", not _ON_TPU)
+    return _fa.flash_attention(q, k, v, **kw)

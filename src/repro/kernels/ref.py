@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gram_ref(x: jax.Array, y: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Oracle for kernels.gram.gram_update: (XᵀX, XᵀY) in f32."""
+    xf = x.astype(jnp.float32)
+    yf = y.astype(jnp.float32)
+    return xf.T @ xf, xf.T @ yf
+
+
+def mha_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Oracle for kernels.flash_attention.flash_attention.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D) with Hq % Hkv == 0 (GQA).
+    ``q_offset``: absolute position of q[0] (decode: Skv - Sq).
+    ``window``: sliding-window size — query at absolute position t attends to
+    keys in [t - window + 1, t] (None = unbounded).
+    Computation in f32 throughout.
+    """
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qf = qf.reshape(b, hkv, group, sq, d)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf)
+    q_pos = jnp.arange(sq)[:, None] + q_offset
+    k_pos = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((sq, k.shape[2]), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # Fully-masked rows (can happen with pathological windows) → zeros.
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, vf)
+    return out.reshape(b, hq, sq, d).astype(q.dtype)

@@ -1,0 +1,349 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh).
+
+This is the no-hardware proof that the distribution config is coherent: for
+each combination we build abstract inputs (ShapeDtypeStruct — no allocation),
+jit the step with explicit in/out shardings, ``.lower().compile()`` on the
+production mesh, and record ``memory_analysis()`` / ``cost_analysis()`` plus
+the collective bytes parsed from the partitioned HLO. ``benchmarks/roofline``
+turns the emitted JSON into the §Roofline table.
+
+The two lines above MUST stay first: jax locks the device count on first
+backend init, and the production meshes need 512 host placeholder devices.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun \
+      --arch all --shape all --mesh both --out results/dryrun [--variant v]
+
+Steps lowered per shape kind (see launch/steps.py):
+  train_4k               analytic_train_step  (forward + Gram update; the
+                         paper's gradient-free local stage — no backward)
+  prefill_32k            prefill_step
+  decode_32k, long_500k  serve_step (1 new token against a full-length cache)
+
+Variants (--variant, default "baseline"):
+  baseline    paper-faithful mapping (full-length masked cache for decode)
+  ring        §Perf: ring-buffer KV cache capped at the attention window for
+              windowed long-context decode (memory-term hillclimb)
+  gradfl      lowers the gradient-FL baseline local step instead of the
+              analytic step for train shapes (the paper's comparison arm)
+"""
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+from typing import Any, Optional
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import INPUT_SHAPES, InputShape, ModelConfig
+from repro.core import act
+from repro.configs.registry import get_config, list_archs
+from repro.core import streaming
+from repro.launch import hlo_analysis as HLO
+from repro.launch import mesh as M
+from repro.launch import sharding as SH
+from repro.launch import steps as ST
+from repro.launch.inputs import input_specs
+from repro.models import transformer as T
+
+
+# long_500k policy per DESIGN.md §Arch-applicability: native sub-quadratic
+# archs run as-is; dense/moe/vlm run an explicit sliding-window variant;
+# seamless (enc-dec) is the one documented skip.
+LONG_WINDOW = 4096
+LONG_NATIVE = {"zamba2_7b", "xlstm_350m"}
+LONG_SKIP = {"seamless_m4t_medium"}
+
+
+def resolve_config(arch: str, shape: InputShape, variant: str) -> Optional[ModelConfig]:
+    cfg = get_config(arch)
+    cfg = dataclasses.replace(cfg, dtype="bfloat16")  # v5e target dtype
+    if "pad" in variant:
+        # §Perf head-padding: round head counts up to the TP width so the
+        # (B,S,H,hd) reshape lands on shard boundaries and GSPMD stops
+        # re-gathering q/k/v every layer. Exact for frozen backbones when
+        # the padded heads' wo rows are zero (they are never trained).
+        tp = 16
+        pad = lambda h: -(-h // tp) * tp if h % tp else h
+        cfg = dataclasses.replace(
+            cfg, num_heads=pad(cfg.num_heads),
+            num_kv_heads=pad(cfg.num_kv_heads),
+            head_dim=cfg.resolved_head_dim)
+    if shape.name == "long_500k":
+        if arch in LONG_SKIP:
+            return None
+        if arch not in LONG_NATIVE:
+            # sliding-window variant: every layer windowed (gemma3's global
+            # layers included — recorded as a variant, not the 128k-native cfg)
+            cfg = dataclasses.replace(cfg, window=LONG_WINDOW, global_every=0)
+    return cfg
+
+
+# ------------------------------------------------------------------ lowering
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: T.init_params(jax.random.key(0), cfg))
+
+
+def sharded_bytes(shapes_tree, shardings_tree) -> int:
+    """Static per-device residency of a (ShapeDtypeStruct, NamedSharding) tree."""
+    import math
+    total = 0
+    for leaf, sh in zip(jax.tree.leaves(shapes_tree),
+                        jax.tree.leaves(shardings_tree,
+                                        is_leaf=lambda x: hasattr(x, "shard_shape"))):
+        total += math.prod(sh.shard_shape(leaf.shape)) * leaf.dtype.itemsize
+    return total
+
+
+def _with_policy(step, mesh, variant: str = "baseline"):
+    """Install the activation-sharding policy for the trace of ``step``."""
+
+    @functools.wraps(step)
+    def wrapped(*args):
+        with act.activation_policy(
+                mesh, M.batch_axes(mesh), M.model_axes(mesh),
+                flash_surrogate=variant.startswith("flash")):
+            return step(*args)
+
+    return wrapped
+
+
+def attention_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    """Analytic MXU FLOPs (global) of every attention instance — the cost the
+    Pallas flash kernel performs when the ``flash`` variant stands it in.
+
+    4·B·H·Sq·Skv_eff·hd per instance (QKᵀ + PV, 2 FLOPs/MAC each); causal
+    self-attention halves Skv_eff; sliding windows cap it at the window.
+    """
+    import numpy as np
+
+    b, S = shape.global_batch, shape.seq_len
+    hd, h = cfg.resolved_head_dim, cfg.num_heads
+    decode = shape.kind == "decode"
+    sq = 1 if decode else S
+
+    def inst(skv, *, causal=True, window=0) -> float:
+        eff = float(skv)
+        if causal and not decode and sq == skv:
+            eff = eff / 2.0
+        if window and window < eff:
+            eff = float(window)
+        return 4.0 * b * h * sq * eff * hd
+
+    total = 0.0
+    if cfg.arch_type in ("dense", "moe"):
+        windows = np.asarray(T.layer_meta(cfg, cfg.num_layers)[0])
+        for w in windows:
+            total += inst(S, window=int(w))
+    elif cfg.arch_type == "hybrid":
+        n_groups = cfg.num_layers // cfg.shared_attn_every
+        for _ in range(n_groups):
+            total += inst(S, window=cfg.window)
+    elif cfg.arch_type == "encdec":
+        enc_len = cfg.encoder_seq if decode else min(cfg.encoder_seq, S)
+        total += cfg.num_layers * inst(S)                       # dec self
+        total += cfg.num_layers * inst(enc_len, causal=False)   # cross
+        if not decode:  # encoder runs in train/prefill only
+            total += cfg.encoder_layers * (
+                4.0 * b * h * enc_len * enc_len * hd)
+    # xlstm: no attention
+    return total
+
+
+def build_lowerable(cfg: ModelConfig, shape: InputShape, mesh, variant: str):
+    """Returns (jitted_fn, abstract_args) ready for .lower(*args)."""
+    p_shape = abstract_params(cfg)
+    p_sh = SH.param_shardings(p_shape, mesh)
+    specs = input_specs(cfg, shape, dtype=jnp.bfloat16)
+    b_sh = SH.batch_shardings(cfg, specs, mesh)
+    repl = SH.replicated(mesh)
+
+    if shape.kind == "train":
+        if variant == "gradfl":
+            step = _with_policy(ST.make_fedavg_train_step(cfg), mesh, variant)
+            head = jax.ShapeDtypeStruct((cfg.d_model, cfg.num_classes), jnp.float32)
+            fn = jax.jit(step, in_shardings=(p_sh, repl, b_sh),
+                         out_shardings=(repl, repl))
+            static = {"params": sharded_bytes(p_shape, p_sh),
+                      "batch": sharded_bytes(specs, b_sh)}
+            return fn, (p_shape, head, specs), static
+        step = _with_policy(ST.make_analytic_train_step(cfg), mesh, variant)
+        st_shape = jax.eval_shape(
+            lambda: streaming.init_state(cfg.d_model, cfg.num_classes))
+        st_sh = SH.state_shardings(mesh)
+        fn = jax.jit(step, in_shardings=(p_sh, st_sh, b_sh), out_shardings=st_sh,
+                     donate_argnums=(1,))
+        static = {"params": sharded_bytes(p_shape, p_sh),
+                  "batch": sharded_bytes(specs, b_sh)}
+        return fn, (p_shape, st_shape, specs), static
+
+    if shape.kind == "prefill":
+        step = _with_policy(ST.make_prefill_step(cfg, shape.seq_len), mesh, variant)
+        logits_sh = SH.batch_shardings(
+            cfg, {"logits": jax.ShapeDtypeStruct(
+                (shape.global_batch, cfg.vocab_size), jnp.bfloat16)}, mesh)["logits"]
+        c_shape = jax.eval_shape(
+            lambda: T.init_cache(cfg, shape.global_batch, shape.seq_len))
+        c_sh = SH.cache_shardings(cfg, c_shape, shape, mesh)
+        fn = jax.jit(step, in_shardings=(p_sh, b_sh),
+                     out_shardings=(logits_sh, c_sh))
+        static = {"params": sharded_bytes(p_shape, p_sh),
+                  "cache": sharded_bytes(c_shape, c_sh),
+                  "batch": sharded_bytes(specs, b_sh)}
+        return fn, (p_shape, specs), static
+
+    # decode: one token against a seq_len-long cache
+    cache_len = shape.seq_len
+    if "ring" in variant and cfg.window:
+        cache_len = min(cache_len, cfg.window)
+    step = _with_policy(ST.make_serve_step(cfg), mesh, variant)
+    c_shape = jax.eval_shape(
+        lambda: T.init_cache(cfg, shape.global_batch, cache_len))
+    c_sh = SH.cache_shardings(cfg, c_shape, shape, mesh)
+    tok_sh = SH.batch_shardings(cfg, specs, mesh)
+    logits_sh = SH.batch_shardings(
+        cfg, {"logits": jax.ShapeDtypeStruct(
+            (shape.global_batch, cfg.vocab_size), jnp.bfloat16)}, mesh)["logits"]
+    fn = jax.jit(step, in_shardings=(p_sh, c_sh, tok_sh["token"], repl),
+                 out_shardings=(logits_sh, c_sh), donate_argnums=(1,))
+    tok = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    static = {"params": sharded_bytes(p_shape, p_sh),
+              "cache": sharded_bytes(c_shape, c_sh)}
+    return fn, (p_shape, c_shape, tok, pos), static
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, variant: str) -> dict:
+    shape = INPUT_SHAPES[shape_name]
+    mesh_name = "multi" if multi_pod else "single"
+    rec: dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "variant": variant, "ok": False,
+    }
+    cfg = resolve_config(arch, shape, variant)
+    if cfg is None:
+        rec["skipped"] = "long_500k inapplicable (see DESIGN.md §Arch-applicability)"
+        return rec
+    mesh = M.make_production_mesh(multi_pod=multi_pod)
+    chips = M.num_chips(mesh)
+    try:
+        fn, args, static = build_lowerable(cfg, shape, mesh, variant)
+        t0 = time.time()
+        lowered = fn.lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+    except Exception as e:  # a failure here is a sharding bug — surface it
+        rec["error"] = f"{type(e).__name__}: {e}"
+        return rec
+
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    # Loop-aware analysis: XLA's own cost_analysis counts scan bodies once
+    # (64-layer stacks under-report ~64×); hlo_analysis re-walks the HLO with
+    # known_trip_count multipliers. The xla_cost_* fields keep the raw
+    # single-iteration numbers for reference.
+    cap = 2 if cfg.dtype == "bfloat16" else 0
+    cost = HLO.analyze(hlo, collective_width_cap=cap)
+    attn_flops_global = 0.0
+    if variant.startswith("flash"):
+        attn_flops_global = attention_flops(cfg, shape)
+        cost.flops += attn_flops_global / chips
+    coll = dict(cost.collective_bytes)
+    coll["count"] = cost.collective_count
+    coll["total"] = cost.collective_total
+    flops_dev = cost.flops
+    bytes_dev = cost.bytes_accessed
+    rec.update(
+        ok=True,
+        chips=chips,
+        lower_s=round(t1 - t0, 2),
+        compile_s=round(t2 - t1, 2),
+        flops_per_device=flops_dev,
+        bytes_per_device=bytes_dev,
+        attn_flops_global=attn_flops_global,
+        xla_cost_flops_once=float(ca.get("flops", 0.0)),
+        xla_cost_bytes_once=float(ca.get("bytes accessed", 0.0)),
+        unknown_trip_whiles=cost.unknown_trip_whiles,
+        flops_global=flops_dev * chips,
+        bytes_global=bytes_dev * chips,
+        collectives=coll,
+        memory=dict(
+            argument_bytes_per_device=ma.argument_size_in_bytes,
+            output_bytes_per_device=ma.output_size_in_bytes,
+            temp_bytes_per_device=ma.temp_size_in_bytes,
+            alias_bytes_per_device=ma.alias_size_in_bytes,
+            peak_bytes_per_device=(
+                ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes - ma.alias_size_in_bytes),
+            # Static residency under the declared shardings. The CPU
+            # stand-in backend legalizes bf16 dot operands by hoisting
+            # whole-buffer f32 converts out of loops, inflating
+            # temp_bytes ~2-3x vs the TPU target; this is the honest
+            # params+cache footprint (see EXPERIMENTS.md §Dry-run).
+            static_bytes_per_device={k: int(v) for k, v in static.items()},
+        ),
+        roofline=M.Roofline(
+            flops=flops_dev * chips,
+            hbm_bytes=bytes_dev * chips,
+            collective_bytes=coll["total"] * chips,
+            chips=chips,
+        ).as_dict(),
+    )
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all",
+                    choices=["all", *INPUT_SHAPES.keys()])
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    n_fail = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for multi in meshes:
+                tag = f"{arch}__{shape_name}__{'multi' if multi else 'single'}"
+                if args.variant != "baseline":
+                    tag += f"__{args.variant}"
+                rec = run_one(arch, shape_name, multi, args.variant)
+                (outdir / f"{tag}.json").write_text(json.dumps(rec, indent=1))
+                if rec.get("skipped"):
+                    print(f"[skip] {tag}: {rec['skipped']}", flush=True)
+                elif rec["ok"]:
+                    r = rec["roofline"]
+                    print(
+                        f"[ ok ] {tag}: compile={rec['compile_s']}s "
+                        f"peak/dev={rec['memory']['peak_bytes_per_device']/2**30:.2f}GiB "
+                        f"compute={r['compute_s']*1e3:.2f}ms "
+                        f"memory={r['memory_s']*1e3:.2f}ms "
+                        f"coll={r['collective_s']*1e3:.2f}ms → {r['dominant']}",
+                        flush=True)
+                else:
+                    n_fail += 1
+                    print(f"[FAIL] {tag}: {rec.get('error')}", flush=True)
+    if n_fail:
+        raise SystemExit(f"{n_fail} combination(s) failed")
+
+
+if __name__ == "__main__":
+    main()

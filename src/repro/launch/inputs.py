@@ -1,0 +1,87 @@
+"""Input specs (ShapeDtypeStruct stand-ins) and concrete sample batches.
+
+``input_specs(cfg, shape, kind)`` returns abstract inputs for .lower() —
+weak-type-correct, shardable, no device allocation. ``sample_batch`` builds
+the small concrete analogue for smoke tests / examples.
+
+Modality stubs (the one sanctioned carve-out): VLM archs get pre-computed
+patch embeddings (anyres tiling → cfg.prefix_tokens patches); audio enc-dec
+archs get pre-computed frame embeddings for the encoder. Both are float
+features of width d_model — the frontends themselves are out of scope.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import InputShape, ModelConfig
+
+
+def _token_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Text-token count so that prefix + tokens == seq_len total positions."""
+    if cfg.prefix_tokens:
+        return max(1, seq_len - cfg.prefix_tokens)
+    return seq_len
+
+
+def train_specs(cfg: ModelConfig, shape: InputShape, dtype=jnp.float32) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, _token_len(cfg, s)), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b,), jnp.int32),
+    }
+    if cfg.prefix_tokens:
+        specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.prefix_tokens, cfg.d_model), dtype)
+    if cfg.encoder_layers:
+        specs["enc_feats"] = jax.ShapeDtypeStruct(
+            (b, min(cfg.encoder_seq, s), cfg.d_model), dtype)
+    return specs
+
+
+def prefill_specs(cfg: ModelConfig, shape: InputShape, dtype=jnp.float32):
+    specs = train_specs(cfg, shape, dtype)
+    del specs["labels"]
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape):
+    b = shape.global_batch
+    return {
+        "token": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, dtype=jnp.float32):
+    if shape.kind == "train":
+        return train_specs(cfg, shape, dtype)
+    if shape.kind == "prefill":
+        return prefill_specs(cfg, shape, dtype)
+    return decode_specs(cfg, shape)
+
+
+def sample_batch(cfg: ModelConfig, batch: int, seq: int, seed: int = 0,
+                 with_labels: bool = True) -> Dict[str, Any]:
+    """Concrete random batch matching train_specs (small sizes, CPU)."""
+    rng = np.random.default_rng(seed)
+    out: Dict[str, Any] = {
+        "tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (batch, _token_len(cfg, seq))), jnp.int32)
+    }
+    if with_labels:
+        out["labels"] = jnp.asarray(
+            rng.integers(0, cfg.num_classes, (batch,)), jnp.int32)
+    if cfg.prefix_tokens:
+        out["prefix_embeds"] = jnp.asarray(
+            rng.standard_normal((batch, cfg.prefix_tokens, cfg.d_model)) * 0.1,
+            jnp.float32)
+    if cfg.encoder_layers:
+        out["enc_feats"] = jnp.asarray(
+            rng.standard_normal((batch, min(cfg.encoder_seq, seq), cfg.d_model)) * 0.1,
+            jnp.float32)
+    return out

@@ -1,0 +1,182 @@
+"""Logical→mesh sharding rules (MaxText-style FSDP + tensor parallelism).
+
+Parameter rules are keyed by leaf *name* and describe the trailing dims of the
+leaf; any extra leading dims (layer stacks, MoE groups) are replicated (None).
+Every assignment is divisibility-guarded: an axis that does not divide the dim
+is dropped rather than producing an invalid sharding, so the same rules serve
+all ten architectures (36-head minicpm and 8-expert grok included).
+
+Logical axes:
+  fsdp  = ('pod', 'data')  — weight d_model dim, batch dim
+  tp    = ('model',)       — heads / ff / vocab dim
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import InputShape, ModelConfig
+from repro.core.streaming import AnalyticState
+from repro.launch.mesh import batch_axes, model_axes
+
+# name → spec template for the *trailing* dims ("fsdp" / "tp" / None).
+# 2-entry templates apply to matrices, 1-entry to vectors.
+_COL = ("fsdp", "tp")      # d_model → features   (column parallel)
+_ROW = ("tp", "fsdp")      # features → d_model   (row parallel)
+PARAM_RULES: dict[str, tuple] = {
+    # attention / mlp (layers.py)
+    "wq": _COL, "wk": _COL, "wv": _COL, "w_up": _COL, "w_gate": _COL,
+    "wo": _ROW, "w_down": _ROW,
+    # embeddings / heads (transformer.py)
+    "embed": ("tp", "fsdp"),           # vocab over tp, d_model over fsdp
+    "lm_head": _COL,                   # (d_model, vocab)
+    "mm_proj": _COL, "enc_proj": _COL,
+    # MoE (moe.py) — (E, d_in, d_out) leaves: E replicated (left-pad), the
+    # matrices tensor-parallel. router (d_model, E): E is tiny → fsdp only.
+    "router": ("fsdp", None),
+    # Mamba2 (ssm.py)
+    "in_proj": _COL, "out_proj": _ROW,
+    "conv_w": (None, None),            # (d_conv, conv_dim) — small, replicate
+    # xLSTM (xlstm.py)
+    "up": _COL, "qkv": _COL, "if_proj": _COL, "wx": _COL, "down": _ROW,
+    "r": (None, None, None, None),     # per-head recurrent kernels, replicate
+}
+
+
+def _axes_for(label, mesh: Mesh):
+    if label == "fsdp":
+        return batch_axes(mesh)
+    if label == "tp":
+        return model_axes(mesh)
+    return ()
+
+
+def _guard(dim: int, axes: Sequence[str], mesh: Mesh) -> Optional[tuple]:
+    """Return the axis tuple if it divides ``dim``, else None (replicate)."""
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    if total > 1 and dim % total == 0:
+        return tuple(axes)
+    return None
+
+
+def _leaf_spec(name: str, shape: tuple, mesh: Mesh) -> P:
+    rule = PARAM_RULES.get(name)
+    if rule is None or len(shape) < len(rule):
+        return P()
+    pad = len(shape) - len(rule)
+    entries: list = [None] * pad
+    for dim, label in zip(shape[pad:], rule):
+        axes = _axes_for(label, mesh)
+        entries.append(_guard(dim, axes, mesh))
+    return P(*entries)
+
+
+def param_specs(params_shape: Any, mesh: Mesh) -> Any:
+    """PartitionSpec tree matching a param (ShapeDtypeStruct) tree."""
+
+    def spec(path, leaf):
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = entry.key
+                break
+        return _leaf_spec(name or "", leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec, params_shape)
+
+
+def param_shardings(params_shape: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), param_specs(params_shape, mesh))
+
+
+# ------------------------------------------------------------------- batches
+def batch_specs(cfg: ModelConfig, specs: dict, mesh: Mesh) -> dict:
+    """Shard every batch input along its leading (batch) dim."""
+    baxes = batch_axes(mesh)
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return P()
+        ax = _guard(leaf.shape[0], baxes, mesh)
+        return P(ax, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree.map(one, specs)
+
+
+def batch_shardings(cfg: ModelConfig, specs: dict, mesh: Mesh) -> dict:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), batch_specs(cfg, specs, mesh))
+
+
+# ----------------------------------------------------------- analytic state
+def state_specs(mesh: Mesh) -> AnalyticState:
+    """AFL sufficient statistics are replicated: the batch-sharded Gram
+    contraction reduces over the federation axes, and GSPMD realises that
+    reduction as the paper's one aggregation all-reduce."""
+    return AnalyticState(gram=P(), moment=P(), count=P())
+
+
+def state_shardings(mesh: Mesh) -> AnalyticState:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs(mesh))
+
+
+# -------------------------------------------------------------------- caches
+def cache_specs(cfg: ModelConfig, cache_shape: Any, shape: InputShape,
+                mesh: Mesh) -> Any:
+    """Decode-cache sharding.
+
+    Per leaf: the dim equal to the global batch shards over the federation
+    axes; the *last* dim (head_dim for KV caches) shards over 'model' — the
+    per-token dynamic-update-slice then stays shard-local, whereas sharding
+    the sequence dim makes GSPMD rewrite the whole cache behind a masked
+    select every step (§Perf decode iteration 2, refuted layout). Only when
+    the batch cannot use the federation axes (long_500k B=1) does the
+    sequence dim shard — over those unused axes — so a 500k-token cache still
+    spreads across the pod.
+    """
+    baxes = batch_axes(mesh)
+    maxes = model_axes(mesh)
+    b = shape.global_batch
+
+    def one(leaf):
+        nd = leaf.ndim
+        entries: list = [None] * nd
+        used_batch = False
+        for i, d in enumerate(leaf.shape):
+            if d == b and _guard(d, baxes, mesh):
+                entries[i] = _guard(d, baxes, mesh)
+                used_batch = True
+                break
+        # head/feature dim: the last dim, over 'model'
+        if nd >= 2 and entries[-1] is None:
+            entries[-1] = _guard(leaf.shape[-1], maxes, mesh)
+        # sequence dim: only the federation axes the batch left unused
+        if not used_batch:
+            cand = [
+                (d, i) for i, d in enumerate(leaf.shape)
+                if entries[i] is None and d >= 1024
+            ]
+            if cand:
+                d, i = max(cand)
+                entries[i] = _guard(d, baxes, mesh)
+        return P(*entries)
+
+    return jax.tree.map(one, cache_shape)
+
+
+def cache_shardings(cfg: ModelConfig, cache_shape: Any, shape: InputShape,
+                    mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        cache_specs(cfg, cache_shape, shape, mesh))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

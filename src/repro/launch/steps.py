@@ -1,0 +1,111 @@
+"""Step functions: analytic train (paper), gradient baseline, prefill, decode.
+
+These are the units the launchers jit/lower. The *analytic* train step is the
+paper's local stage: a frozen-backbone forward + streaming Gram update —
+gradient-free (AFL's point). The gradient step exists for the FedAvg/FedProx
+baselines the paper compares against (head-only SGD, backbone frozen, paper
+Supp. E) and optionally full-backbone training for the generic train driver.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.core.streaming import AnalyticState, update_state
+from repro.models import transformer as T
+
+
+def make_analytic_train_step(cfg: ModelConfig, *, use_kernel: bool = False) -> Callable:
+    """(params, AnalyticState, batch) → AnalyticState.
+
+    batch: tokens (B, S) int32, labels (B,) int32 in [0, num_classes);
+    plus prefix_embeds / enc_feats for VLM / audio archs.
+    """
+
+    def step(params, state: AnalyticState, batch) -> AnalyticState:
+        hidden = T.forward(params, cfg, batch)
+        emb = T.pool(hidden)                                    # (B, D)
+        y = jax.nn.one_hot(batch["labels"], cfg.num_classes, dtype=jnp.float32)
+        return update_state(state, emb, y, use_kernel=use_kernel)
+
+    return step
+
+
+def head_loss(head: jax.Array, emb: jax.Array, labels: jax.Array) -> jax.Array:
+    logits = emb.astype(jnp.float32) @ head
+    logp = jax.nn.log_softmax(logits, -1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def head_sgd_step(head: jax.Array, emb: jax.Array, labels: jax.Array,
+                  lr: float = 0.05) -> jax.Array:
+    """One SGD step on the linear head over precomputed embeddings."""
+    grad = jax.grad(head_loss)(head, emb, labels)
+    return head - lr * grad
+
+
+def make_fedavg_train_step(cfg: ModelConfig, lr: float = 0.05) -> Callable:
+    """Gradient-FL baseline local step: SGD on the classification head with a
+    frozen backbone (paper Supp. E: batch 64, SGD lr 0.05).
+
+    (params, head (D,C), batch) → (head', loss)
+    """
+
+    def step(params, head, batch):
+        hidden = T.forward(params, cfg, batch)
+        emb = T.pool(hidden)
+        loss, grad = jax.value_and_grad(head_loss)(head, emb, batch["labels"])
+        return head - lr * grad, loss
+
+    return step
+
+
+def make_full_train_step(cfg: ModelConfig, lr: float = 1e-3) -> Callable:
+    """Generic end-to-end LM training step (next-token CE over the backbone) —
+    the non-FL training driver (examples/train_100m.py). SGD w/ provided lr
+    (schedules composed by the caller via repro.optim)."""
+
+    def loss_fn(params, batch):
+        hidden = T.forward(params, cfg, batch)
+        logits = T.lm_logits(params, cfg, hidden)
+        tokens = batch["tokens"]
+        if cfg.prefix_tokens:
+            logits = logits[:, cfg.prefix_tokens :]
+        tgt = tokens[:, 1:]
+        logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), -1)
+        nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)
+        return jnp.mean(nll)
+
+    def step(params, batch, lr_t=lr):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params = jax.tree.map(lambda p, g: p - lr_t * g.astype(p.dtype), params, grads)
+        return params, loss
+
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig, max_seq: int) -> Callable:
+    """(params, batch) → (last-token vocab logits (B, V), cache)."""
+
+    def step(params, batch):
+        hidden, cache = T.prefill(params, cfg, batch, max_seq)
+        logits = T.lm_logits(params, cfg, hidden[:, -1:])
+        return logits[:, 0], cache
+
+    return step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    """One decode step: (params, cache, token (B,), pos) → (logits (B,V), cache)."""
+
+    def step(params, cache, token, pos):
+        hidden, cache = T.decode_step(params, cfg, token, cache, pos)
+        logits = T.lm_logits(params, cfg, hidden)
+        return logits[:, 0], cache
+
+    return step

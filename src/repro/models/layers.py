@@ -1,0 +1,242 @@
+"""Shared neural building blocks (pure-functional, params = pytrees).
+
+Conventions:
+  * params are nested dicts of jnp arrays; init_* builds them, apply fns use them.
+  * activations (B, S, D); attention heads (B, H, S, hd).
+  * per-layer *dynamic* metadata (window size, rope theta) is passed as traced
+    scalars so heterogeneous stacks (gemma3 local/global) scan with a uniform
+    body — `window <= 0` means "no window" and is encoded as a huge window.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import act
+
+BIG_WINDOW = 1 << 30
+
+
+# ---------------------------------------------------------------- init utils
+def dense_init(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def init_norm(d, dtype, with_bias=False):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if with_bias:
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def norm_apply(p, x, eps, kind="rms"):
+    xf = x.astype(jnp.float32)
+    if kind == "layer":
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    else:
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------- rope
+def apply_rope(x, positions, theta):
+    """x: (B, H, S, D); positions: (B, S) or (S,); theta: python or traced scalar."""
+    d = x.shape[-1]
+    half = d // 2
+    freq_exp = jnp.arange(half, dtype=jnp.float32) / half
+    inv_freq = jnp.asarray(theta, jnp.float32) ** -freq_exp          # (half,)
+    pos = jnp.asarray(positions, jnp.float32)
+    if pos.ndim == 1:
+        pos = pos[None]
+    angles = pos[:, None, :, None] * inv_freq[None, None, None, :]  # (B,1,S,half)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ attention
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    qk_norm: bool = False
+
+
+def init_attention(key, dims: AttnDims, dtype):
+    ks = jax.random.split(key, 4)
+    h, hk, hd, d = dims.num_heads, dims.num_kv_heads, dims.head_dim, dims.d_model
+    p = {
+        "wq": dense_init(ks[0], d, h * hd, dtype),
+        "wk": dense_init(ks[1], d, hk * hd, dtype),
+        "wv": dense_init(ks[2], d, hk * hd, dtype),
+        "wo": dense_init(ks[3], h * hd, d, dtype, scale=1.0 / math.sqrt(h * hd)),
+    }
+    if dims.qk_norm:
+        p["q_norm"] = init_norm(hd, dtype)
+        p["k_norm"] = init_norm(hd, dtype)
+    return p
+
+
+def _heads(x, n, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, hd).transpose(0, 2, 1, 3)
+
+
+def qkv_project(p, dims: AttnDims, x, positions, theta, eps=1e-6):
+    """Project + (optional) qk-norm + rope. Returns q (B,H,S,hd), k/v (B,Hk,S,hd)."""
+    q = _heads(x @ p["wq"], dims.num_heads, dims.head_dim)
+    k = _heads(x @ p["wk"], dims.num_kv_heads, dims.head_dim)
+    v = _heads(x @ p["wv"], dims.num_kv_heads, dims.head_dim)
+    if dims.qk_norm:
+        q = norm_apply(p["q_norm"], q, eps)
+        k = norm_apply(p["k_norm"], k, eps)
+    if theta is not None:
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+    return q, k, v
+
+
+def sdpa(
+    q, k, v, *, causal=True, window=None, q_offset=0, softcap=0.0,
+    q_chunk=256, kv_chunk=1024,
+):
+    """Scaled dot-product attention, pure-jnp flash-style (online softmax,
+    lax.scan over q- and kv-chunks) so prefill-length logits never materialize.
+
+    This is the portable mirror of kernels/flash_attention.py (used on CPU and
+    for dry-run lowering; the Pallas kernel replaces it on TPU).
+    window: None | python int | traced scalar (<=0 or >=S means no window).
+    """
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    scale = d ** -0.5
+    if act.flash_surrogate_active():
+        # Dry-run stand-in for the Pallas flash kernel (kernels/
+        # flash_attention.py, validated in interpret mode): reads q, k, v
+        # once and writes (b,hq,sq,d) — the kernel's exact HBM boundary.
+        # Internal logits/softmax stay in VMEM on TPU, so they must NOT
+        # appear as HBM traffic here; MXU FLOPs are added analytically by
+        # launch/dryrun.attention_flops.
+        kv = (jnp.mean(k, axis=2, keepdims=True)
+              + jnp.mean(v, axis=2, keepdims=True)) * scale   # (b,hkv,1,d)
+        kv = jnp.broadcast_to(kv[:, :, None], (b, hkv, group, 1, d))
+        return q + kv.reshape(b, hq, 1, d).astype(q.dtype)
+    # q/k/v stay in their storage dtype (bf16 cache on TPU); contractions
+    # request an f32 accumulator instead (MXU-native), and the softmax scale
+    # is applied to the f32 logits. Mixed-dtype einsums would promote the
+    # cache operand to f32 — and XLA then hoists a full-precision copy of
+    # the whole stacked KV cache out of the layer scan: 2× cache memory.
+    qg = q.reshape(b, hkv, group, sq, d)
+    win = jnp.asarray(BIG_WINDOW if window is None else window, jnp.int32)
+    win = jnp.where(win <= 0, BIG_WINDOW, win)
+
+    if sq * skv <= 1 << 22:  # small: direct path
+        logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k,
+                            preferred_element_type=jnp.float32) * scale
+        if softcap:
+            logits = jnp.tanh(logits / softcap) * softcap
+        qpos = jnp.arange(sq)[:, None] + q_offset
+        kpos = jnp.arange(skv)[None, :]
+        mask = kpos > qpos - win
+        if causal:
+            mask &= kpos <= qpos
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, -1)
+        out = jnp.einsum("bhgqk,bhkd->bhgqd", probs.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+        return out.reshape(b, hq, sq, d).astype(q.dtype)
+
+    # chunked two-level online-softmax path
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, skv)
+    sq_p, skv_p = -(-sq // qc) * qc, -(-skv // kc) * kc
+    qg = jnp.pad(qg, ((0, 0), (0, 0), (0, 0), (0, sq_p - sq), (0, 0)))
+    kfp = jnp.pad(k, ((0, 0), (0, 0), (0, skv_p - skv), (0, 0)))
+    vfp = jnp.pad(v, ((0, 0), (0, 0), (0, skv_p - skv), (0, 0)))
+    nq, nk = sq_p // qc, skv_p // kc
+    qs = jnp.moveaxis(qg.reshape(b, hkv, group, nq, qc, d), 3, 0)   # (nq,b,hkv,g,qc,d)
+    ks = jnp.moveaxis(kfp.reshape(b, hkv, nk, kc, d), 2, 0)         # (nk,b,hkv,kc,d)
+    vs = jnp.moveaxis(vfp.reshape(b, hkv, nk, kc, d), 2, 0)
+
+    def q_step(_, qi_blk):
+        qi, q_blk = qi_blk
+
+        def kv_step(carry, kv):
+            m, l, acc, ki = carry
+            k_blk, v_blk = kv
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", q_blk, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            if softcap:
+                s = jnp.tanh(s / softcap) * softcap
+            qpos = qi * qc + jnp.arange(qc)[:, None] + q_offset
+            kpos = ki * kc + jnp.arange(kc)[None, :]
+            mask = (kpos > qpos - win) & (kpos < skv)
+            if causal:
+                mask &= kpos <= qpos
+            s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            alpha = jnp.exp(m - m_new)
+            l_new = alpha * l + p.sum(-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p.astype(v_blk.dtype), v_blk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new, ki + 1), None
+
+        init = (
+            jnp.full((b, hkv, group, qc), -1e30, jnp.float32),
+            jnp.zeros((b, hkv, group, qc), jnp.float32),
+            jnp.zeros((b, hkv, group, qc, d), jnp.float32),
+            jnp.zeros((), jnp.int32),
+        )
+        (m, l, acc, _), _ = jax.lax.scan(kv_step, init, (ks, vs))
+        l = jnp.where(l > 0, l, 1.0)
+        return None, acc / l[..., None]
+
+    _, out = jax.lax.scan(q_step, None, (jnp.arange(nq), qs))
+    out = jnp.moveaxis(out, 0, 3).reshape(b, hkv, group, sq_p, d)[:, :, :, :sq]
+    return out.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def attn_out(p, ctx):
+    """ctx: (B, H, S, hd) → (B, S, D)."""
+    b, h, s, hd = ctx.shape
+    return ctx.transpose(0, 2, 1, 3).reshape(b, s, h * hd) @ p["wo"]
+
+
+# ----------------------------------------------------------------------- MLP
+def init_mlp(key, d_model, d_ff, activation, dtype):
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(ks[0], d_model, d_ff, dtype),
+        "w_down": dense_init(ks[1], d_ff, d_model, dtype),
+    }
+    if activation == "swiglu":
+        p["w_gate"] = dense_init(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+def mlp_apply(p, x, activation):
+    if activation == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    elif activation == "relu2":
+        h = jnp.square(jax.nn.relu(x @ p["w_up"]))
+    else:
+        h = jax.nn.gelu(x @ p["w_up"])
+    return h @ p["w_down"]

@@ -1,0 +1,69 @@
+"""Optimizers & schedules for the gradient baselines and the LM driver.
+
+AFL itself is gradient-free (that is the paper's point) — this package exists
+for the comparison arms: head-SGD federated baselines (paper Supp. E) and the
+generic backbone pre-training driver (WSD schedule, per minicpm
+[arXiv:2404.06395], the schedule its config cites).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["sgd", "momentum_sgd", "wsd_schedule", "cosine_schedule"]
+
+
+def sgd(lr: float) -> Callable:
+    """params, grads → params. Plain SGD (paper Supp. E uses lr=0.05)."""
+
+    def update(params, grads, lr_t=lr):
+        return jax.tree.map(lambda p, g: p - lr_t * g.astype(p.dtype),
+                            params, grads)
+
+    return update
+
+
+def momentum_sgd(lr: float, beta: float = 0.9):
+    """Returns (init_fn, update_fn) with velocity state."""
+
+    def init(params):
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(params, grads, vel, lr_t=lr):
+        vel = jax.tree.map(lambda v, g: beta * v + g.astype(v.dtype), vel, grads)
+        params = jax.tree.map(lambda p, v: p - lr_t * v.astype(p.dtype),
+                              params, vel)
+        return params, vel
+
+    return init, update
+
+
+def wsd_schedule(base_lr: float, warmup: int, total: int,
+                 decay_frac: float = 0.1, floor: float = 0.0) -> Callable:
+    """Warmup-Stable-Decay (minicpm): linear warmup → flat → 1-sqrt decay."""
+    decay_steps = max(int(total * decay_frac), 1)
+    stable_end = total - decay_steps
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        frac = jnp.clip((step - stable_end) / decay_steps, 0.0, 1.0)
+        decay = base_lr * (1.0 - (1.0 - floor) * jnp.sqrt(frac))
+        return jnp.where(step < stable_end, warm, decay)
+
+    return lr
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    floor_frac: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+
+    return lr

@@ -1,0 +1,128 @@
+"""Per-architecture smoke tests (deliverable f).
+
+For each of the 10 assigned architectures: instantiate the REDUCED variant
+(2-ish layers, d_model ≤ 512, ≤ 4 experts), run one forward pass AND one
+analytic train step on CPU, assert output shapes and absence of NaNs. Also
+covers one decode step per arch (serve path) and the gradient-baseline step.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.core.streaming import init_state
+from repro.launch import steps as St
+from repro.launch.inputs import sample_batch
+from repro.models import transformer as T
+
+ARCHS = list_archs()
+
+
+@pytest.fixture(scope="module")
+def setups():
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = get_config(arch).reduced()
+            params = T.init_params(jax.random.key(0), cfg)
+            cache[arch] = (cfg, params)
+        return cache[arch]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch, setups):
+    cfg, params = setups(arch)
+    b, s = 2, 32
+    batch = sample_batch(cfg, b, s)
+    hidden = T.forward(params, cfg, batch)
+    total = s if not cfg.prefix_tokens else (s - cfg.prefix_tokens) + cfg.prefix_tokens
+    assert hidden.shape == (b, total, cfg.d_model)
+    assert bool(jnp.isfinite(hidden).all()), "NaN/Inf in forward output"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_analytic_train_step(arch, setups):
+    """One paper-style local training step: forward + Gram update."""
+    cfg, params = setups(arch)
+    b, s = 2, 32
+    batch = sample_batch(cfg, b, s)
+    step = jax.jit(St.make_analytic_train_step(cfg))
+    state = step(params, init_state(cfg.d_model, cfg.num_classes), batch)
+    assert state.gram.shape == (cfg.d_model, cfg.d_model)
+    assert state.moment.shape == (cfg.d_model, cfg.num_classes)
+    assert int(state.count) == b
+    for leaf in (state.gram, state.moment):
+        assert bool(jnp.isfinite(leaf).all())
+    # Gram must be symmetric PSD by construction
+    assert bool(jnp.allclose(state.gram, state.gram.T, atol=1e-4))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_serve_decode_step(arch, setups):
+    cfg, params = setups(arch)
+    b, s, max_seq = 2, 16, 24
+    batch = sample_batch(cfg, b, s, with_labels=False)
+    logits, cache = St.make_prefill_step(cfg, max_seq)(params, batch)
+    assert logits.shape == (b, cfg.vocab_size)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    pos = jnp.asarray(s if not cfg.prefix_tokens else s, jnp.int32)
+    logits2, cache = St.make_serve_step(cfg)(params, cache, tok, pos)
+    assert logits2.shape == (b, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits2).all())
+
+
+@pytest.mark.parametrize("arch", ["minicpm_2b", "grok1_314b", "zamba2_7b", "xlstm_350m"])
+def test_gradient_baseline_step(arch, setups):
+    """FedAvg-style head-SGD step decreases loss on repeated application."""
+    cfg, params = setups(arch)
+    batch = sample_batch(cfg, 4, 16)
+    step = jax.jit(St.make_fedavg_train_step(cfg, lr=0.5))
+    head = jnp.zeros((cfg.d_model, cfg.num_classes), jnp.float32)
+    losses = []
+    for _ in range(5):
+        head, loss = step(params, head, batch)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+
+
+def test_full_configs_match_assignment():
+    """The FULL configs carry the exact published numbers."""
+    expect = {
+        "minicpm_2b": (40, 2304, 36, 36, 5760, 122753),
+        "qwen3_32b": (64, 5120, 64, 8, 25600, 151936),
+        "gemma3_12b": (48, 3840, 16, 8, 15360, 262144),
+        "grok1_314b": (64, 6144, 48, 8, 32768, 131072),
+        "zamba2_7b": (81, 3584, 32, 32, 14336, 32000),
+        "llava_next_mistral_7b": (32, 4096, 32, 8, 14336, 32000),
+        "granite_moe_3b_a800m": (32, 1536, 24, 8, 512, 49155),
+        "seamless_m4t_medium": (12, 1024, 16, 16, 4096, 256206),
+        "nemotron4_15b": (32, 6144, 48, 8, 24576, 256000),
+        "xlstm_350m": (24, 1024, 4, 4, 0, 50304),
+    }
+    for arch, (nl, d, h, kv, ff, v) in expect.items():
+        cfg = get_config(arch)
+        got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+               cfg.d_ff, cfg.vocab_size)
+        assert got == (nl, d, h, kv, ff, v), (arch, got)
+    grok = get_config("grok1_314b")
+    assert grok.moe.num_experts == 8 and grok.moe.top_k == 2
+    granite = get_config("granite_moe_3b_a800m")
+    assert granite.moe.num_experts == 40 and granite.moe.top_k == 8
+    assert get_config("zamba2_7b").ssm.d_state == 64
+    assert get_config("qwen3_32b").qk_norm
+    assert get_config("gemma3_12b").global_every == 6  # 5 local : 1 global
+    assert get_config("nemotron4_15b").activation == "relu2"
+    assert get_config("seamless_m4t_medium").encoder_layers == 12
+
+
+def test_reduced_configs_within_limits():
+    for arch in ARCHS:
+        cfg = get_config(arch).reduced()
+        assert cfg.num_layers <= 4
+        assert cfg.d_model <= 512
+        if cfg.moe:
+            assert cfg.moe.num_experts <= 4

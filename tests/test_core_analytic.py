@@ -1,0 +1,183 @@
+"""Unit + property tests for the AFL analytic core (Theorems 1 & 2).
+
+These validate the paper's central mathematical claims:
+  * AA law exactness (Thm 1): pairwise aggregation == joint training.
+  * Invariance to data partitioning: any split, any order, any K.
+  * RI process (Thm 2): regularization is a removable intermediary.
+  * Table A.1 analogue: deviation ~1e-10 with RI even when N_k < d.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import analytic as al
+
+
+def make_data(rng, n, d, c):
+    x = rng.standard_normal((n, d))
+    labels = rng.integers(0, c, size=n)
+    y = np.eye(c)[labels]
+    return x, y
+
+
+def split(rng, x, y, k, uneven=True):
+    """Random (optionally uneven) partition of rows into k non-empty chunks."""
+    n = x.shape[0]
+    perm = rng.permutation(n)
+    if uneven:
+        cuts = np.sort(rng.choice(np.arange(1, n), size=k - 1, replace=False))
+    else:
+        cuts = np.arange(1, k) * (n // k)
+    parts = np.split(perm, cuts)
+    return [(x[p], y[p]) for p in parts]
+
+
+class TestRidgeSolve:
+    def test_matches_normal_equations(self):
+        rng = np.random.default_rng(0)
+        x, y = make_data(rng, 200, 32, 5)
+        w = al.ridge_solve(x, y, 0.5)
+        np.testing.assert_allclose(
+            (x.T @ x + 0.5 * np.eye(32)) @ w, x.T @ y, atol=1e-9
+        )
+
+    def test_gamma_zero_full_rank_is_pinv(self):
+        rng = np.random.default_rng(1)
+        x, y = make_data(rng, 100, 16, 4)
+        np.testing.assert_allclose(
+            al.ridge_solve(x, y, 0.0), np.linalg.pinv(x) @ y, atol=1e-8
+        )
+
+    def test_rank_deficient_gamma_zero_falls_back(self):
+        rng = np.random.default_rng(2)
+        x, y = make_data(rng, 8, 16, 4)  # N < d
+        w = al.ridge_solve(x, y, 0.0)
+        assert np.all(np.isfinite(w))
+
+
+class TestAALaw:
+    """Theorem 1: exact two-client aggregation."""
+
+    def test_two_client_exact(self):
+        rng = np.random.default_rng(3)
+        x, y = make_data(rng, 300, 24, 6)
+        w_joint = al.ridge_solve(x, y, 0.0)
+        (xu, yu), (xv, yv) = split(rng, x, y, 2)
+        w_u, w_v = al.ridge_solve(xu, yu, 0.0), al.ridge_solve(xv, yv, 0.0)
+        cu, cv = xu.T @ xu, xv.T @ xv
+        w_merged, c_merged = al.aa_merge(w_u, cu, w_v, cv)
+        np.testing.assert_allclose(w_merged, w_joint, atol=1e-8)
+        np.testing.assert_allclose(c_merged, x.T @ x, atol=1e-8)
+
+    def test_pairwise_equals_sufficient_stats(self):
+        rng = np.random.default_rng(4)
+        x, y = make_data(rng, 400, 16, 4)
+        updates = [al.local_stage(xi, yi, 1.0) for xi, yi in split(rng, x, y, 5)]
+        w_pair, c_pair = al.aggregate_pairwise(updates)
+        w_stat, c_stat = al.aggregate_sufficient_stats(updates)
+        np.testing.assert_allclose(w_pair, w_stat, atol=1e-8)
+        np.testing.assert_allclose(c_pair, c_stat, atol=1e-8)
+
+
+class TestRIProcess:
+    """Theorem 2: the regularization intermediary is exactly removable."""
+
+    @pytest.mark.parametrize("gamma", [0.1, 1.0, 10.0, 100.0])
+    def test_ri_restores_joint_solution(self, gamma):
+        rng = np.random.default_rng(5)
+        x, y = make_data(rng, 500, 32, 8)
+        w_joint = al.ridge_solve(x, y, 0.0)
+        updates = [al.local_stage(xi, yi, gamma) for xi, yi in split(rng, x, y, 10)]
+        w = al.afl_aggregate(updates, use_ri=True)
+        np.testing.assert_allclose(w, w_joint, atol=1e-7)
+
+    def test_without_ri_biased(self):
+        rng = np.random.default_rng(6)
+        x, y = make_data(rng, 500, 32, 8)
+        w_joint = al.ridge_solve(x, y, 0.0)
+        updates = [al.local_stage(xi, yi, 100.0) for xi, yi in split(rng, x, y, 10)]
+        w = al.afl_aggregate(updates, use_ri=False)
+        assert np.abs(w - w_joint).max() > 1e-3  # accumulated Kγ bias
+
+    def test_theorem2_identity(self):
+        """eq (14): Ŵ^r_agg == (C^r_agg)^{-1} C_agg Ŵ_agg."""
+        rng = np.random.default_rng(7)
+        x, y = make_data(rng, 300, 16, 4)
+        gamma, k = 2.0, 4
+        updates = [al.local_stage(xi, yi, gamma) for xi, yi in split(rng, x, y, k)]
+        w_r, c_r = al.aggregate_sufficient_stats(updates)
+        c_agg = c_r - k * gamma * np.eye(16)
+        w_agg = al.ridge_solve(x, y, 0.0)
+        np.testing.assert_allclose(
+            w_r, np.linalg.solve(c_r, c_agg @ w_agg), atol=1e-8
+        )
+
+    def test_rank_deficient_clients(self):
+        """Table A.1 regime: N_k < d per client; RI keeps exactness."""
+        rng = np.random.default_rng(8)
+        d = 64
+        x, y = make_data(rng, 40 * 16, d, 10)  # 40 clients x 16 samples, 16 < 64
+        w_joint = al.ridge_solve(x, y, 0.0)
+        parts = split(rng, x, y, 40, uneven=False)
+        updates = [al.local_stage(xi, yi, 1.0) for xi, yi in parts]
+        w = al.afl_aggregate(updates, use_ri=True)
+        assert np.abs(w - w_joint).max() < 1e-7
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    k=st.integers(2, 12),
+    gamma=st.floats(0.01, 50.0),
+    d=st.integers(4, 48),
+    c=st.integers(2, 10),
+)
+def test_property_partition_invariance(seed, k, gamma, d, c):
+    """AFL invariant: ANY partition into ANY number of clients with ANY γ
+    aggregates (with RI) to the joint solution — the paper's headline claim."""
+    rng = np.random.default_rng(seed)
+    n = max(4 * d, k + 1)
+    x, y = make_data(rng, n, d, c)
+    w_joint = al.ridge_solve(x, y, 0.0)
+    updates = [al.local_stage(xi, yi, gamma) for xi, yi in split(rng, x, y, k)]
+    w = al.afl_aggregate(updates, use_ri=True)
+    scale = max(1.0, np.abs(w_joint).max())
+    assert np.abs(w - w_joint).max() / scale < 1e-6
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), k=st.integers(2, 8))
+def test_property_order_invariance(seed, k):
+    """Aggregation order never matters (paper §3.2: clients may be sampled
+    randomly)."""
+    rng = np.random.default_rng(seed)
+    x, y = make_data(rng, 200, 16, 4)
+    updates = [al.local_stage(xi, yi, 1.0) for xi, yi in split(rng, x, y, k)]
+    w_fwd, _ = al.aggregate_pairwise(updates)
+    order = rng.permutation(k)
+    w_perm, _ = al.aggregate_pairwise([updates[i] for i in order])
+    np.testing.assert_allclose(w_fwd, w_perm, atol=1e-7)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_client_number_invariance(seed):
+    """Same data split into 2 vs 7 vs 13 clients → identical aggregate."""
+    rng = np.random.default_rng(seed)
+    x, y = make_data(rng, 260, 20, 5)
+    results = []
+    for k in (2, 7, 13):
+        updates = [al.local_stage(xi, yi, 1.0) for xi, yi in split(rng, x, y, k)]
+        results.append(al.afl_aggregate(updates, use_ri=True))
+    np.testing.assert_allclose(results[0], results[1], atol=1e-7)
+    np.testing.assert_allclose(results[0], results[2], atol=1e-7)
+
+
+def test_mismatched_gamma_rejected():
+    rng = np.random.default_rng(9)
+    x, y = make_data(rng, 100, 8, 3)
+    parts = split(rng, x, y, 2)
+    ups = [al.local_stage(*parts[0], 1.0), al.local_stage(*parts[1], 2.0)]
+    with pytest.raises(ValueError):
+        al.afl_aggregate(ups)

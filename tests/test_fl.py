@@ -1,0 +1,141 @@
+"""Integration tests: partitioners, AFL end-to-end, gradient baselines."""
+
+import numpy as np
+import pytest
+
+from repro.config import FLConfig
+from repro.data import synthetic as D
+from repro.fl import afl, baselines
+from repro.fl.partition import dirichlet, iid, make_partition, sharding
+
+
+class TestPartition:
+    def setup_method(self):
+        self.labels = np.repeat(np.arange(10), 100)
+
+    def test_iid_covers_all(self):
+        parts = iid(self.labels, 7, seed=0)
+        allidx = np.sort(np.concatenate(parts))
+        np.testing.assert_array_equal(allidx, np.arange(1000))
+
+    def test_dirichlet_covers_all_and_heterogeneous(self):
+        parts = dirichlet(self.labels, 10, alpha=0.05, seed=0)
+        allidx = np.sort(np.concatenate([p for p in parts if len(p)]))
+        np.testing.assert_array_equal(allidx, np.arange(1000))
+        # extreme alpha → most clients see few classes
+        n_classes = [len(np.unique(self.labels[p])) for p in parts if len(p) > 0]
+        assert np.median(n_classes) <= 4
+
+    def test_dirichlet_alpha_controls_heterogeneity(self):
+        few = dirichlet(self.labels, 10, alpha=0.01, seed=1)
+        many = dirichlet(self.labels, 10, alpha=100.0, seed=1)
+        div = lambda parts: np.mean(
+            [len(np.unique(self.labels[p])) for p in parts if len(p) > 0])
+        assert div(few) < div(many)
+
+    def test_sharding_classes_per_client(self):
+        parts = sharding(self.labels, 50, shards_per_client=2, seed=0)
+        allidx = np.sort(np.concatenate(parts))
+        np.testing.assert_array_equal(allidx, np.arange(1000))
+        n_classes = [len(np.unique(self.labels[p])) for p in parts]
+        assert max(n_classes) <= 3  # s=2 shards → at most ~2-3 labels
+
+    def test_make_partition_dispatch(self):
+        for scheme in ("iid", "niid1", "niid2"):
+            parts = make_partition(self.labels, 5, scheme)
+            assert len(parts) == 5
+        with pytest.raises(ValueError):
+            make_partition(self.labels, 5, "nope")
+
+
+class TestAFLEndToEnd:
+    @pytest.fixture(scope="class")
+    def data(self):
+        ds = D.gaussian_mixture(n=4000, dim=64, num_classes=10, seed=0)
+        return D.train_test_split(ds, 0.25, seed=0)
+
+    def test_afl_equals_joint_any_partition(self, data):
+        train, test = data
+        w_joint, acc_joint = afl.joint_ridge(train, test, gamma=0.0)
+        for scheme, kw in [("iid", {}), ("niid1", dict(alpha=0.01)),
+                           ("niid2", dict(shards_per_client=2))]:
+            fl = FLConfig(num_clients=20, gamma=1.0, partition=scheme, **kw)
+            res = afl.run_afl(train, test, fl)
+            assert abs(res.accuracy - acc_joint) < 1e-9, scheme
+            assert np.abs(res.weight - w_joint).max() < 1e-6, scheme
+
+    def test_client_number_invariance(self, data):
+        train, test = data
+        accs = set()
+        for k in (5, 50, 200):
+            res = afl.run_afl(train, test, FLConfig(num_clients=k, partition="iid"))
+            accs.add(round(res.accuracy, 12))
+        assert len(accs) == 1  # identical — zero std, like the paper
+
+    def test_afl_beats_local_only_under_noniid(self, data):
+        train, test = data
+        fl = FLConfig(num_clients=20, partition="niid1", alpha=0.05)
+        res = afl.run_afl(train, test, fl)
+        loc_avg, loc_max = baselines.run_local_only(train, test, fl, epochs=3)
+        assert res.accuracy > loc_avg + 0.05
+
+    def test_fedavg_degrades_with_heterogeneity_afl_does_not(self):
+        # Harder task than the shared fixture: at sep=1.0/C=10 every method
+        # saturates at 1.0 and no degradation is observable. sep=0.4/C=50
+        # reproduces the paper's qualitative Table-2 pattern.
+        ds = D.gaussian_mixture(n=4000, dim=64, num_classes=50,
+                                separation=0.4, seed=0)
+        train, test = D.train_test_split(ds, 0.25, seed=0)
+        acc_fa, acc_afl = {}, {}
+        for alpha in (100.0, 0.01):
+            fl = FLConfig(num_clients=20, partition="niid1", alpha=alpha)
+            acc_fa[alpha] = baselines.run_gradient_fl(
+                train, test, fl, rounds=10).accuracy
+            acc_afl[alpha] = afl.run_afl(train, test, fl).accuracy
+        assert acc_afl[100.0] == acc_afl[0.01]           # invariance
+        assert acc_fa[100.0] - acc_fa[0.01] > 0.01       # FedAvg degrades
+        assert acc_afl[0.01] > acc_fa[0.01]              # AFL wins when non-IID
+
+    def test_rank_deficient_many_clients(self, data):
+        """K large enough that N_k < d — needs RI (paper Table 3)."""
+        train, test = data  # d=64; 3000 train / 300 clients = 10 < 64
+        fl = FLConfig(num_clients=300, gamma=1.0, partition="iid")
+        w_joint, acc_joint = afl.joint_ridge(train, test, gamma=0.0)
+        res = afl.run_afl(train, test, fl)
+        assert abs(res.accuracy - acc_joint) < 1e-9
+
+
+def test_fedprox_close_to_fedavg_smoke():
+    ds = D.gaussian_mixture(n=1200, dim=32, num_classes=5, seed=3)
+    train, test = D.train_test_split(ds, 0.25, seed=1)
+    fl = FLConfig(num_clients=10, partition="niid1", alpha=0.5)
+    fa = baselines.run_gradient_fl(train, test, fl, method="fedavg", rounds=6)
+    fp = baselines.run_gradient_fl(train, test, fl, method="fedprox", rounds=6)
+    assert abs(fa.accuracy - fp.accuracy) < 0.15
+    assert fa.accuracy > 0.3
+
+
+def test_token_dataset_with_frozen_backbone():
+    """AFL through a real (reduced) transformer backbone on token data."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.models import transformer as T
+
+    cfg = get_config("minicpm_2b").reduced(num_classes=8)
+    params = T.init_params(jax.random.key(0), cfg)
+    ds = D.token_classification(n=600, seq=16, vocab=cfg.vocab_size,
+                                num_classes=8, skew=4.0, seed=0)
+    train, test = D.train_test_split(ds, 0.25, seed=0)
+
+    @jax.jit
+    def backbone(tokens):
+        h = T.forward(params, cfg, {"tokens": jnp.asarray(tokens)})
+        return T.pool(h)
+
+    from repro.config import FLConfig
+    fl = FLConfig(num_clients=12, partition="niid2", shards_per_client=2)
+    res = afl.run_afl(train, test, fl, backbone_fn=backbone)
+    _, acc_joint = afl.joint_ridge(train, test, gamma=0.0, backbone_fn=backbone)
+    assert abs(res.accuracy - acc_joint) < 1e-9
+    assert res.accuracy > 1.5 / 8  # clearly better than chance

@@ -1,0 +1,86 @@
+"""Unit tests for the loop-aware HLO cost analyzer (launch/hlo_analysis)."""
+
+from repro.launch import hlo_analysis as HA
+
+MODULE = """\
+HloModule test
+
+%inner (p0: f32[8,16]) -> f32[8,16] {
+  %p0 = f32[8,16]{1,0} parameter(0)
+  ROOT %e = f32[8,16]{1,0} exponential(%p0)
+}
+
+%body (param: (s32[], f32[8,16], f32[16,32], f32[8,32])) -> (s32[], f32[8,16], f32[16,32], f32[8,32]) {
+  %param = (s32[], f32[8,16], f32[16,32], f32[8,32]) parameter(0)
+  %i = s32[] get-tuple-element(%param), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%param), index=1
+  %w = f32[16,32]{1,0} get-tuple-element(%param), index=2
+  %acc = f32[8,32]{1,0} get-tuple-element(%param), index=3
+  %d = f32[8,32]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,32]{1,0} all-reduce(%d), replica_groups={}, to_apply=%sum
+  %acc2 = f32[8,32]{1,0} add(%acc, %ar)
+  %copy.carry = f32[8,16]{1,0} copy(%x)
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,16], f32[16,32], f32[8,32]) tuple(%i2, %copy.carry, %w, %acc2)
+}
+
+%cond (param.1: (s32[], f32[8,16], f32[16,32], f32[8,32])) -> pred[] {
+  %param.1 = (s32[], f32[8,16], f32[16,32], f32[8,32]) parameter(0)
+  %i.1 = s32[] get-tuple-element(%param.1), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i.1, %n), direction=LT
+}
+
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (x0: f32[8,16], w0: f32[16,32]) -> f32[8,32] {
+  %x0 = f32[8,16]{1,0} parameter(0)
+  %w0 = f32[16,32]{1,0} parameter(1)
+  %zero = s32[] constant(0)
+  %acc0 = f32[8,32]{1,0} broadcast(%zero), dimensions={}
+  %init = (s32[], f32[8,16], f32[16,32], f32[8,32]) tuple(%zero, %x0, %w0, %acc0)
+  %loop = (s32[], f32[8,16], f32[16,32], f32[8,32]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+  ROOT %out = f32[8,32]{1,0} get-tuple-element(%loop), index=3
+}
+"""
+
+
+def test_type_bytes_and_cap():
+    assert HA.type_bytes("f32[8,16]{1,0}") == 8 * 16 * 4
+    assert HA.type_bytes("bf16[4,4]") == 32
+    assert HA.type_bytes("(f32[2], s32[3])") == 8 + 12
+    assert HA.type_bytes("f32[8,16]", width_cap=2) == 8 * 16 * 2
+
+
+def test_loop_multiplied_dot_flops():
+    cost = HA.analyze(MODULE)
+    # dot: 2*8*32*16 = 8192 flops, ×5 trips
+    assert cost.flops == 5 * 2 * 8 * 32 * 16
+
+
+def test_loop_multiplied_collectives_and_width_cap():
+    cost = HA.analyze(MODULE)
+    assert cost.collective_bytes["all-reduce"] == 5 * 8 * 32 * 4
+    capped = HA.analyze(MODULE, collective_width_cap=2)
+    assert capped.collective_bytes["all-reduce"] == 5 * 8 * 32 * 2
+
+
+def test_carry_copy_separated():
+    cost = HA.analyze(MODULE)
+    # copy of the loop-carried x: 2 * 8*16*4 per iteration, not HBM traffic
+    assert cost.carry_copy_bytes == 5 * 2 * 8 * 16 * 4
+
+
+def test_parse_module_structure():
+    comps = HA.parse_module(MODULE)
+    assert "__entry__" in comps and "body" in comps and "cond" in comps
+    body = comps["body"]
+    ops = [i.op for i in body.instrs]
+    assert "dot" in ops and "all-reduce" in ops
+    whiles = [i for i in comps["__entry__"].instrs if i.op == "while"]
+    assert whiles and whiles[0].trip_count() == 5

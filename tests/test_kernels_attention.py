@@ -1,0 +1,77 @@
+"""Shape/dtype/mask sweep of the flash-attention Pallas kernel vs jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+
+
+def _qkv(seed, b, hq, hkv, sq, skv, d, dtype):
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (b, hq, sq, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, hkv, skv, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, hkv, skv, d), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+def _check(q, k, v, dtype, **kw):
+    out = flash_attention(q, k, v, interpret=True, block_q=64, block_k=64, **kw)
+    want = ref.mha_ref(q, k, v, **kw)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol * 20,
+    )
+
+
+@pytest.mark.parametrize(
+    "b,hq,hkv,s,d",
+    [
+        (1, 4, 4, 128, 64),    # MHA
+        (2, 8, 2, 128, 64),    # GQA 4:1
+        (1, 4, 1, 96, 80),     # MQA, ragged seq + ragged head dim
+        (1, 2, 2, 256, 128),
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_causal_self_attention(b, hq, hkv, s, d, dtype):
+    q, k, v = _qkv(0, b, hq, hkv, s, s, d, dtype)
+    _check(q, k, v, dtype, causal=True)
+
+
+def test_non_causal():
+    q, k, v = _qkv(1, 1, 4, 4, 128, 128, 64, jnp.float32)
+    _check(q, k, v, jnp.float32, causal=False)
+
+
+@pytest.mark.parametrize("window", [32, 64, 100])
+def test_sliding_window(window):
+    q, k, v = _qkv(2, 1, 4, 2, 192, 192, 64, jnp.float32)
+    _check(q, k, v, jnp.float32, causal=True, window=window)
+
+
+def test_decode_single_query():
+    """serve_step shape: Sq=1 attending to a long cache with q_offset."""
+    skv = 256
+    q, k, v = _qkv(3, 2, 8, 2, 1, skv, 64, jnp.float32)
+    _check(q, k, v, jnp.float32, causal=True, q_offset=skv - 1)
+
+
+def test_decode_windowed():
+    skv = 300
+    q, k, v = _qkv(4, 1, 4, 4, 1, skv, 64, jnp.float32)
+    _check(q, k, v, jnp.float32, causal=True, window=128, q_offset=skv - 1)
+
+
+def test_cross_attention_rectangular():
+    """enc-dec: no causal mask, Sq != Skv."""
+    q, k, v = _qkv(5, 1, 4, 4, 64, 200, 64, jnp.float32)
+    _check(q, k, v, jnp.float32, causal=False)
+
+
+def test_scale_override():
+    q, k, v = _qkv(6, 1, 2, 2, 64, 64, 64, jnp.float32)
+    _check(q, k, v, jnp.float32, causal=True, scale=0.25)

@@ -1,0 +1,54 @@
+"""Shape/dtype sweep of the Gram Pallas kernel vs the jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.gram import gram_update
+
+
+def _data(seed, n, d, c, dtype):
+    kx, ky = jax.random.split(jax.random.key(seed))
+    x = jax.random.normal(kx, (n, d), jnp.float32).astype(dtype)
+    y = jax.nn.one_hot(jax.random.randint(ky, (n,), 0, c), c, dtype=dtype)
+    return x, y
+
+
+@pytest.mark.parametrize(
+    "n,d,c",
+    [
+        (64, 32, 10),        # tiny, everything padded
+        (512, 128, 100),     # exact block multiples
+        (1000, 200, 37),     # ragged everywhere
+        (2048, 384, 128),    # multi-tile d
+        (8, 256, 5),         # n smaller than a block
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gram_matches_ref(n, d, c, dtype):
+    x, y = _data(0, n, d, c, dtype)
+    g, q = gram_update(x, y, interpret=True)
+    g_ref, q_ref = ref.gram_ref(x, y)
+    # f32 tolerance covers reduction-order differences on long N sweeps.
+    tol = 2e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref), rtol=tol, atol=tol * 10)
+    np.testing.assert_allclose(np.asarray(q), np.asarray(q_ref), rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("block_d,block_n", [(128, 256), (256, 512)])
+def test_gram_block_shapes(block_d, block_n):
+    x, y = _data(1, 700, 300, 50, jnp.float32)
+    g, q = gram_update(x, y, block_d=block_d, block_n=block_n, interpret=True)
+    g_ref, q_ref = ref.gram_ref(x, y)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref), rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(q), np.asarray(q_ref), rtol=1e-5, atol=1e-4)
+
+
+def test_gram_symmetry_and_psd():
+    x, y = _data(2, 256, 64, 8, jnp.float32)
+    g, _ = gram_update(x, y, interpret=True)
+    g = np.asarray(g)
+    np.testing.assert_allclose(g, g.T, atol=1e-5)
+    assert np.linalg.eigvalsh(g).min() > -1e-3

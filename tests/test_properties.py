@@ -1,0 +1,114 @@
+"""Hypothesis property tests on the system's core invariants.
+
+The AA law's whole value proposition is *invariance*: to partition boundaries,
+to client order, to merge association, to the γ used locally. These hold for
+ANY data, so they are properties, not examples.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import analytic as al, streaming
+from repro.fl.partition import make_partition
+
+DIM, CLASSES = 12, 4
+
+
+def _data(seed, n):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, DIM))
+    y = np.eye(CLASSES)[rng.integers(0, CLASSES, n)]
+    return x, y
+
+
+@st.composite
+def partitions(draw):
+    n = draw(st.integers(40, 120))
+    n_cuts = draw(st.integers(1, 6))
+    cuts = sorted(draw(st.sets(st.integers(1, n - 1),
+                               min_size=n_cuts, max_size=n_cuts)))
+    return n, [0, *cuts, n]
+
+
+@settings(max_examples=25, deadline=None)
+@given(partitions(), st.integers(0, 10**6),
+       st.sampled_from([0.1, 1.0, 10.0, 100.0]))
+def test_aa_law_partition_invariance(part, seed, gamma):
+    """Any split of the rows + RI restore == the joint γ→0 ridge solution."""
+    n, bounds = part
+    x, y = _data(seed, n)
+    w_joint = al.ridge_solve(x, y, 0.0)
+    ups = [al.local_stage(x[a:b], y[a:b], gamma)
+           for a, b in zip(bounds, bounds[1:])]
+    w = al.afl_aggregate(ups, use_ri=True)
+    np.testing.assert_allclose(w, w_joint, rtol=1e-6, atol=1e-7)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10**6), st.permutations(list(range(5))))
+def test_aggregation_order_invariance(seed, order):
+    """Paper §3.2: clients may be aggregated in any order."""
+    x, y = _data(seed, 100)
+    bounds = [0, 17, 33, 58, 79, 100]
+    ups = [al.local_stage(x[a:b], y[a:b], 1.0)
+           for a, b in zip(bounds, bounds[1:])]
+    w_fwd = al.afl_aggregate(ups, use_ri=True, pairwise=True)
+    w_perm = al.afl_aggregate([ups[i] for i in order], use_ri=True,
+                              pairwise=True)
+    np.testing.assert_allclose(w_perm, w_fwd, rtol=1e-7, atol=1e-8)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10**6), st.integers(1, 5))
+def test_streaming_merge_associativity(seed, n_states):
+    """merge_states is associative/commutative ⇒ tree == sequential fold."""
+    rng = np.random.default_rng(seed)
+    states = []
+    for i in range(n_states):
+        x = jnp.asarray(rng.standard_normal((7, DIM)), jnp.float32)
+        y = jnp.asarray(np.eye(CLASSES)[rng.integers(0, CLASSES, 7)],
+                        jnp.float32)
+        states.append(streaming.update_state(
+            streaming.init_state(DIM, CLASSES), x, y))
+    seq = states[0]
+    for s in states[1:]:
+        seq = streaming.merge_states(seq, s)
+    rev = states[-1]
+    for s in states[-2::-1]:
+        rev = streaming.merge_states(rev, s)
+    np.testing.assert_allclose(np.asarray(seq.gram), np.asarray(rev.gram),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(seq.moment), np.asarray(rev.moment),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 30), st.integers(0, 10**6),
+       st.sampled_from(["iid", "niid1", "niid2"]))
+def test_partition_is_a_partition(k, seed, scheme):
+    """Every index appears exactly once, for every scheme and client count."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, 300)
+    parts = make_partition(labels, k, scheme, alpha=0.1, shards_per_client=2,
+                           seed=seed % 100)
+    allidx = np.sort(np.concatenate([p for p in parts if len(p)]))
+    np.testing.assert_array_equal(allidx, np.arange(300))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10**6))
+def test_ri_restore_inverts_regularization(seed):
+    """Thm 2 as a round trip: restore(bias(W)) == W for random PD stats."""
+    rng = np.random.default_rng(seed)
+    k, gamma = rng.integers(2, 20), float(rng.uniform(0.1, 50))
+    x, y = _data(seed + 1, 200)
+    c_agg = x.T @ x
+    q_agg = x.T @ y
+    w_true = np.linalg.solve(c_agg + 1e-9 * np.eye(DIM), q_agg)
+    c_r = c_agg + k * gamma * np.eye(DIM)
+    w_r = np.linalg.solve(c_r, q_agg)
+    w_restored = al.ri_restore(w_r, c_r, int(k), gamma)
+    np.testing.assert_allclose(w_restored, w_true, rtol=1e-5, atol=1e-6)

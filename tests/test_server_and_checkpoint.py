@@ -1,0 +1,141 @@
+"""AFLServer (incremental / stragglers / secure masking), feature maps, and
+checkpoint round-trips — the beyond-paper extensions of DESIGN.md §8."""
+
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.config import FLConfig
+from repro.core import analytic as al
+from repro.core.features import identity_map, relu_map, rff_map
+from repro.data import synthetic as D
+from repro.fl import afl
+from repro.fl.server import AFLServer, make_report, masked_reports
+
+
+def _reports(n_clients=8, n=400, d=24, c=5, gamma=1.0, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, d))
+    y = np.eye(c)[rng.integers(0, c, n)]
+    bounds = np.linspace(0, n, n_clients + 1).astype(int)
+    reps = [make_report(k, x[a:b], y[a:b], gamma)
+            for k, (a, b) in enumerate(zip(bounds, bounds[1:]))]
+    return x, y, reps
+
+
+class TestAFLServer:
+    def test_incremental_equals_joint(self):
+        x, y, reps = _reports()
+        srv = AFLServer(dim=24, num_classes=5, gamma=1.0)
+        srv.submit_many(reps)
+        w_joint = al.ridge_solve(x, y, 0.0)
+        np.testing.assert_allclose(srv.solve(), w_joint, rtol=1e-8, atol=1e-9)
+
+    def test_partial_participation_is_exact_on_subset(self):
+        """Paper §5 straggler concern: the aggregate over any subset is the
+        exact joint solution of that subset's data — no waiting required."""
+        x, y, reps = _reports(n_clients=8)
+        srv = AFLServer(dim=24, num_classes=5, gamma=1.0)
+        srv.submit_many(reps[:5])                     # 3 stragglers missing
+        n5 = 400 * 5 // 8
+        w_sub = al.ridge_solve(x[:n5], y[:n5], 0.0)
+        np.testing.assert_allclose(srv.solve(), w_sub, rtol=1e-8, atol=1e-9)
+        # stragglers arrive later, any order
+        for r in (reps[7], reps[5], reps[6]):
+            srv.submit(r)
+        w_all = al.ridge_solve(x, y, 0.0)
+        np.testing.assert_allclose(srv.solve(), w_all, rtol=1e-8, atol=1e-9)
+
+    def test_duplicate_and_gamma_mismatch_rejected(self):
+        _, _, reps = _reports()
+        srv = AFLServer(24, 5, gamma=1.0)
+        srv.submit(reps[0])
+        with pytest.raises(ValueError):
+            srv.submit(reps[0])
+        bad = make_report(99, np.zeros((4, 24)), np.zeros((4, 5)), gamma=2.0)
+        with pytest.raises(ValueError):
+            srv.submit(bad)
+
+    def test_masked_aggregation_exact_and_hiding(self):
+        x, y, reps = _reports()
+        masked = masked_reports(reps, seed=7)
+        # individual reports are perturbed beyond recognition…
+        assert np.abs(masked[0].gram - reps[0].gram).max() > 0.5
+        # …but the aggregate is bit-close to the unmasked one
+        srv = AFLServer(24, 5, gamma=1.0)
+        srv.submit_many(masked)
+        w_joint = al.ridge_solve(x, y, 0.0)
+        np.testing.assert_allclose(srv.solve(), w_joint, rtol=1e-6, atol=1e-7)
+
+
+class TestFeatureMaps:
+    @staticmethod
+    def _xor_data(n=3000, seed=0):
+        """Linearly inseparable: label = sign(x0) ⊕ sign(x1)."""
+        rng = np.random.default_rng(seed)
+        x = rng.standard_normal((n, 2)).astype(np.float32)
+        y = ((x[:, 0] > 0) ^ (x[:, 1] > 0)).astype(int)
+        return D.Dataset(x, y, 2)
+
+    def test_rff_lifts_nonlinear_data(self):
+        """Paper §5: kernel features restore accuracy where the linear head
+        fails — with every AFL invariance intact in φ-space."""
+        train, test = D.train_test_split(self._xor_data(), 0.25, seed=0)
+        fl = FLConfig(num_clients=20, partition="niid1", alpha=0.1)
+        lin = afl.run_afl(train, test, fl)
+        phi = rff_map(2, 256, lengthscale=1.0, seed=1)
+        nonlin = afl.run_afl(train, test, fl, feature_map=phi)
+        assert lin.accuracy < 0.62          # XOR is linearly hopeless
+        assert nonlin.accuracy > 0.9
+        # invariance still holds in φ-space
+        fl2 = FLConfig(num_clients=7, partition="niid2", shards_per_client=1)
+        again = afl.run_afl(train, test, fl2, feature_map=phi)
+        assert abs(again.accuracy - nonlin.accuracy) < 1e-9
+
+    def test_relu_and_identity_maps(self):
+        train, test = D.train_test_split(self._xor_data(seed=3), 0.25, seed=0)
+        fl = FLConfig(num_clients=5, partition="iid")
+        relu = afl.run_afl(train, test, fl, feature_map=relu_map(2, 256, seed=2))
+        ident = afl.run_afl(train, test, fl, feature_map=identity_map(2))
+        base = afl.run_afl(train, test, fl)
+        assert abs(ident.accuracy - base.accuracy) < 1e-12
+        assert relu.accuracy > base.accuracy
+
+
+class TestCheckpoint:
+    def test_pytree_roundtrip(self, tmp_path):
+        import jax
+        import jax.numpy as jnp
+
+        tree = {"a": jnp.arange(6.0).reshape(2, 3),
+                "b": {"c": np.ones((4,), np.int32), "d": jnp.zeros(())}}
+        ckpt.save(tmp_path / "ck", tree, metadata={"step": 7})
+        like = jax.tree.map(np.zeros_like, tree)
+        back = ckpt.restore(tmp_path / "ck", like=like)
+        for k, v in _leaves(tree).items():
+            np.testing.assert_array_equal(_leaves(back)[k], v)
+
+    def test_restore_validates_shapes(self, tmp_path):
+        tree = {"w": np.ones((3, 3))}
+        ckpt.save(tmp_path / "ck", tree)
+        with pytest.raises(ValueError):
+            ckpt.restore(tmp_path / "ck", like={"w": np.ones((2, 2))})
+
+    def test_server_roundtrip_resumes_aggregation(self, tmp_path):
+        x, y, reps = _reports()
+        srv = AFLServer(24, 5, gamma=1.0)
+        srv.submit_many(reps[:4])
+        ckpt.save_server(tmp_path / "srv", srv)
+        srv2 = ckpt.load_server(tmp_path / "srv")
+        srv2.submit_many(reps[4:])           # resume after "restart"
+        w_joint = al.ridge_solve(x, y, 0.0)
+        np.testing.assert_allclose(srv2.solve(), w_joint, rtol=1e-8, atol=1e-9)
+        with pytest.raises(ValueError):
+            srv2.submit(reps[0])             # dedup survives the round trip
+
+
+def _leaves(tree):
+    import jax
+
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return {str(p): np.asarray(v) for p, v in flat}
