@@ -1,0 +1,106 @@
+"""Engine benchmark: repeated-solve throughput with cached factorization.
+
+The serving scenario behind AFLServer's cache: clients trickle in and the
+server is polled for the current joint weight after (or between) every
+arrival. Without caching every poll pays the full d³ Cholesky; with the
+cached factorization only polls that follow a NEW submission refactor, and
+every other poll is a pair of d²·C triangular solves.
+
+Also measures the multi-γ sweep: one eigendecomposition amortized over the
+whole γ grid vs a fresh factorization per γ.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.engine import AnalyticEngine
+from repro.fl.server import AFLServer, make_report
+
+from benchmarks.common import print_table
+
+
+def _bench_polls(d, c, k, polls, repeat=3):
+    """Median wall time for ``polls`` straggler polls against a static
+    aggregate: cached (AFLServer) vs uncached (fresh engine.solve each)."""
+    rng = np.random.default_rng(0)
+    xs = rng.standard_normal((k, max(2 * d // k, 4), d))
+    ys = np.eye(c)[rng.integers(0, c, xs.shape[:2])]
+    srv = AFLServer(d, c, gamma=1.0)
+    srv.submit_many(make_report(i, xs[i], ys[i], 1.0) for i in range(k))
+    eng = srv.engine
+    stats = srv._stats
+
+    def run_cached():
+        srv._factor_cache.clear()
+        for _ in range(polls):
+            srv.solve()
+
+    def run_uncached():
+        for _ in range(polls):
+            eng.solve(stats)           # refactors every poll
+
+    t_cached = min(_time(run_cached) for _ in range(repeat))
+    t_uncached = min(_time(run_uncached) for _ in range(repeat))
+    return t_cached, t_uncached
+
+
+def _bench_multi_gamma(d, c, gammas, repeat=3):
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((4 * d, d))
+    y = np.eye(c)[rng.integers(0, c, 4 * d)]
+    eng = AnalyticEngine("numpy_f64", gamma=1.0)
+    stats = eng.client_stats(x, y)
+
+    def run_sweep():
+        eng.solve_multi_gamma(stats, gammas)
+
+    def run_loop():
+        for g in gammas:
+            eng.solve(stats, target_gamma=g)
+
+    return (min(_time(run_sweep) for _ in range(repeat)),
+            min(_time(run_loop) for _ in range(repeat)))
+
+
+def _time(fn):
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def run(quick: bool = False) -> list[dict]:
+    sizes = [(256, 50, 16, 50)] if quick else [
+        (256, 50, 16, 50), (512, 100, 32, 50), (1024, 100, 32, 20),
+    ]
+    rows, out = [], []
+    for d, c, k, polls in sizes:
+        t_c, t_u = _bench_polls(d, c, k, polls)
+        speed = t_u / max(t_c, 1e-12)
+        rows.append([f"poll d={d} C={c} K={k} x{polls}",
+                     f"{1e3 * t_c / polls:.2f}", f"{1e3 * t_u / polls:.2f}",
+                     f"{speed:.1f}x"])
+        out.append(dict(bench="cached_solve", d=d, c=c, k=k, polls=polls,
+                        cached_s=t_c, uncached_s=t_u, speedup=speed))
+    print_table(
+        "AFLServer repeated solve: cached factorization vs refactor-per-poll",
+        ["case", "cached ms/poll", "uncached ms/poll", "speedup"], rows)
+
+    gammas = list(np.logspace(-3, 2, 6 if quick else 12))
+    rows2 = []
+    for d, c in ([(256, 50)] if quick else [(256, 50), (512, 100)]):
+        t_sweep, t_loop = _bench_multi_gamma(d, c, gammas)
+        rows2.append([f"γ-sweep d={d} C={c} |γ|={len(gammas)}",
+                      f"{1e3 * t_sweep:.1f}", f"{1e3 * t_loop:.1f}",
+                      f"{t_loop / max(t_sweep, 1e-12):.1f}x"])
+        out.append(dict(bench="multi_gamma", d=d, c=c, n_gammas=len(gammas),
+                        sweep_s=t_sweep, loop_s=t_loop))
+    print_table("Multi-γ model sweep: one eigh vs per-γ factorization",
+                ["case", "sweep ms", "loop ms", "speedup"], rows2)
+    return out
+
+
+if __name__ == "__main__":
+    run()

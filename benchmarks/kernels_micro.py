@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.engine import AnalyticEngine
 from repro.kernels import ops, ref
 
 from benchmarks.common import print_table
@@ -22,17 +23,27 @@ def run(quick: bool = False) -> list[dict]:
     shapes = [(256, 128, 16), (512, 256, 100)] if quick else [
         (256, 128, 16), (512, 256, 100), (1024, 512, 128), (640, 384, 40),
     ]
+    # The gram sweep goes through the engine's kernel-backed jax backend —
+    # the exact production update path — vs the pure-jnp oracle.
+    eng_kernel = AnalyticEngine("jax", use_kernel=True)
+    eng_host = AnalyticEngine("numpy_f64")
     rows, out = [], []
     for n, d, c in shapes:
         kx, ky = jax.random.split(jax.random.fold_in(key, n))
         x = jax.random.normal(kx, (n, d), jnp.float32)
         y = jax.nn.one_hot(
             jax.random.randint(ky, (n,), 0, c), c, dtype=jnp.float32)
-        g_k, q_k = ops.gram_update(x, y, interpret=True)
+        st_k = eng_kernel.update(eng_kernel.init(d, c), x, y)
         g_r, q_r = ref.gram_ref(x, y)
-        err = max(float(jnp.abs(g_k - g_r).max()), float(jnp.abs(q_k - q_r).max()))
+        err = max(float(jnp.abs(st_k.gram - g_r).max()),
+                  float(jnp.abs(st_k.moment - q_r).max()))
+        # engine cross-backend: host f64 accumulation of the same batch
+        st_h = eng_host.update(eng_host.init(d, c), np.asarray(x), np.asarray(y))
+        err_f64 = float(np.abs(np.asarray(st_k.gram) - st_h.gram).max())
         rows.append([f"gram {n}x{d} C={c}", f"{err:.2e}"])
-        out.append(dict(kernel="gram", n=n, d=d, c=c, max_err=err))
+        rows.append([f"  engine kernel vs numpy_f64", f"{err_f64:.2e}"])
+        out.append(dict(kernel="gram", n=n, d=d, c=c, max_err=err,
+                        engine_f64_err=err_f64))
 
     attn_shapes = [(1, 4, 2, 128, 64)] if quick else [
         (1, 4, 2, 128, 64), (2, 8, 2, 256, 64), (1, 4, 4, 512, 128),

@@ -27,6 +27,7 @@ MODULES = [
     ("beyond_stragglers", "Beyond-paper — stragglers & secure aggregation"),
     ("beyond_nonlinear", "Beyond-paper — non-linear analytic heads"),
     ("kernels_micro", "Pallas kernel correctness sweep"),
+    ("engine_bench", "Engine — cached-factorization solve throughput"),
     ("roofline", "§Roofline — dry-run derived"),
 ]
 

@@ -1,0 +1,32 @@
+"""Version-drift shims for the jax APIs this repo relies on.
+
+Two renames bite across the jax versions this codebase meets:
+
+  * Pallas TPU compiler params: ``pltpu.TPUCompilerParams`` (<= 0.4.x) was
+    renamed to ``pltpu.CompilerParams`` (newer releases keep the old name as
+    a deprecated alias for a while). :func:`tpu_compiler_params` constructs
+    whichever class the installed jax provides.
+  * ``shard_map``: lives at ``jax.experimental.shard_map.shard_map`` on
+    0.4.x and is re-exported as ``jax.shard_map`` on newer releases.
+
+Everything else in the repo imports these names from here so the drift is
+handled in exactly one place.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+try:  # newer jax
+    from jax import shard_map  # type: ignore[attr-defined]
+except (ImportError, AttributeError):  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)
+
+
+def tpu_compiler_params(**kwargs):
+    """Build Pallas TPU compiler params under either jax naming scheme."""
+    return _COMPILER_PARAMS_CLS(**kwargs)

@@ -1,10 +1,15 @@
 """AFL core: analytic (closed-form) federated learning.
 
-Host path (float64, paper-literal): :mod:`repro.core.analytic`
-Device path (f32, jit/shard_map):   :mod:`repro.core.streaming`,
-                                    :mod:`repro.core.distributed`
+Engine (ONE implementation of the math): :mod:`repro.core.engine`
+Host path (float64, paper-literal API):  :mod:`repro.core.analytic`
+Device path (f32, jit/shard_map API):    :mod:`repro.core.streaming`,
+                                         :mod:`repro.core.distributed`
 """
 
+from repro.core.engine import (  # noqa: F401
+    AnalyticEngine,
+    SuffStats,
+)
 from repro.core.analytic import (  # noqa: F401
     ClientUpdate,
     aa_merge,

@@ -1,4 +1,4 @@
-"""Paper-faithful analytic learning core (host-side, float64).
+"""Paper-faithful analytic learning API (host-side, float64).
 
 Implements, term-by-term, the math of AFL:
 
@@ -7,13 +7,14 @@ Implements, term-by-term, the math of AFL:
   - eq (9)-(11): pairwise accumulated aggregation (AcAg) for K clients
   - Theorem 2 / eq (14)-(16): Regularization Intermediary (RI) restore
 
-This module is the *server-side* reference path: it operates on host numpy
-arrays in float64, exactly like the paper's released torch-f64 implementation.
-The device-side (jit/shard_map, f32) streaming path lives in
-``repro.core.streaming`` / ``repro.core.distributed``; tests assert both paths
-agree.  The pairwise recursion here is intentionally literal (matrix products
-per eq (10)) rather than algebraically simplified — it exists to *validate*
-the AA law, while production aggregation uses the sufficient-statistics form.
+This module is the *paper-literal reference API*: it mirrors the paper's
+released torch-f64 implementation symbol-for-symbol. The numerics themselves
+live in ONE place — :mod:`repro.core.engine` — and every function here is a
+thin wrapper over the engine's ``numpy_f64`` backend. The pairwise recursion
+(:func:`aa_merge` / :func:`aggregate_pairwise`) is intentionally literal
+(matrix products per eq (10)) rather than algebraically simplified — it
+exists to *validate* the AA law against the engine's sufficient-statistics
+form, which production uses.
 """
 
 from __future__ import annotations
@@ -22,6 +23,8 @@ import dataclasses
 from typing import Sequence
 
 import numpy as np
+
+from repro.core.engine import AnalyticEngine, Factorization
 
 __all__ = [
     "ClientUpdate",
@@ -33,6 +36,18 @@ __all__ = [
     "ri_restore",
     "afl_aggregate",
 ]
+
+# The single host-f64 engine behind every function in this module. γ is per
+# call here (the paper API passes it explicitly), so the instance default is
+# irrelevant; it exists to own the backend.
+_ENGINE = AnalyticEngine("numpy_f64")
+_B = _ENGINE.backend
+
+
+def ridge_solve(x: np.ndarray, y: np.ndarray, gamma: float) -> np.ndarray:
+    """eq (13): ``(XᵀX + γI)^{-1} Xᵀ Y`` (γ=0 reduces to the MP solution, eq (4))."""
+    stats = _ENGINE.client_stats(x, y)
+    return _ENGINE.solve(stats, use_ri=True, target_gamma=gamma)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,53 +70,16 @@ class ClientUpdate:
         return self.weight.shape[0]
 
 
-def _sym_solve(a: np.ndarray, b: np.ndarray) -> np.ndarray:
-    """Solve a @ x = b for symmetric (not necessarily PD) ``a``.
-
-    Uses Cholesky when PD (the γ>0 path), falling back to pseudo-inverse for
-    the γ=0 rank-deficient case so that the "AA law without RI breaks down"
-    experiments (paper Table 3 / A.1) run instead of raising.
-    """
-    try:
-        c = np.linalg.cholesky(a)
-        y = np.linalg.solve(c, b)
-        return np.linalg.solve(c.T, y)
-    except np.linalg.LinAlgError:
-        return np.linalg.pinv(a) @ b
-
-
-def ridge_solve(x: np.ndarray, y: np.ndarray, gamma: float) -> np.ndarray:
-    """eq (13): ``(XᵀX + γI)^{-1} Xᵀ Y`` (γ=0 reduces to the MP solution, eq (4))."""
-    x = np.asarray(x, np.float64)
-    y = np.asarray(y, np.float64)
-    d = x.shape[1]
-    return _sym_solve(x.T @ x + gamma * np.eye(d), x.T @ y)
-
-
 def local_stage(x: np.ndarray, y: np.ndarray, gamma: float) -> ClientUpdate:
     """Algorithm 1, Local Stage: returns (Ŵ_k^r, C_k^r)."""
-    x = np.asarray(x, np.float64)
-    y = np.asarray(y, np.float64)
-    d = x.shape[1]
-    gram = x.T @ x + gamma * np.eye(d)
-    weight = _sym_solve(gram, x.T @ y)
+    stats = _ENGINE.client_stats(x, y)
+    gram = _ENGINE.regularized_gram(stats, gamma)
+    weight = _B.solve_sym(gram, stats.moment)
     return ClientUpdate(weight=weight, gram=gram, gamma=gamma)
 
 
-def _factor(a: np.ndarray):
-    """One Cholesky factorization, reusable across solves; None on failure
-    (rank-deficient γ=0 path → callers fall back to pinv per solve)."""
-    try:
-        return np.linalg.cholesky(a)
-    except np.linalg.LinAlgError:
-        return None
-
-
-def _fsolve(chol, a: np.ndarray, b: np.ndarray) -> np.ndarray:
-    if chol is None:
-        return np.linalg.pinv(a) @ b
-    y = np.linalg.solve(chol, b)
-    return np.linalg.solve(chol.T, y)
+def _fsolve(f: Factorization, b: np.ndarray) -> np.ndarray:
+    return _B.factor_solve(f, b)
 
 
 def aa_merge(
@@ -114,18 +92,17 @@ def aa_merge(
       𝒲_v = I - C_v^{-1} C_u (I - (C_u+C_v)^{-1} C_u)
 
     Returns the merged (weight, gram). Grams add: C = C_u + C_v (eq. 11).
-    Each symmetric matrix is factored once and the factor reused across the
-    solves (identical math to per-solve factorization, ~2× fewer 512³ ops).
+    Each symmetric matrix is factored once (engine backend) and the factor
+    reused across the solves (identical math, ~2× fewer 512³ ops).
     """
     d = c_u.shape[0]
     eye = np.eye(d)
     c_sum = c_u + c_v
-    f_sum = _factor(c_sum)
     # (C_u + C_v)^{-1} [C_v | C_u] from one factorization
-    s = _fsolve(f_sum, c_sum, np.concatenate([c_v, c_u], axis=1))
+    s = _fsolve(_B.factor(c_sum), np.concatenate([c_v, c_u], axis=1))
     s_v, s_u = s[:, :d], s[:, d:]
-    cal_u = eye - _fsolve(_factor(c_u), c_u, c_v @ (eye - s_v))
-    cal_v = eye - _fsolve(_factor(c_v), c_v, c_u @ (eye - s_u))
+    cal_u = eye - _fsolve(_B.factor(c_u), c_v @ (eye - s_v))
+    cal_v = eye - _fsolve(_B.factor(c_v), c_u @ (eye - s_u))
     return cal_u @ w_u + cal_v @ w_v, c_sum
 
 
@@ -157,7 +134,7 @@ def aggregate_sufficient_stats(
     """
     c_sum = sum(u.gram for u in updates)
     q_sum = sum(u.gram @ u.weight for u in updates)
-    return _sym_solve(c_sum, q_sum), c_sum
+    return _B.solve_sym(c_sum, q_sum), c_sum
 
 
 def ri_restore(
@@ -174,9 +151,8 @@ def ri_restore(
     small final ridge (instead of exactly 0) keeps the solve PD when even the
     *joint* dataset is rank-deficient; ``target_gamma=0`` is the paper's form.
     """
-    d = c_agg_r.shape[0]
-    shift = (num_clients * gamma - target_gamma) * np.eye(d)
-    return _sym_solve(c_agg_r - shift, c_agg_r @ w_agg_r)
+    return _ENGINE.ri_restore(
+        w_agg_r, c_agg_r, num_clients, gamma, target_gamma=target_gamma)
 
 
 def afl_aggregate(
@@ -205,4 +181,5 @@ def afl_aggregate(
         w_r, c_r = aggregate_sufficient_stats(updates)
     if not use_ri:
         return w_r
-    return ri_restore(w_r, c_r, len(updates), gamma, target_gamma=target_gamma)
+    return _ENGINE.ri_restore(
+        w_r, c_r, len(updates), gamma, target_gamma=target_gamma)

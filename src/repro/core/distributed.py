@@ -2,13 +2,14 @@
 
 On the TPU mesh each shard along the federation axes (``('data',)`` or
 ``('pod', 'data')``) plays one client cohort. Each shard holds a local
-``AnalyticState`` (C_k^r implicit: we keep the *raw* Gram and track the client
-count, adding γ per-client lazily — algebraically identical to the paper's
-C_k^r = C_k + γI per client, see eq (15): Σ C_i^r = Σ C_i + kγI).
+:class:`~repro.core.engine.SuffStats` (C_k^r implicit: raw Gram + a client
+count, adding γ per-client lazily — the engine's shared bookkeeping,
+algebraically identical to the paper's C_k^r = C_k + γI per client, see
+eq (15): Σ C_i^r = Σ C_i + kγI).
 
 ``federated_solve`` then performs the paper's entire aggregation stage as:
 
-    psum(C), psum(Q), psum(k)  →  RI restore  →  Cholesky solve
+    psum(SuffStats)  →  RI restore  →  Cholesky solve (engine, jax backend)
 
 i.e. ONE all-reduce round — the communication pattern the AA law licenses.
 """
@@ -20,21 +21,37 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.streaming import AnalyticState
+from repro.compat import shard_map
+from repro.core.engine import AnalyticEngine, SuffStats
+from repro.core.streaming import AnalyticState, to_stats
 
-__all__ = ["psum_state", "federated_solve", "make_federated_solve"]
+__all__ = [
+    "psum_stats",
+    "psum_state",
+    "federated_solve",
+    "federated_solve_no_ri",
+    "make_federated_solve",
+]
+
+_ENGINE = AnalyticEngine("jax")
+
+
+def psum_stats(stats: SuffStats, axis_names: Sequence[str]) -> SuffStats:
+    """All-reduce the sufficient statistics over the federation axes.
+
+    The AA law (Thm 1) makes this one psum *the whole aggregation stage*:
+    statistics (and the lazy client count) simply add.
+    """
+    ax = tuple(axis_names)
+    return jax.tree.map(lambda x: jax.lax.psum(x, ax), stats)
 
 
 def psum_state(state: AnalyticState, axis_names: Sequence[str]) -> AnalyticState:
-    """All-reduce the sufficient statistics over the federation axes."""
+    """Back-compat: all-reduce a bare 3-leaf AnalyticState."""
     ax = tuple(axis_names)
-    return AnalyticState(
-        gram=jax.lax.psum(state.gram, ax),
-        moment=jax.lax.psum(state.moment, ax),
-        count=jax.lax.psum(state.count, ax),
-    )
+    return jax.tree.map(lambda x: jax.lax.psum(x, ax), state)
 
 
 def federated_solve(
@@ -49,17 +66,13 @@ def federated_solve(
 
     ``state`` holds this shard's *raw* Gram/moment (no γ added). Per the RI
     process (Thm 2), the regularized aggregate would be C_agg + KγI; restoring
-    (eq 16) means solving with C_agg + target_γ·I directly — the KγI term is
-    added and removed analytically, so we skip materializing it. The
+    (eq 16) means solving with C_agg + target_γ·I directly — the engine's
+    lazy-γ semantics, so the KγI term is never materialized. The
     γ/num_clients arguments are kept so callers can instead request the
     *biased* (no-RI) solution for the Table-3 ablation.
     """
-    agg = psum_state(state, axis_names)
-    d = agg.gram.shape[0]
-    eye = jnp.eye(d, dtype=agg.gram.dtype)
-    a = agg.gram + jnp.asarray(target_gamma, agg.gram.dtype) * eye
-    cf = jax.scipy.linalg.cho_factor(a)
-    return jax.scipy.linalg.cho_solve(cf, agg.moment)
+    agg = psum_stats(to_stats(state, clients=1.0), axis_names)
+    return _ENGINE.solve(agg, use_ri=True, target_gamma=target_gamma)
 
 
 def federated_solve_no_ri(
@@ -69,14 +82,15 @@ def federated_solve_no_ri(
     num_clients: int,
     gamma: float,
 ) -> jax.Array:
-    """Biased aggregate w/o RI: solves with C_agg + KγI (Table 3 left columns)."""
-    agg = psum_state(state, axis_names)
-    d = agg.gram.shape[0]
-    a = agg.gram + jnp.asarray(num_clients * gamma, agg.gram.dtype) * jnp.eye(
-        d, dtype=agg.gram.dtype
-    )
-    cf = jax.scipy.linalg.cho_factor(a)
-    return jax.scipy.linalg.cho_solve(cf, agg.moment)
+    """Biased aggregate w/o RI: solves with C_agg + KγI (Table 3 left columns).
+
+    ``num_clients`` is authoritative for K — a shard cohort may stand in for
+    more than one client, so the per-shard clients tags are overridden.
+    """
+    agg = psum_stats(to_stats(state, clients=1.0), axis_names)
+    agg = agg._replace(clients=jnp.asarray(num_clients, agg.gram.dtype))
+    eng = AnalyticEngine("jax", gamma=gamma)
+    return eng.solve(agg, use_ri=False)
 
 
 def make_federated_solve(
@@ -102,7 +116,7 @@ def make_federated_solve(
     solver = federated_solve if use_ri else federated_solve_no_ri
 
     @functools.partial(
-        jax.shard_map, mesh=mesh, in_specs=(in_spec,), out_specs=P()
+        shard_map, mesh=mesh, in_specs=(in_spec,), out_specs=P()
     )
     def _agg(stacked: AnalyticState) -> jax.Array:
         local = jax.tree.map(lambda x: jnp.sum(x, axis=0), stacked)

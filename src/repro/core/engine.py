@@ -1,0 +1,436 @@
+"""The sufficient-statistics engine: ONE implementation of AFL's math.
+
+Every path in this repo that touches the paper's statistics→solve pipeline —
+the host f64 reference (`core.analytic`), the device streaming accumulator
+(`core.streaming`), the one-collective federated solve (`core.distributed`),
+and the incremental serving server (`fl.server`) — routes through this module.
+The math appears exactly once:
+
+  * ``SuffStats``: the sufficient statistics of a (partial) analytic
+    regression, in *raw-Gram* form — ``gram = Σ XᵀX`` with NO γ baked in,
+    plus a ``clients`` counter so the per-client γI of the paper's
+    C_k^r = X_kᵀX_k + γI is applied *lazily* at solve time
+    (Σ C_k^r = Σ C_k + kγI, eq (15); `core.distributed` already used this
+    bookkeeping — it is now the shared semantics).
+  * ``AnalyticEngine``: update / merge / ri_restore / solve /
+    solve_multi_gamma over a pluggable backend.
+
+Backends:
+  * ``numpy_f64`` — host numpy in float64, Cholesky with pseudo-inverse
+    fallback for the rank-deficient γ=0 ablations (paper Table 3 / A.1).
+  * ``jax`` — device f32 (or f64 where enabled), jit-able, with an optional
+    Kahan-compensated accumulator for long streaming reductions and the
+    Pallas Gram kernel (`repro.kernels.gram`) as the update path
+    (``use_kernel=True``).
+
+The engine also exposes an explicit factorization handle
+(:meth:`AnalyticEngine.factor` / :meth:`AnalyticEngine.factor_solve`) so hot
+serving paths (``fl.server.AFLServer``) can cache the d³ Cholesky across
+repeated ``solve()`` polls and pay only the d²·C triangular solves.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Sequence
+
+import numpy as np
+
+__all__ = [
+    "SuffStats",
+    "Factorization",
+    "AnalyticEngine",
+    "NumpyF64Backend",
+    "JaxBackend",
+    "get_backend",
+]
+
+
+class SuffStats(NamedTuple):
+    """Sufficient statistics of a (partial) analytic regression (a pytree).
+
+    gram:    ``Σ XᵀX``  (d, d) — RAW, no regularization baked in.
+    moment:  ``Σ XᵀY``  (d, C).
+    count:   number of samples folded in (scalar).
+    clients: number of client contributions merged in (scalar). The paper's
+             per-client +γI is applied lazily as ``clients·γ·I`` wherever a
+             regularized aggregate is needed; the RI restore (Thm 2) then
+             amounts to *not* adding it back (eq 16).
+    gram_c / moment_c: optional Kahan compensation carries (same shapes as
+             gram/moment; ``None`` unless the engine runs compensated
+             accumulation). ``None`` leaves vanish from the pytree, so the
+             plain 4-leaf layout is unchanged for psum/sharding.
+    """
+
+    gram: Any
+    moment: Any
+    count: Any
+    clients: Any
+    gram_c: Any = None
+    moment_c: Any = None
+
+    @property
+    def dim(self) -> int:
+        return self.gram.shape[0]
+
+    @property
+    def num_classes(self) -> int:
+        return self.moment.shape[1]
+
+
+@dataclasses.dataclass(frozen=True)
+class Factorization:
+    """Opaque reusable factorization of a regularized Gram matrix.
+
+    ``handle`` is backend-specific (host Cholesky factor or jax cho_factor
+    output; ``None`` marks the numpy pinv fallback for singular systems, in
+    which case ``matrix`` holds the system for the per-solve pseudo-inverse —
+    on the successful-factor path ``matrix`` is ``None`` so cached entries
+    carry only the factor).
+    """
+
+    handle: Any
+    matrix: Any = None
+
+
+# ---------------------------------------------------------------------------
+# Backends
+# ---------------------------------------------------------------------------
+
+
+class NumpyF64Backend:
+    """Host numpy, float64 — the paper-faithful reference arithmetic."""
+
+    name = "numpy_f64"
+
+    def asarray(self, a):
+        return np.asarray(a, np.float64)
+
+    def eye(self, d, like=None):
+        return np.eye(d)
+
+    def zeros(self, shape):
+        return np.zeros(shape, np.float64)
+
+    def scalar(self, v):
+        return float(v)
+
+    def gram_update(self, x, y):
+        x = self.asarray(x)
+        y = self.asarray(y)
+        return x.T @ x, x.T @ y, float(x.shape[0])
+
+    def factor(self, a) -> Factorization:
+        """Cholesky when PD; ``handle=None`` → pinv fallback per solve, so the
+        γ=0 rank-deficient ablations (paper Table 3 / A.1) run instead of
+        raising."""
+        try:
+            return Factorization(np.linalg.cholesky(a))
+        except np.linalg.LinAlgError:
+            return Factorization(None, a)
+
+    def factor_solve(self, f: Factorization, b):
+        if f.handle is None:
+            return np.linalg.pinv(f.matrix) @ b
+        y = np.linalg.solve(f.handle, b)
+        return np.linalg.solve(f.handle.T, y)
+
+    def solve_sym(self, a, b):
+        return self.factor_solve(self.factor(a), b)
+
+    def eigh(self, a):
+        return np.linalg.eigh(a)
+
+    def safe_reciprocal(self, v, cutoff):
+        """1/v where |v| > cutoff, else 0 — pinv-style spectral truncation."""
+        return np.where(np.abs(v) > cutoff, 1.0 / np.where(v == 0, 1.0, v), 0.0)
+
+
+class JaxBackend:
+    """Device jax arrays, jit-able; f32 by default (f64 where x64 is on).
+
+    ``use_kernel=True`` routes the Gram update through the fused Pallas
+    kernel (`repro.kernels.ops.gram_update`: Mosaic on TPU, interpreter
+    elsewhere). The solve is an in-graph Cholesky — by construction the
+    engine only hands it PD systems (γ>0 or full-rank statistics); callers
+    needing the singular γ=0 path use the ``numpy_f64`` backend.
+    """
+
+    name = "jax"
+
+    def __init__(self, dtype=None, use_kernel: bool = False):
+        import jax.numpy as jnp
+
+        self._jnp = jnp
+        self.dtype = dtype or jnp.float32
+        self.use_kernel = use_kernel
+
+    def asarray(self, a):
+        return self._jnp.asarray(a, self.dtype)
+
+    def eye(self, d, like=None):
+        return self._jnp.eye(d, dtype=self.dtype)
+
+    def zeros(self, shape):
+        return self._jnp.zeros(shape, self.dtype)
+
+    def scalar(self, v):
+        return self._jnp.asarray(v, self.dtype)
+
+    def gram_update(self, x, y):
+        jnp = self._jnp
+        x = x.reshape(-1, x.shape[-1]).astype(self.dtype)
+        y = y.reshape(-1, y.shape[-1]).astype(self.dtype)
+        if self.use_kernel:
+            from repro.kernels import ops as _kops
+
+            g, q = _kops.gram_update(x, y)
+            g = g.astype(self.dtype)
+            q = q.astype(self.dtype)
+        else:
+            g = x.T @ x
+            q = x.T @ y
+        return g, q, jnp.asarray(x.shape[0], self.dtype)
+
+    def factor(self, a) -> Factorization:
+        import jax.scipy.linalg as jsl
+
+        return Factorization(jsl.cho_factor(a))
+
+    def factor_solve(self, f: Factorization, b):
+        import jax.scipy.linalg as jsl
+
+        return jsl.cho_solve(f.handle, b)
+
+    def solve_sym(self, a, b):
+        return self.factor_solve(self.factor(a), b)
+
+    def eigh(self, a):
+        return self._jnp.linalg.eigh(a)
+
+    def safe_reciprocal(self, v, cutoff):
+        """1/v where |v| > cutoff, else 0 — pinv-style spectral truncation."""
+        jnp = self._jnp
+        return jnp.where(jnp.abs(v) > cutoff, 1.0 / jnp.where(v == 0, 1.0, v), 0.0)
+
+
+def get_backend(name: str, **kwargs):
+    """Backend registry: ``numpy_f64`` | ``jax`` (+ dtype / use_kernel)."""
+    if name == "numpy_f64":
+        if kwargs.get("use_kernel"):
+            raise ValueError("the Pallas kernel path requires the jax backend")
+        return NumpyF64Backend()
+    if name == "jax":
+        return JaxBackend(dtype=kwargs.get("dtype"), use_kernel=bool(kwargs.get("use_kernel")))
+    raise ValueError(f"unknown engine backend {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+
+class AnalyticEngine:
+    """Backend-agnostic AFL statistics→solve pipeline.
+
+    One instance carries the protocol-level configuration (backend, the γ
+    every client uses locally, accumulation policy); the statistics
+    themselves travel as explicit :class:`SuffStats` values, so the engine is
+    stateless and its methods are safe inside ``jit``/``shard_map`` for the
+    jax backend.
+
+    >>> eng = AnalyticEngine("numpy_f64", gamma=1.0)
+    >>> stats = eng.merge(eng.client_stats(x1, y1), eng.client_stats(x2, y2))
+    >>> w = eng.solve(stats)          # RI-restored joint solution (Thm 1+2)
+    """
+
+    def __init__(
+        self,
+        backend: str = "numpy_f64",
+        *,
+        gamma: float = 1.0,
+        dtype=None,
+        use_kernel: bool = False,
+        kahan: bool = False,
+    ):
+        self.backend = get_backend(backend, dtype=dtype, use_kernel=use_kernel)
+        self.gamma = float(gamma)
+        if kahan and backend != "jax":
+            raise ValueError("Kahan accumulation targets the f32 jax backend")
+        self.kahan = bool(kahan)
+
+    # -- accumulation -------------------------------------------------------
+
+    def init(self, dim: int, num_classes: int) -> SuffStats:
+        """Empty statistics (0 samples, 0 clients)."""
+        b = self.backend
+        comp_g = b.zeros((dim, dim)) if self.kahan else None
+        comp_q = b.zeros((dim, num_classes)) if self.kahan else None
+        return SuffStats(
+            gram=b.zeros((dim, dim)),
+            moment=b.zeros((dim, num_classes)),
+            count=b.scalar(0.0),
+            clients=b.scalar(0.0),
+            gram_c=comp_g,
+            moment_c=comp_q,
+        )
+
+    def update(self, stats: SuffStats, x, y) -> SuffStats:
+        """Fold a batch of (embeddings, one-hot targets) into the statistics.
+
+        Pure accumulation: ``clients`` is untouched — a participant marks
+        itself with :meth:`finalize_client` (or arrives via
+        :meth:`client_stats`) once its local stage is complete.
+        """
+        g_upd, q_upd, n = self.backend.gram_update(x, y)
+        if self.kahan and stats.gram_c is not None:
+            gram, gram_c = _kahan_add(stats.gram, stats.gram_c, g_upd)
+            moment, moment_c = _kahan_add(stats.moment, stats.moment_c, q_upd)
+        else:
+            gram, gram_c = stats.gram + g_upd, stats.gram_c
+            moment, moment_c = stats.moment + q_upd, stats.moment_c
+        return SuffStats(gram, moment, stats.count + n, stats.clients,
+                         gram_c, moment_c)
+
+    def finalize_client(self, stats: SuffStats) -> SuffStats:
+        """Mark accumulated statistics as ONE client's upload (clients=1)."""
+        return stats._replace(clients=self.backend.scalar(1.0))
+
+    def client_stats(self, x, y) -> SuffStats:
+        """One client's local stage in a single call: raw stats, clients=1."""
+        x = self.backend.asarray(x)
+        y = self.backend.asarray(y)
+        return self.finalize_client(
+            self.update(self.init(x.shape[-1], y.shape[-1]), x, y))
+
+    def merge(self, a: SuffStats, b: SuffStats) -> SuffStats:
+        """The AA law in sufficient-statistics form: everything adds
+        (Thm 1 / eq (11): C_agg = ΣC_k, Q_agg = ΣQ_k; client counts add for
+        the lazy-γ bookkeeping of eq (15))."""
+        return SuffStats(
+            gram=a.gram + b.gram,
+            moment=a.moment + b.moment,
+            count=a.count + b.count,
+            clients=a.clients + b.clients,
+            gram_c=_maybe_add(a.gram_c, b.gram_c),
+            moment_c=_maybe_add(a.moment_c, b.moment_c),
+        )
+
+    # -- regularization bookkeeping -----------------------------------------
+
+    def regularized_gram(self, stats: SuffStats, gamma: Optional[float] = None):
+        """``C_agg^r = Σ XᵀX + kγI`` — the regularized aggregate the paper's
+        Algorithm 1 materializes (here derived lazily from raw stats)."""
+        g = self.gamma if gamma is None else float(gamma)
+        d = stats.gram.shape[0]
+        return stats.gram + (stats.clients * g) * self.backend.eye(d)
+
+    def _system(self, stats: SuffStats, use_ri: bool, target_gamma: float):
+        d = stats.gram.shape[0]
+        eye = self.backend.eye(d)
+        if use_ri:
+            # RI restore (Thm 2 / eq 16) on raw stats: the kγI term would be
+            # added (eq 15) and removed (eq 16) analytically — so it is never
+            # materialized; only the final target ridge remains.
+            return stats.gram + self.backend.scalar(target_gamma) * eye
+        return stats.gram + stats.clients * self.backend.scalar(self.gamma) * eye
+
+    # -- solves -------------------------------------------------------------
+
+    def solve(
+        self,
+        stats: SuffStats,
+        *,
+        use_ri: bool = True,
+        target_gamma: float = 0.0,
+    ):
+        """Joint weight over everything merged into ``stats``.
+
+        use_ri=True  → the paper's full pipeline (exact joint solution,
+                       restored to ``target_gamma`` ridge; 0 = eq 16).
+        use_ri=False → the biased no-RI aggregate carrying the accumulated
+                       ``kγI`` (paper Table 3 ablation).
+        """
+        return self.backend.solve_sym(
+            self._system(stats, use_ri, target_gamma), stats.moment)
+
+    def factor(
+        self,
+        stats: SuffStats,
+        *,
+        use_ri: bool = True,
+        target_gamma: float = 0.0,
+    ) -> Factorization:
+        """Factor the regularized system once; reuse via :meth:`factor_solve`.
+
+        This is the serving hot path: one d³ factorization amortized over
+        every straggler-poll ``solve()`` until new statistics arrive.
+        """
+        return self.backend.factor(self._system(stats, use_ri, target_gamma))
+
+    def factor_solve(self, factorization: Factorization, b):
+        """Solve against a cached factorization (d²·C instead of d³)."""
+        return self.backend.factor_solve(factorization, b)
+
+    def ri_restore(
+        self,
+        w_agg_r,
+        c_agg_r,
+        num_clients: int,
+        gamma: Optional[float] = None,
+        target_gamma: float = 0.0,
+    ):
+        """Theorem 2 / eq (16) in its explicit form, for *regularized*
+        aggregates (Ŵ_agg^r, C_agg^r) as produced by the paper-literal
+        Algorithm 1: ``Ŵ_agg = (C_agg^r − KγI)^{-1} C_agg^r Ŵ_agg^r``."""
+        b = self.backend
+        g = self.gamma if gamma is None else float(gamma)
+        d = c_agg_r.shape[0]
+        shift = b.scalar(num_clients * g - target_gamma) * b.eye(d)
+        return b.solve_sym(c_agg_r - shift, c_agg_r @ w_agg_r)
+
+    def solve_multi_gamma(
+        self,
+        stats: SuffStats,
+        gammas: Sequence[float],
+        *,
+        use_ri: bool = True,
+        rcond: float = 1e-12,
+    ):
+        """Solve the same statistics under several target ridges at once.
+
+        One eigendecomposition ``C = VΛVᵀ`` (d³) serves every γ:
+        ``W(γ) = V (Λ+γ)^{-1} Vᵀ Q`` is then d²·C per γ — the γ model sweep
+        costs barely more than a single solve. Eigenvalues with
+        ``λ+γ <= rcond·λ_max`` are treated as zero (pinv semantics), so the
+        γ=0 rank-deficient case matches the fallback of the direct solve.
+
+        Returns a list of weights, one per γ, each the RI-restored
+        (``use_ri=True``) or biased (``use_ri=False``, γ then *adds* the
+        lazy kγ term per eq (15)) solution.
+        """
+        b = self.backend
+        base = stats.gram if use_ri else self.regularized_gram(stats)
+        vals, vecs = b.eigh(base)
+        vq = vecs.T @ stats.moment
+        scale = abs(float(np.max(np.asarray(vals)))) if np.asarray(vals).size else 1.0
+        cutoff = rcond * max(scale, np.finfo(np.float32).tiny)
+        out = []
+        for g in gammas:
+            inv = b.safe_reciprocal(vals + b.scalar(float(g)), cutoff)
+            out.append(vecs @ (inv[:, None] * vq))
+        return out
+
+
+def _kahan_add(total, comp, upd):
+    """One compensated-summation step: returns (new_total, new_comp)."""
+    y = upd - comp
+    t = total + y
+    comp = (t - total) - y
+    return t, comp
+
+
+def _maybe_add(a, b):
+    if a is None or b is None:
+        return None
+    return a + b

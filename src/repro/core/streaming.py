@@ -3,9 +3,16 @@
 The AFL local stage never needs to materialize the full ``(N, d)`` embedding
 matrix: ``C = XᵀX`` and ``Q = XᵀY`` are additive over batches, so a client (or
 a TPU data shard standing in for a client cohort) folds mini-batches into an
-``AnalyticState`` accumulator. This is the in-graph half of the analytic
-module; the float64 host half (literal AA law / RI) lives in
-``repro.core.analytic``.
+``AnalyticState`` accumulator.
+
+This module is the paper-literal *device* API; the arithmetic lives in
+:mod:`repro.core.engine` (jax backend), shared with the host f64 path and the
+distributed collective. ``AnalyticState`` keeps its minimal 3-leaf pytree
+layout — (gram, moment, count) — because the launch-layer shardings and the
+shard_map in_specs are written against it; :func:`to_stats` /
+:func:`from_stats` convert to the engine's :class:`~repro.core.engine.
+SuffStats` (which additionally tracks the client count for lazy-γ
+bookkeeping).
 
 The Gram update itself is the AFL compute hot spot beyond the backbone — it is
 backed by the Pallas kernel in ``repro.kernels.gram`` (``use_kernel=True``)
@@ -19,7 +26,21 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["AnalyticState", "init_state", "update_state", "merge_states", "solve"]
+from repro.core.engine import AnalyticEngine, SuffStats
+
+__all__ = [
+    "AnalyticState",
+    "init_state",
+    "update_state",
+    "merge_states",
+    "solve",
+    "to_stats",
+    "from_stats",
+]
+
+# Module-level jax engines: plain accumulation and the Pallas-kernel path.
+_ENGINE = AnalyticEngine("jax")
+_ENGINE_KERNEL = AnalyticEngine("jax", use_kernel=True)
 
 
 class AnalyticState(NamedTuple):
@@ -36,12 +57,24 @@ class AnalyticState(NamedTuple):
     count: jax.Array
 
 
-def init_state(dim: int, num_classes: int, dtype=jnp.float32) -> AnalyticState:
-    return AnalyticState(
-        gram=jnp.zeros((dim, dim), dtype),
-        moment=jnp.zeros((dim, num_classes), dtype),
-        count=jnp.zeros((), dtype),
+def to_stats(state: AnalyticState, clients: float | jax.Array = 1.0) -> SuffStats:
+    """View an accumulator as engine SuffStats for ``clients`` contributions."""
+    return SuffStats(
+        gram=state.gram,
+        moment=state.moment,
+        count=state.count,
+        clients=jnp.asarray(clients, state.gram.dtype),
     )
+
+
+def from_stats(stats: SuffStats) -> AnalyticState:
+    """Project engine SuffStats back onto the 3-leaf device layout."""
+    return AnalyticState(gram=stats.gram, moment=stats.moment, count=stats.count)
+
+
+def init_state(dim: int, num_classes: int, dtype=jnp.float32) -> AnalyticState:
+    eng = _ENGINE if dtype == _ENGINE.backend.dtype else AnalyticEngine("jax", dtype=dtype)
+    return from_stats(eng.init(dim, num_classes))
 
 
 def update_state(
@@ -56,25 +89,13 @@ def update_state(
     embeddings: (N, d) — any leading dims are flattened.
     targets: (N, C) one-hot (or soft) labels.
     """
-    x = embeddings.reshape(-1, embeddings.shape[-1]).astype(jnp.float32)
-    y = targets.reshape(-1, targets.shape[-1]).astype(jnp.float32)
-    if use_kernel:
-        from repro.kernels import ops as _kops
-
-        gram_upd, moment_upd = _kops.gram_update(x, y)
-    else:
-        gram_upd = x.T @ x
-        moment_upd = x.T @ y
-    return AnalyticState(
-        gram=state.gram + gram_upd,
-        moment=state.moment + moment_upd,
-        count=state.count + x.shape[0],
-    )
+    eng = _ENGINE_KERNEL if use_kernel else _ENGINE
+    return from_stats(eng.update(to_stats(state, 0.0), embeddings, targets))
 
 
 def merge_states(a: AnalyticState, b: AnalyticState) -> AnalyticState:
     """AA law in sufficient-statistics form: statistics simply add."""
-    return AnalyticState(a.gram + b.gram, a.moment + b.moment, a.count + b.count)
+    return from_stats(_ENGINE.merge(to_stats(a, 0.0), to_stats(b, 0.0)))
 
 
 def solve(state: AnalyticState, gamma: float | jax.Array = 0.0) -> jax.Array:
@@ -83,7 +104,4 @@ def solve(state: AnalyticState, gamma: float | jax.Array = 0.0) -> jax.Array:
     For γ=0 on rank-deficient C this is the caller's responsibility (use the
     host f64 path with pinv fallback); in-graph we always add γI.
     """
-    d = state.gram.shape[0]
-    a = state.gram + gamma * jnp.eye(d, dtype=state.gram.dtype)
-    cf = jax.scipy.linalg.cho_factor(a)
-    return jax.scipy.linalg.cho_solve(cf, state.moment)
+    return _ENGINE.solve(to_stats(state, 0.0), use_ri=True, target_gamma=gamma)

@@ -19,7 +19,13 @@ AFL needs to wait for all the clients"). The AA law actually makes these
     *bit-exact* — unlike gradient FL where masking must survive averaging
     weights by data size.
 
-All server state is two matrices and a count — see :class:`AFLServer`.
+All aggregation math routes through :class:`repro.core.engine.
+AnalyticEngine` (``numpy_f64`` backend); the server itself owns only a
+:class:`~repro.core.engine.SuffStats`, the set of seen client ids, and a
+**cached Cholesky factorization**: the serving hot path polls ``solve()``
+after every straggler arrival, and between arrivals the statistics are
+unchanged — so the d³ factorization is computed once per (submission epoch,
+target γ) and every further poll pays only the d²·C triangular solves.
 """
 
 from __future__ import annotations
@@ -29,9 +35,9 @@ from typing import Dict, Iterable, Optional, Sequence
 
 import numpy as np
 
-from repro.core import analytic as al
+from repro.core.engine import AnalyticEngine, Factorization, SuffStats
 
-__all__ = ["ClientReport", "AFLServer", "masked_reports"]
+__all__ = ["ClientReport", "AFLServer", "make_report", "masked_reports"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,20 +48,23 @@ class ClientReport:
     moment: Q_k   = X_kᵀY_k        (d, C)
     (Equivalent information to the paper's (Ŵ_k^r, C_k^r) upload —
     Q_k = C_k^r Ŵ_k^r — but numerically nicer to accumulate.)
+    count: number of local samples (diagnostics only; 0 when unknown).
     """
 
     client_id: int
     gram: np.ndarray
     moment: np.ndarray
     gamma: float
+    count: float = 0.0
 
 
 def make_report(client_id: int, x: np.ndarray, y_onehot: np.ndarray,
                 gamma: float) -> ClientReport:
-    x = np.asarray(x, np.float64)
-    y = np.asarray(y_onehot, np.float64)
-    d = x.shape[1]
-    return ClientReport(client_id, x.T @ x + gamma * np.eye(d), x.T @ y, gamma)
+    """One client's local stage → upload, via the engine's update path."""
+    eng = AnalyticEngine("numpy_f64", gamma=gamma)
+    stats = eng.client_stats(x, y_onehot)
+    return ClientReport(client_id, eng.regularized_gram(stats), stats.moment,
+                        gamma, count=float(stats.count))
 
 
 class AFLServer:
@@ -64,15 +73,20 @@ class AFLServer:
     >>> server = AFLServer(dim=d, num_classes=c, gamma=1.0)
     >>> server.submit(report)              # any order, any time
     >>> w = server.solve()                 # exact joint weight over arrivals
+
+    ``solve()`` factors the regularized aggregate once per submission epoch
+    (and per distinct ``target_gamma``); repeated polls between arrivals
+    reuse the cached factor. Any ``submit`` invalidates the cache.
     """
 
     def __init__(self, dim: int, num_classes: int, gamma: float = 1.0):
         self.dim = dim
         self.num_classes = num_classes
         self.gamma = gamma
-        self._gram = np.zeros((dim, dim))
-        self._moment = np.zeros((dim, num_classes))
+        self.engine = AnalyticEngine("numpy_f64", gamma=gamma)
+        self._stats = self.engine.init(dim, num_classes)
         self._seen: set[int] = set()
+        self._factor_cache: Dict[float, Factorization] = {}
 
     @property
     def num_clients(self) -> int:
@@ -84,9 +98,18 @@ class AFLServer:
         if report.gamma != self.gamma:
             raise ValueError(
                 f"client γ={report.gamma} != server γ={self.gamma}")
-        self._gram += report.gram
-        self._moment += report.moment
+        # Uploads carry the regularized C_k^r (paper form); the engine keeps
+        # raw Grams with lazy per-client γ, so strip the γI on ingestion.
+        raw = np.asarray(report.gram, np.float64) - self.gamma * np.eye(self.dim)
+        upload = SuffStats(
+            gram=raw,
+            moment=np.asarray(report.moment, np.float64),
+            count=float(report.count),
+            clients=1.0,
+        )
+        self._stats = self.engine.merge(self._stats, upload)
         self._seen.add(report.client_id)
+        self._factor_cache.clear()
 
     def submit_many(self, reports: Iterable[ClientReport]) -> None:
         for r in reports:
@@ -95,21 +118,35 @@ class AFLServer:
     def solve(self, target_gamma: float = 0.0) -> np.ndarray:
         """Exact joint solution over all clients aggregated *so far*.
 
-        RI restore (Thm 2): C_agg^r carries kγI for k = arrivals; remove it.
-        Stragglers simply have not been added yet — calling solve() again
-        after they report gives the exact larger-joint solution.
+        RI restore (Thm 2): the engine's lazy-γ bookkeeping means the kγI of
+        the k arrivals is never materialized; only ``target_gamma`` enters
+        the system. Stragglers simply have not been added yet — calling
+        solve() again after they report gives the exact larger-joint
+        solution (and re-factors, since the statistics changed).
         """
         if not self._seen:
             raise ValueError("no clients aggregated")
-        k = len(self._seen)
-        c = self._gram - (k * self.gamma - target_gamma) * np.eye(self.dim)
-        return al._sym_solve(c, self._moment)
+        key = float(target_gamma)
+        fact = self._factor_cache.get(key)
+        if fact is None:
+            fact = self.engine.factor(self._stats, target_gamma=key)
+            self._factor_cache[key] = fact
+        return self.engine.factor_solve(fact, self._stats.moment)
+
+    def solve_multi_gamma(self, gammas: Sequence[float]) -> list[np.ndarray]:
+        """γ model sweep over the current aggregate: one eigendecomposition,
+        one weight per candidate ridge (see engine.solve_multi_gamma)."""
+        if not self._seen:
+            raise ValueError("no clients aggregated")
+        return self.engine.solve_multi_gamma(self._stats, gammas)
 
     def state(self) -> Dict[str, np.ndarray]:
-        """Serializable server state (see repro.checkpoint)."""
+        """Serializable server state (see repro.checkpoint). ``gram`` is the
+        paper-form regularized aggregate C_agg^r = ΣC_k^r, kept for format
+        stability across the raw-Gram refactor."""
         return {
-            "gram": self._gram.copy(),
-            "moment": self._moment.copy(),
+            "gram": self.engine.regularized_gram(self._stats).copy(),
+            "moment": self._stats.moment.copy(),
             "seen": np.array(sorted(self._seen), np.int64),
             "gamma": np.float64(self.gamma),
         }
@@ -120,9 +157,15 @@ class AFLServer:
         dim = state["gram"].shape[0]
         srv = cls(dim, num_classes or state["moment"].shape[1],
                   float(state["gamma"]))
-        srv._gram = np.array(state["gram"])
-        srv._moment = np.array(state["moment"])
-        srv._seen = set(int(i) for i in state["seen"])
+        seen = set(int(i) for i in state["seen"])
+        k = len(seen)
+        srv._stats = SuffStats(
+            gram=np.array(state["gram"], np.float64) - k * srv.gamma * np.eye(dim),
+            moment=np.array(state["moment"], np.float64),
+            count=0.0,
+            clients=float(k),
+        )
+        srv._seen = seen
         return srv
 
 

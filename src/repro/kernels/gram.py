@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 DEFAULT_BLOCK_D = 128   # output tile side (MXU lane-aligned)
 DEFAULT_BLOCK_N = 512   # reduction chunk (sublane multiple)
 
@@ -131,7 +133,7 @@ def gram_update(
             pltpu.VMEM((bd, bd), jnp.float32),
             pltpu.VMEM((bd, c_p), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,

@@ -26,6 +26,7 @@ from repro.config import FLConfig
 from repro.configs.registry import get_config
 from repro.core import act, streaming
 from repro.core.distributed import make_federated_solve
+from repro.core.engine import AnalyticEngine
 from repro.data import synthetic as D
 from repro.launch import mesh as M
 from repro.launch import sharding as SH
@@ -52,24 +53,43 @@ def _embed_fn(params, cfg, mesh):
     return jax.jit(fwd)
 
 
-def run_analytic(cfg, mesh, train_ds, test_ds, fl: FLConfig, batch: int):
-    """AFL on-device: one epoch of forwards, one aggregation collective."""
+def run_analytic(cfg, mesh, train_ds, test_ds, fl: FLConfig, batch: int,
+                 use_kernel: bool = False):
+    """AFL on-device: one epoch of forwards, one aggregation collective.
+
+    Statistics accumulation and the solve both route through the shared
+    engine (jax backend; ``use_kernel=True`` folds batches with the Pallas
+    Gram kernel).
+    """
     params = T.init_params(jax.random.key(0), cfg)
     embed = _embed_fn(params, cfg, mesh)
-    state = streaming.init_state(cfg.d_model, cfg.num_classes)
+    engine = AnalyticEngine("jax", gamma=fl.gamma, use_kernel=use_kernel)
+    stats = engine.init(cfg.d_model, cfg.num_classes)
     t0 = time.perf_counter()
     for toks, labels in _batches(train_ds, batch):
         emb = embed(params, jnp.asarray(toks))
         y = jax.nn.one_hot(jnp.asarray(labels), cfg.num_classes)
-        state = streaming.update_state(state, emb, y)
+        stats = engine.update(stats, emb, y)
     # single-round aggregation: with >1 devices this is the one all-reduce;
     # on one device it degenerates to the plain ridge solve.
     naxes = M.batch_axes(mesh)
-    if any(mesh.shape[a] > 1 for a in naxes):
+    n_shards = 1
+    for a in naxes:
+        n_shards *= mesh.shape[a]
+    if n_shards > 1:
         solve = make_federated_solve(mesh, axis_names=naxes, gamma=fl.gamma)
-        w = solve(jax.tree.map(lambda x: x[None], state))
+        state = streaming.from_stats(stats)
+        # The host loop accumulated ONE global statistic; the federated solve
+        # expects one leading entry per federation shard. Statistics are
+        # additive (the AA law), so shard 0 carries the total and the rest
+        # carry zeros — the collective's merge restores the exact aggregate.
+        stacked = jax.tree.map(
+            lambda x: jnp.concatenate(
+                [x[None], jnp.zeros((n_shards - 1,) + x.shape, x.dtype)]),
+            state)
+        w = solve(stacked)
     else:
-        w = streaming.solve(state, gamma=0.0)
+        w = engine.solve(engine.finalize_client(stats), target_gamma=0.0)
     train_s = time.perf_counter() - t0
     # evaluate
     correct = total = 0
@@ -131,6 +151,8 @@ def main() -> None:
     ap.add_argument("--rounds", type=int, default=5, help="gradient-FL rounds")
     ap.add_argument("--steps", type=int, default=50, help="lm steps")
     ap.add_argument("--gamma", type=float, default=1.0)
+    ap.add_argument("--kernel", action="store_true",
+                    help="fold Gram batches with the Pallas kernel")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -151,7 +173,8 @@ def main() -> None:
     train_ds, test_ds = D.train_test_split(ds, 0.25, seed=0)
     fl = FLConfig(gamma=args.gamma)
     if args.mode == "analytic":
-        acc, dt = run_analytic(cfg, mesh, train_ds, test_ds, fl, args.batch)
+        acc, dt = run_analytic(cfg, mesh, train_ds, test_ds, fl, args.batch,
+                               use_kernel=args.kernel)
         print(f"AFL analytic: acc={acc:.4f} train_time={dt:.2f}s (one epoch, "
               f"single aggregation)")
     else:

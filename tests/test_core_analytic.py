@@ -9,6 +9,9 @@ These validate the paper's central mathematical claims:
 
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import analytic as al

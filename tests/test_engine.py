@@ -1,0 +1,242 @@
+"""Cross-backend parity + engine semantics tests.
+
+The acceptance bar for the sufficient-statistics engine: the numpy-f64,
+jax-f32, and Pallas-kernel paths compute the SAME statistics and the SAME
+solutions on the same data, and every consumer-facing behavior (lazy γ,
+RI restore, factor caching, multi-γ sweep) matches the paper math.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import analytic as al
+from repro.core.engine import AnalyticEngine, SuffStats
+
+
+def _data(seed=0, n=512, d=48, c=7, k=4):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    y = np.eye(c, dtype=np.float32)[rng.integers(0, c, n)]
+    bounds = np.linspace(0, n, k + 1).astype(int)
+    shards = [(x[a:b], y[a:b]) for a, b in zip(bounds, bounds[1:])]
+    return x, y, shards
+
+
+def _aggregate(engine, shards):
+    stats = None
+    for xs, ys in shards:
+        s = engine.client_stats(xs, ys)
+        stats = s if stats is None else engine.merge(stats, s)
+    return stats
+
+
+class TestCrossBackendParity:
+    """numpy-f64 vs jax-f32 vs jax+Pallas-kernel agree on the same data."""
+
+    def test_stats_and_solve_agree(self):
+        x, y, shards = _data()
+        engines = {
+            "numpy_f64": AnalyticEngine("numpy_f64", gamma=1.0),
+            "jax": AnalyticEngine("jax", gamma=1.0),
+            "jax_kernel": AnalyticEngine("jax", gamma=1.0, use_kernel=True),
+        }
+        stats = {k: _aggregate(e, shards) for k, e in engines.items()}
+        ref = stats["numpy_f64"]
+        for name in ("jax", "jax_kernel"):
+            s = stats[name]
+            np.testing.assert_allclose(
+                np.asarray(s.gram), ref.gram, rtol=2e-4, atol=2e-3)
+            np.testing.assert_allclose(
+                np.asarray(s.moment), ref.moment, rtol=2e-4, atol=2e-3)
+            assert float(s.count) == float(ref.count) == len(x)
+            assert float(s.clients) == float(ref.clients) == len(shards)
+        # the solves agree across all three paths (f32 tolerance)
+        w = {k: np.asarray(engines[k].solve(s, target_gamma=0.05))
+             for k, s in stats.items()}
+        np.testing.assert_allclose(w["jax"], w["numpy_f64"], atol=2e-3)
+        np.testing.assert_allclose(w["jax_kernel"], w["numpy_f64"], atol=2e-3)
+
+    def test_engine_matches_paper_literal_host_path(self):
+        """Engine RI solve == literal Algorithm 1 (pairwise AA + RI restore)."""
+        x, y, shards = _data(seed=1)
+        eng = AnalyticEngine("numpy_f64", gamma=1.0)
+        w_eng = eng.solve(_aggregate(eng, shards))
+        ups = [al.local_stage(xs.astype(np.float64), ys.astype(np.float64), 1.0)
+               for xs, ys in shards]
+        w_lit = al.afl_aggregate(ups, use_ri=True, pairwise=True)
+        np.testing.assert_allclose(w_eng, w_lit, rtol=1e-7, atol=1e-8)
+
+    def test_engine_matches_federated_solve(self):
+        """Covers the multidevice triage case in-process: the device
+        federated_solve path == host engine on identical shard data."""
+        from repro.core import streaming
+        from repro.core.distributed import make_federated_solve
+
+        x, y, shards = _data(seed=2, d=24, c=5)
+        states = [streaming.update_state(
+            streaming.init_state(24, 5), jnp.asarray(xs), jnp.asarray(ys))
+            for xs, ys in shards]
+        stacked = jax.tree.map(lambda *l: jnp.stack(l), *states)
+        mesh = jax.make_mesh((1,), ("data",))
+        w_dev = make_federated_solve(mesh, axis_names=("data",), gamma=1.0,
+                                     target_gamma=0.05)(stacked)
+        eng = AnalyticEngine("numpy_f64", gamma=1.0)
+        w_host = eng.solve(_aggregate(eng, shards), target_gamma=0.05)
+        np.testing.assert_allclose(np.asarray(w_dev), w_host, atol=2e-3)
+
+
+class TestGammaBookkeeping:
+    def test_lazy_gamma_equals_materialized(self):
+        """raw-Gram + lazy kγ == the paper's per-client C_k^r accumulation."""
+        x, y, shards = _data(seed=3)
+        gamma = 2.5
+        eng = AnalyticEngine("numpy_f64", gamma=gamma)
+        stats = _aggregate(eng, shards)
+        c_r = eng.regularized_gram(stats)
+        expect = sum(xs.astype(np.float64).T @ xs.astype(np.float64)
+                     + gamma * np.eye(48) for xs, ys in shards)
+        np.testing.assert_allclose(c_r, expect, rtol=1e-10, atol=1e-8)
+
+    def test_no_ri_solve_matches_biased_aggregate(self):
+        x, y, shards = _data(seed=4)
+        gamma = 10.0
+        eng = AnalyticEngine("numpy_f64", gamma=gamma)
+        stats = _aggregate(eng, shards)
+        w_biased = eng.solve(stats, use_ri=False)
+        ups = [al.local_stage(xs.astype(np.float64), ys.astype(np.float64), gamma)
+               for xs, ys in shards]
+        w_ref = al.afl_aggregate(ups, use_ri=False)
+        np.testing.assert_allclose(w_biased, w_ref, rtol=1e-7, atol=1e-8)
+
+    def test_ri_restore_explicit_form(self):
+        """engine.ri_restore on regularized aggregates == joint solution."""
+        x, y, shards = _data(seed=5)
+        gamma = 1.0
+        eng = AnalyticEngine("numpy_f64", gamma=gamma)
+        ups = [al.local_stage(xs.astype(np.float64), ys.astype(np.float64), gamma)
+               for xs, ys in shards]
+        w_r, c_r = al.aggregate_sufficient_stats(ups)
+        w = eng.ri_restore(w_r, c_r, len(ups), gamma)
+        w_joint = al.ridge_solve(x.astype(np.float64), y.astype(np.float64), 0.0)
+        np.testing.assert_allclose(w, w_joint, rtol=1e-6, atol=1e-7)
+
+
+class TestFactorCaching:
+    def test_factor_solve_equals_solve(self):
+        x, y, shards = _data(seed=6)
+        eng = AnalyticEngine("numpy_f64", gamma=1.0)
+        stats = _aggregate(eng, shards)
+        f = eng.factor(stats, target_gamma=0.1)
+        np.testing.assert_allclose(
+            eng.factor_solve(f, stats.moment),
+            eng.solve(stats, target_gamma=0.1),
+            rtol=1e-12, atol=1e-12)
+
+    def test_server_cache_reused_and_invalidated(self):
+        from repro.fl.server import AFLServer, make_report
+
+        rng = np.random.default_rng(7)
+        d, c = 16, 3
+        xs = rng.standard_normal((6, 40, d))
+        ys = np.eye(c)[rng.integers(0, c, (6, 40))]
+        reps = [make_report(i, xs[i], ys[i], 1.0) for i in range(6)]
+        srv = AFLServer(d, c, gamma=1.0)
+        srv.submit_many(reps[:4])
+        w1 = srv.solve()
+        assert srv._factor_cache                      # factored once
+        fact = srv._factor_cache[0.0]
+        w2 = srv.solve()
+        assert srv._factor_cache[0.0] is fact         # reused, not refactored
+        np.testing.assert_array_equal(w1, w2)
+        srv.submit(reps[4])                           # straggler arrives
+        assert not srv._factor_cache                  # cache invalidated
+        w3 = srv.solve()
+        x_flat = xs[:5].reshape(-1, d)
+        y_flat = ys[:5].reshape(-1, c)
+        w_ref = al.ridge_solve(x_flat, y_flat, 0.0)
+        np.testing.assert_allclose(w3, w_ref, rtol=1e-8, atol=1e-9)
+
+
+class TestMultiGamma:
+    def test_matches_individual_solves(self):
+        x, y, shards = _data(seed=8)
+        eng = AnalyticEngine("numpy_f64", gamma=1.0)
+        stats = _aggregate(eng, shards)
+        gammas = [0.01, 0.1, 1.0, 10.0]
+        ws = eng.solve_multi_gamma(stats, gammas)
+        for g, w in zip(gammas, ws):
+            np.testing.assert_allclose(
+                w, eng.solve(stats, target_gamma=g), rtol=1e-7, atol=1e-8)
+
+    def test_jax_backend(self):
+        x, y, shards = _data(seed=9, d=24, c=4)
+        eng = AnalyticEngine("jax", gamma=1.0)
+        eng_ref = AnalyticEngine("numpy_f64", gamma=1.0)
+        ws = eng.solve_multi_gamma(_aggregate(eng, shards), [0.1, 1.0])
+        ws_ref = eng_ref.solve_multi_gamma(_aggregate(eng_ref, shards), [0.1, 1.0])
+        for w, w_ref in zip(ws, ws_ref):
+            np.testing.assert_allclose(np.asarray(w), w_ref, atol=3e-3)
+
+    def test_rank_deficient_gamma_zero(self):
+        """γ=0 on singular stats: eigen path == pinv semantics, stays finite."""
+        rng = np.random.default_rng(10)
+        x = rng.standard_normal((8, 16))  # N < d
+        y = np.eye(3)[rng.integers(0, 3, 8)]
+        eng = AnalyticEngine("numpy_f64")
+        stats = eng.client_stats(x, y)
+        (w0,) = eng.solve_multi_gamma(stats, [0.0])
+        assert np.all(np.isfinite(w0))
+        np.testing.assert_allclose(
+            w0, np.linalg.pinv(x) @ y, rtol=1e-6, atol=1e-8)
+
+
+class TestKahan:
+    def test_kahan_tracks_f64_better_than_plain(self):
+        """Many small batches in f32: compensated accumulation stays at least
+        as close to the f64 reference as plain summation."""
+        rng = np.random.default_rng(11)
+        d, c, batches = 12, 3, 400
+        plain = AnalyticEngine("jax", gamma=1.0)
+        kahan = AnalyticEngine("jax", gamma=1.0, kahan=True)
+        host = AnalyticEngine("numpy_f64", gamma=1.0)
+        sp, sk, sh = plain.init(d, c), kahan.init(d, c), host.init(d, c)
+        for _ in range(batches):
+            x = (1.0 + rng.standard_normal((4, d)) * 1e-3).astype(np.float32)
+            y = np.eye(c, dtype=np.float32)[rng.integers(0, c, 4)]
+            sp = plain.update(sp, jnp.asarray(x), jnp.asarray(y))
+            sk = kahan.update(sk, jnp.asarray(x), jnp.asarray(y))
+            sh = host.update(sh, x, y)
+        err_plain = np.abs(np.asarray(sp.gram, np.float64) - sh.gram).max()
+        err_kahan = np.abs(np.asarray(sk.gram, np.float64) - sh.gram).max()
+        assert err_kahan <= err_plain * 1.0 + 1e-9
+        # compensation never leaks into the public 4-leaf psum layout
+        assert sp.gram_c is None and sk.gram_c is not None
+
+    def test_kahan_requires_jax(self):
+        with pytest.raises(ValueError):
+            AnalyticEngine("numpy_f64", kahan=True)
+
+
+def test_kernel_requires_jax_backend():
+    with pytest.raises(ValueError):
+        AnalyticEngine("numpy_f64", use_kernel=True)
+
+
+def test_streaming_wrappers_delegate(monkeypatch):
+    """core.streaming stays the paper-literal device API over the engine."""
+    from repro.core import streaming
+
+    rng = np.random.default_rng(12)
+    x = jnp.asarray(rng.standard_normal((64, 8)), jnp.float32)
+    y = jnp.asarray(np.eye(4)[rng.integers(0, 4, 64)], jnp.float32)
+    st = streaming.update_state(streaming.init_state(8, 4), x, y)
+    stats = streaming.to_stats(st, clients=1.0)
+    assert isinstance(stats, SuffStats)
+    np.testing.assert_allclose(np.asarray(st.gram), np.asarray(x.T @ x),
+                               rtol=2e-4, atol=2e-3)
+    w = streaming.solve(st, gamma=0.5)
+    w_ref = al.ridge_solve(np.asarray(x, np.float64), np.asarray(y, np.float64), 0.5)
+    np.testing.assert_allclose(np.asarray(w), w_ref, atol=2e-3)

@@ -6,6 +6,10 @@ ANY data, so they are properties, not examples.
 """
 
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 import jax

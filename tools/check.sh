@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# CI-style smoke check: tier-1 test suite + one reduced end-to-end analytic
+# training run through the engine (backbone forward → streaming Gram stats →
+# solve). Run from anywhere; ~2-4 min on CPU.
+#
+#   tools/check.sh            # full tier-1 pytest + reduced train run
+#   tools/check.sh --fast     # -x (stop at first failure) variant
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+PYTEST_ARGS=(-q)
+if [[ "${1:-}" == "--fast" ]]; then
+  PYTEST_ARGS=(-x -q)
+fi
+
+echo "== tier-1: pytest ${PYTEST_ARGS[*]}"
+python -m pytest "${PYTEST_ARGS[@]}"
+
+echo "== smoke: reduced analytic training run (launch/train.py)"
+python -m repro.launch.train --arch minicpm_2b --mode analytic --reduced \
+    --samples 512 --seq 16 --classes 8 --batch 64
+
+echo "== check.sh OK"
