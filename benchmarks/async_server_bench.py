@@ -1,0 +1,132 @@
+"""Async serving benchmark: rank-k factor update vs full refactor.
+
+The straggler hot path: the server holds a live Cholesky factor and clients
+with small local batches (n_k ≪ d) trickle in, each arrival immediately
+followed by a ``solve()`` poll. Two ways to absorb an arrival:
+
+  * **update**  — fold the arrival's (n_k, d) root into the cached factor,
+    O(n_k·d²) (``engine.factor_update`` via ``AFLServer.submit``);
+  * **refactor** — invalidate and re-factorize the d×d aggregate, O(d³)
+    (the pre-PR-2 behavior: every submit cleared the cache).
+
+Reported: median arrival→solve latency per straggler for both paths, the
+speedup, and an async end-to-end run (`AsyncAFLServer`, submissions +
+solves through the event loop) for the update path. The crossover the
+numbers show (see ROADMAP): at d=512 small-batch updates edge out the
+refactor; at d≥2048 they win clearly (2.4× at n_k=8) and the crossover
+sits near n_k ≈ d/16 — past it the sweep loses and the server should (and
+by default does) refactor instead.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.fl.async_server import AsyncAFLServer
+from repro.fl.server import AFLServer, make_report
+
+from benchmarks.common import print_table
+
+
+def _prime_server(d, c, gamma=1.0, **kw) -> AFLServer:
+    """A server whose aggregate is already full-rank PD (2d warm samples)."""
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((2 * d, d))
+    y = np.eye(c)[rng.integers(0, c, 2 * d)]
+    srv = AFLServer(d, c, gamma=gamma, **kw)
+    srv.submit(make_report(0, x, y, gamma))
+    srv.solve()                                    # factor in cache
+    return srv
+
+def _arrivals(d, c, n_k, count, gamma=1.0, start_id=1):
+    rng = np.random.default_rng(1)
+    reps = []
+    for i in range(count):
+        x = rng.standard_normal((n_k, d))
+        y = np.eye(c)[rng.integers(0, c, n_k)]
+        reps.append(make_report(start_id + i, x, y, gamma))
+    return reps
+
+
+def _bench_arrival_solve(d, c, n_k, arrivals, repeat=2):
+    """Median per-arrival (submit + solve) wall time, update vs refactor."""
+    def run(strip_root):
+        # budget pinned to n_k so BOTH sides of the crossover get measured
+        # (the production default d//16 would refuse the losing updates)
+        srv = _prime_server(d, c, update_rank_budget=n_k)
+        times = []
+        for rep in _arrivals(d, c, n_k, arrivals):
+            if strip_root:
+                rep = dataclasses.replace(rep, root=None)
+            t0 = time.perf_counter()
+            srv.submit(rep)
+            srv.solve()
+            times.append(time.perf_counter() - t0)
+        return float(np.median(times))
+
+    t_upd = min(run(strip_root=False) for _ in range(repeat))
+    t_ref = min(run(strip_root=True) for _ in range(repeat))
+    return t_upd, t_ref
+
+
+def _bench_async_end_to_end(d, c, n_k, arrivals):
+    """Arrival→solve latency through the event loop (queue + worker +
+    deferred-refactor policy), update path."""
+    reps = _arrivals(d, c, n_k, arrivals)
+
+    async def scenario():
+        # adopt the primed state so the loop starts with a live factor
+        primed = _prime_server(d, c, update_rank_budget=n_k)
+        async with AsyncAFLServer(d, c, gamma=1.0, server=primed) as srv:
+            lat = []
+            for rep in reps:
+                t0 = time.perf_counter()
+                await srv.submit(rep)
+                await srv.join()
+                await srv.solve()
+                lat.append(time.perf_counter() - t0)
+            return float(np.median(lat)), srv.updates, srv.deferred_refactors
+
+    return asyncio.run(scenario())
+
+
+def run(quick: bool = False) -> list[dict]:
+    # (d, C, n_k, arrivals); full mode spans the paper's 512–6144 range
+    cases = [(256, 20, 8, 6), (512, 50, 8, 6)] if quick else [
+        (512, 50, 8, 8), (512, 50, 64, 8),
+        (2048, 100, 8, 6), (2048, 100, 64, 6), (2048, 100, 256, 4),
+        (6144, 100, 64, 3),
+    ]
+    rows, out = [], []
+    for d, c, n_k, arrivals in cases:
+        t_u, t_r = _bench_arrival_solve(d, c, n_k, arrivals)
+        speed = t_r / max(t_u, 1e-12)
+        rows.append([f"d={d} C={c} n_k={n_k}",
+                     f"{1e3 * t_u:.1f}", f"{1e3 * t_r:.1f}", f"{speed:.1f}x"])
+        out.append(dict(bench="arrival_solve", d=d, c=c, n_k=n_k,
+                        arrivals=arrivals, update_s=t_u, refactor_s=t_r,
+                        speedup=speed))
+    print_table(
+        "Straggler arrival→solve latency: rank-n_k factor update vs refactor",
+        ["case", "update ms", "refactor ms", "speedup"], rows)
+
+    rows2 = []
+    for d, c, n_k, arrivals in ([cases[0]] if quick else [cases[2]]):
+        t_async, n_upd, n_ref = _bench_async_end_to_end(d, c, n_k, arrivals)
+        rows2.append([f"d={d} n_k={n_k} x{arrivals}",
+                      f"{1e3 * t_async:.1f}", f"{n_upd}", f"{n_ref}"])
+        out.append(dict(bench="async_end_to_end", d=d, c=c, n_k=n_k,
+                        arrivals=arrivals, median_latency_s=t_async,
+                        updates=n_upd, deferred_refactors=n_ref))
+    print_table(
+        "AsyncAFLServer end-to-end (queue + policy), update path",
+        ["case", "median ms/arrival", "updates", "deferred refactors"], rows2)
+    return out
+
+
+if __name__ == "__main__":
+    run()

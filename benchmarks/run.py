@@ -28,6 +28,7 @@ MODULES = [
     ("beyond_nonlinear", "Beyond-paper — non-linear analytic heads"),
     ("kernels_micro", "Pallas kernel correctness sweep"),
     ("engine_bench", "Engine — cached-factorization solve throughput"),
+    ("async_server_bench", "Async serving — rank-k update vs refactor"),
     ("roofline", "§Roofline — dry-run derived"),
 ]
 

@@ -1,0 +1,219 @@
+"""Event-loop AFL serving: submissions stream in, solves never wait.
+
+The AA law makes AFL aggregation a *sum* of sufficient statistics, so there
+is no round structure to synchronize on: the server can accept a client
+upload at any moment and every ``solve()`` is the exact joint solution of
+whatever has arrived so far. :class:`AsyncAFLServer` turns that property
+into a serving loop:
+
+  * ``submit()`` enqueues a :class:`~repro.fl.server.ClientReport` and
+    returns immediately; a single worker task drains the queue in arrival
+    order (asyncio's cooperative scheduling makes each apply atomic with
+    respect to solves, and an explicit lock keeps it that way even if the
+    linear algebra is ever pushed off-loop).
+  * Each arrival is folded into the live cached Cholesky factors as a
+    **rank-n_k update** (``AFLServer.submit`` → ``engine.factor_update``,
+    O(n_k·d²)) instead of invalidating them — the d³ refactorization
+    disappears from the arrival hot path.
+  * ``solve()`` / ``solve_multi_gamma()`` serve concurrently from the live
+    factor: they reflect every arrival *applied* so far and never block on
+    submissions still queued (``join()`` waits for the queue to drain when a
+    caller wants the everyone-included answer).
+
+Deferred-refactor policy
+------------------------
+Rank updates are exact in exact arithmetic but each sweep rounds; after many
+updates the cached factor drifts from chol(Σ XᵀX + γI), and past a rank
+crossover (≈ d/16 rows per arrival at d=2048, measured in
+``benchmarks/async_server_bench.py``) updating costs more than refactoring.
+The worker therefore tracks, per submission epoch:
+
+  * ``applied_rank`` — total update rows folded into the live factors, and
+  * an error proxy ``ε·√d·applied_rank`` for the worst-case relative drift
+    of the factor (each rank-1 sweep is one pass of d Householder
+    rotations, backward-stable to O(ε) each).
+
+When an arrival has no usable root (masked upload, batch past the rank
+budget) or would push either counter over its threshold
+(``refactor_rank``, default d/2; ``error_budget``, default 1e-8), the
+worker *invalidates* instead of updating and resets the counters. The
+refactor itself is deferred to the next ``solve()`` — so a burst of
+cache-killing arrivals is batched into ONE d³ factorization rather than one
+per arrival, and pure-submission periods never pay d³ at all.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.fl.server import AFLServer, ClientReport
+
+__all__ = ["AsyncAFLServer"]
+
+
+class AsyncAFLServer:
+    """Asyncio front-end over :class:`AFLServer` with incremental factors.
+
+    >>> async with AsyncAFLServer(dim=d, num_classes=c, gamma=1.0) as srv:
+    ...     await srv.submit(report)       # returns once enqueued
+    ...     w_now = await srv.solve()      # exact for everything applied
+    ...     await srv.join()               # drain stragglers
+    ...     w_all = await srv.solve()
+
+    Statistics are always merged exactly on arrival; the policy only decides
+    whether the cached *factorization* is updated in place or lazily
+    rebuilt. ``updates`` / ``deferred_refactors`` count the two paths.
+    """
+
+    def __init__(
+        self,
+        dim: int,
+        num_classes: int,
+        gamma: float = 1.0,
+        *,
+        update_rank_budget: Optional[int] = None,
+        refactor_rank: Optional[int] = None,
+        error_budget: float = 1e-8,
+        server: Optional[AFLServer] = None,
+    ):
+        # ``server`` adopts an existing aggregate (e.g. restored from a
+        # checkpoint) instead of starting empty
+        if server is not None:
+            if (server.dim, server.num_classes,
+                    server.gamma) != (dim, num_classes, gamma):
+                raise ValueError("adopted server disagrees with (dim, C, γ)")
+            if update_rank_budget is not None:
+                server.update_rank_budget = int(update_rank_budget)
+            self._server = server
+        else:
+            self._server = AFLServer(dim, num_classes, gamma,
+                                     update_rank_budget=update_rank_budget)
+        self.refactor_rank = max(1, dim // 2) if refactor_rank is None \
+            else int(refactor_rank)
+        self.error_budget = float(error_budget)
+        self._queue: asyncio.Queue = asyncio.Queue()
+        self._lock = asyncio.Lock()
+        self._worker: Optional[asyncio.Task] = None
+        self._applied_rank = 0
+        # observability: arrivals folded as rank updates vs cache kills,
+        # plus uploads the wrapped server refused (duplicate id, γ mismatch)
+        self.updates = 0
+        self.deferred_refactors = 0
+        self.rejected: list = []
+
+    # -- lifecycle ----------------------------------------------------------
+
+    async def start(self) -> "AsyncAFLServer":
+        if self._worker is None:
+            self._worker = asyncio.create_task(self._run())
+        return self
+
+    async def close(self) -> None:
+        if self._worker is not None:
+            await self._queue.join()
+            self._worker.cancel()
+            try:
+                await self._worker
+            except asyncio.CancelledError:
+                pass
+            self._worker = None
+
+    async def __aenter__(self) -> "AsyncAFLServer":
+        return await self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.close()
+
+    # -- submission side ----------------------------------------------------
+
+    async def submit(self, report: ClientReport) -> None:
+        """Enqueue an upload; the worker applies it in arrival order."""
+        await self._queue.put(report)
+
+    async def submit_many(self, reports: Sequence[ClientReport]) -> None:
+        for r in reports:
+            await self._queue.put(r)
+
+    async def join(self) -> None:
+        """Wait until every enqueued submission has been applied."""
+        await self._queue.join()
+
+    async def _run(self) -> None:
+        while True:
+            report = await self._queue.get()
+            try:
+                async with self._lock:
+                    self._apply(report)
+            except Exception as e:
+                # a bad upload (duplicate id, γ mismatch, malformed arrays)
+                # must not kill the serving loop
+                self.rejected.append((getattr(report, "client_id", None),
+                                      str(e)))
+            finally:
+                self._queue.task_done()
+
+    def _apply(self, report: ClientReport) -> None:
+        srv = self._server
+        rank = (0 if report.root is None
+                else int(np.asarray(report.root).reshape(-1, srv.dim).shape[0]))
+        usable = 0 < rank <= srv.update_rank_budget
+        over = (self._applied_rank + rank > self.refactor_rank
+                or self._error_proxy(self._applied_rank + rank)
+                > self.error_budget)
+        had_factor = bool(srv._factor_cache)
+        if usable and not over:
+            survived = srv.submit(report)
+        else:
+            # policy says refactor: strip the root so the cache dies and the
+            # NEXT solve pays the d³ once for this and any further
+            # cache-killing arrivals in the burst
+            srv.submit(dataclasses.replace(report, root=None))
+            survived = False
+        if not had_factor:
+            return                          # no live factor — nothing to track
+        if survived:
+            self._applied_rank += rank
+            self.updates += 1
+        else:
+            # fold refused (policy, or a non-updatable pinv-fallback factor)
+            self._applied_rank = 0
+            self.deferred_refactors += 1
+
+    def _error_proxy(self, applied_rank: int) -> float:
+        """Worst-case relative drift of a factor after ``applied_rank``
+        rank-1 sweeps: each sweep is d Householder rotations, each backward
+        stable to O(ε) — proxy ε·√d per sweep, summed."""
+        eps = float(np.finfo(np.float64).eps)
+        return eps * np.sqrt(self._server.dim) * applied_rank
+
+    # -- serving side -------------------------------------------------------
+
+    async def solve(self, target_gamma: float = 0.0) -> np.ndarray:
+        """Joint solution over every *applied* arrival, from the live factor
+        (rank-updated in place, or refactored here if a deferral is due)."""
+        async with self._lock:
+            return self._server.solve(target_gamma)
+
+    async def solve_multi_gamma(self, gammas: Sequence[float]) -> list:
+        async with self._lock:
+            return self._server.solve_multi_gamma(gammas)
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def num_clients(self) -> int:
+        """Clients applied so far (excludes queued-but-unapplied)."""
+        return self._server.num_clients
+
+    @property
+    def pending(self) -> int:
+        return self._queue.qsize()
+
+    @property
+    def server(self) -> AFLServer:
+        """The wrapped synchronous server (shared statistics, same cache)."""
+        return self._server

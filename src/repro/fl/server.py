@@ -26,6 +26,11 @@ AnalyticEngine` (``numpy_f64`` backend); the server itself owns only a
 after every straggler arrival, and between arrivals the statistics are
 unchanged — so the d³ factorization is computed once per (submission epoch,
 target γ) and every further poll pays only the d²·C triangular solves.
+Arrivals that carry a low-rank ``root`` of their Gram don't even end the
+epoch: ``submit`` folds them into the cached factors as rank-n_k Cholesky
+updates (engine ``factor_update``), and only rootless / high-rank arrivals
+force a refactor. ``fl.async_server`` builds the event-loop serving story
+on top of exactly this seam.
 """
 
 from __future__ import annotations
@@ -49,6 +54,12 @@ class ClientReport:
     (Equivalent information to the paper's (Ŵ_k^r, C_k^r) upload —
     Q_k = C_k^r Ŵ_k^r — but numerically nicer to accumulate.)
     count: number of local samples (diagnostics only; 0 when unknown).
+    root:  optional (n_k, d) square root of the RAW Gram, ``rootᵀroot =
+           X_kᵀX_k`` (e.g. the R factor of QR(X_k)). It carries exactly the
+           information already in ``gram`` — no extra privacy exposure — but
+           lets the server fold the arrival into a cached Cholesky factor as
+           a rank-n_k update instead of refactoring. ``None`` (unknown root,
+           e.g. after masking) forces the refactor path.
     """
 
     client_id: int
@@ -56,6 +67,7 @@ class ClientReport:
     moment: np.ndarray
     gamma: float
     count: float = 0.0
+    root: Optional[np.ndarray] = None
 
 
 def make_report(client_id: int, x: np.ndarray, y_onehot: np.ndarray,
@@ -63,8 +75,10 @@ def make_report(client_id: int, x: np.ndarray, y_onehot: np.ndarray,
     """One client's local stage → upload, via the engine's update path."""
     eng = AnalyticEngine("numpy_f64", gamma=gamma)
     stats = eng.client_stats(x, y_onehot)
+    x2d = np.asarray(x, np.float64).reshape(-1, stats.dim)
+    root = np.linalg.qr(x2d, mode="r") if x2d.shape[0] < stats.dim else None
     return ClientReport(client_id, eng.regularized_gram(stats), stats.moment,
-                        gamma, count=float(stats.count))
+                        gamma, count=float(stats.count), root=root)
 
 
 class AFLServer:
@@ -76,14 +90,24 @@ class AFLServer:
 
     ``solve()`` factors the regularized aggregate once per submission epoch
     (and per distinct ``target_gamma``); repeated polls between arrivals
-    reuse the cached factor. Any ``submit`` invalidates the cache.
+    reuse the cached factor. A ``submit`` whose report carries a low-rank
+    ``root`` (n_k ≤ ``update_rank_budget``) folds the arrival into every
+    cached factor as an O(n_k·d²) rank update; any other submit invalidates
+    the cache and the next solve refactors.
     """
 
-    def __init__(self, dim: int, num_classes: int, gamma: float = 1.0):
+    def __init__(self, dim: int, num_classes: int, gamma: float = 1.0,
+                 *, update_rank_budget: Optional[int] = None):
         self.dim = dim
         self.num_classes = num_classes
         self.gamma = gamma
         self.engine = AnalyticEngine("numpy_f64", gamma=gamma)
+        # Rank-update crossover: past ~d/16 rows the k fused rank-1 sweeps
+        # cost as much as the BLAS refactor (measured at d=2048 in
+        # benchmarks/async_server_bench.py; small d always favors refactor).
+        self.update_rank_budget = (
+            max(1, dim // 16) if update_rank_budget is None
+            else int(update_rank_budget))
         self._stats = self.engine.init(dim, num_classes)
         self._seen: set[int] = set()
         self._factor_cache: Dict[float, Factorization] = {}
@@ -92,7 +116,10 @@ class AFLServer:
     def num_clients(self) -> int:
         return len(self._seen)
 
-    def submit(self, report: ClientReport) -> None:
+    def submit(self, report: ClientReport) -> bool:
+        """Merge one upload; returns True when the cached factors survived
+        (rank-updated in place, or nothing was cached), False when the
+        arrival invalidated them and the next solve will refactor."""
         if report.client_id in self._seen:
             raise ValueError(f"client {report.client_id} already aggregated")
         if report.gamma != self.gamma:
@@ -109,7 +136,27 @@ class AFLServer:
         )
         self._stats = self.engine.merge(self._stats, upload)
         self._seen.add(report.client_id)
+        if self._try_factor_update(report.root):
+            return True
         self._factor_cache.clear()
+        return False
+
+    def _try_factor_update(self, root: Optional[np.ndarray]) -> bool:
+        """Fold an arrival's low-rank root into every cached factor; False
+        when the cache must be invalidated instead (no root, rank past the
+        crossover, or a non-updatable pinv-fallback factor)."""
+        if not self._factor_cache:
+            return True                    # nothing cached — nothing to do
+        if root is None:
+            return False
+        root = np.asarray(root, np.float64).reshape(-1, self.dim)
+        if root.shape[0] > self.update_rank_budget:
+            return False
+        if not all(f.updatable for f in self._factor_cache.values()):
+            return False
+        self._factor_cache = {
+            key: f.rank_update(root) for key, f in self._factor_cache.items()}
+        return True
 
     def submit_many(self, reports: Iterable[ClientReport]) -> None:
         for r in reports:
@@ -149,6 +196,7 @@ class AFLServer:
             "moment": self._stats.moment.copy(),
             "seen": np.array(sorted(self._seen), np.int64),
             "gamma": np.float64(self.gamma),
+            "count": np.float64(self._stats.count),
         }
 
     @classmethod
@@ -162,7 +210,8 @@ class AFLServer:
         srv._stats = SuffStats(
             gram=np.array(state["gram"], np.float64) - k * srv.gamma * np.eye(dim),
             moment=np.array(state["moment"], np.float64),
-            count=0.0,
+            # older checkpoints predate the count field — restore as 0
+            count=float(state.get("count", 0.0)),
             clients=float(k),
         )
         srv._seen = seen
@@ -192,6 +241,8 @@ def masked_reports(reports: Sequence[ClientReport],
             masked_q[u] += mq
             masked_q[v] -= mq
     return [
-        dataclasses.replace(r, gram=g, moment=q)
+        # the mask is dense and full-rank, so a masked gram has no usable
+        # low-rank root — drop it and let the server take the refactor path
+        dataclasses.replace(r, gram=g, moment=q, root=None)
         for r, g, q in zip(reports, masked_g, masked_q)
     ]

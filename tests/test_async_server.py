@@ -1,0 +1,161 @@
+"""AsyncAFLServer: the event-loop serving path must be *numerically
+invisible* — concurrent submit/solve interleavings, rank-updated factors,
+and deferred refactors all land on exactly the weights the synchronous
+server produces from the same reports."""
+
+import asyncio
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import analytic as al
+from repro.fl.async_server import AsyncAFLServer
+from repro.fl.server import AFLServer, make_report, masked_reports
+
+D, C, GAMMA = 24, 5, 1.0
+
+
+def _reports(n_clients=10, rows_each=6, seed=0):
+    """Small per-client batches (rows ≪ d) so roots ride along."""
+    rng = np.random.default_rng(seed)
+    n = n_clients * rows_each
+    x = rng.standard_normal((n, D))
+    y = np.eye(C)[rng.integers(0, C, n)]
+    reps = [make_report(k, x[k * rows_each:(k + 1) * rows_each],
+                        y[k * rows_each:(k + 1) * rows_each], GAMMA)
+            for k in range(n_clients)]
+    return x, y, reps
+
+
+def test_concurrent_interleaving_matches_sequential():
+    """Producers submitting concurrently with a consumer polling solve():
+    every intermediate poll returns finite weights, and once drained the
+    async weights == the sequential AFLServer's on the same reports."""
+    x, y, reps = _reports(n_clients=12)
+
+    async def scenario():
+        # explicit budget: at this tiny d the default (perf crossover d//16)
+        # would refuse every fold and the update path would go untested
+        async with AsyncAFLServer(D, C, gamma=GAMMA,
+                                  update_rank_budget=6) as srv:
+            async def producer(chunk):
+                for r in chunk:
+                    await srv.submit(r)
+                    await asyncio.sleep(0)      # interleave with the consumer
+
+            async def consumer():
+                polls = []
+                while srv.num_clients < 12:
+                    if srv.num_clients:
+                        polls.append(await srv.solve())
+                    await asyncio.sleep(0)
+                return polls
+
+            _, _, polls = await asyncio.gather(
+                producer(reps[:6]), producer(reps[6:]), consumer())
+            await srv.join()
+            return await srv.solve(), polls, srv.updates
+
+    w_async, polls, updates = asyncio.run(scenario())
+    assert all(np.all(np.isfinite(p)) for p in polls)
+    assert updates > 0                        # the rank-update path ran
+
+    seq = AFLServer(D, C, gamma=GAMMA)
+    seq.submit_many(reps)
+    np.testing.assert_allclose(w_async, seq.solve(), rtol=1e-8, atol=1e-10)
+    np.testing.assert_allclose(w_async, al.ridge_solve(x, y, 0.0),
+                               rtol=1e-7, atol=1e-9)
+
+
+def test_masked_reports_bit_exact_vs_sync_path():
+    """A masked cohort through the async path aggregates to EXACTLY the
+    sync server's statistics (same reports, same order ⇒ same float adds),
+    and both match the unmasked joint solution."""
+    x, y, reps = _reports(n_clients=8, seed=3)
+    masked = masked_reports(reps, seed=7)
+    assert all(r.root is None for r in masked)   # masking kills the roots
+
+    async def scenario():
+        async with AsyncAFLServer(D, C, gamma=GAMMA) as srv:
+            await srv.submit_many(masked)
+            await srv.join()
+            return srv.server._stats, await srv.solve()
+
+    stats_async, w_async = asyncio.run(scenario())
+    sync = AFLServer(D, C, gamma=GAMMA)
+    sync.submit_many(masked)
+    np.testing.assert_array_equal(stats_async.gram, sync._stats.gram)
+    np.testing.assert_array_equal(stats_async.moment, sync._stats.moment)
+    np.testing.assert_array_equal(w_async, sync.solve())
+    np.testing.assert_allclose(w_async, al.ridge_solve(x, y, 0.0),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_deferred_refactor_policy_stays_exact():
+    """A tiny refactor_rank forces frequent deferrals; correctness must not
+    depend on which path each arrival took."""
+    x, y, reps = _reports(n_clients=12, seed=5)
+
+    async def scenario():
+        async with AsyncAFLServer(D, C, gamma=GAMMA, update_rank_budget=6,
+                                  refactor_rank=8) as srv:
+            for r in reps:
+                await srv.submit(r)
+                await srv.join()
+                await srv.solve()             # keep a live factor in play
+            return await srv.solve(), srv.updates, srv.deferred_refactors
+
+    w, updates, deferred = asyncio.run(scenario())
+    assert deferred > 0 and updates > 0       # both paths exercised
+    np.testing.assert_allclose(w, al.ridge_solve(x, y, 0.0),
+                               rtol=1e-7, atol=1e-9)
+
+
+def test_solve_multi_gamma_served_concurrently():
+    x, y, reps = _reports(n_clients=6, seed=8)
+
+    async def scenario():
+        async with AsyncAFLServer(D, C, gamma=GAMMA) as srv:
+            await srv.submit_many(reps)
+            await srv.join()
+            sweep, w0 = await asyncio.gather(
+                srv.solve_multi_gamma([0.0, 0.1, 1.0]), srv.solve())
+            return sweep, w0
+
+    sweep, w0 = asyncio.run(scenario())
+    np.testing.assert_allclose(sweep[0], w0, rtol=1e-7, atol=1e-8)
+
+    sync = AFLServer(D, C, gamma=GAMMA)
+    sync.submit_many(reps)
+    for w_a, w_s in zip(sweep, sync.solve_multi_gamma([0.0, 0.1, 1.0])):
+        np.testing.assert_allclose(w_a, w_s, rtol=1e-10, atol=1e-12)
+
+
+def test_bad_uploads_rejected_without_killing_worker():
+    _, _, reps = _reports(n_clients=4, seed=9)
+
+    async def scenario():
+        async with AsyncAFLServer(D, C, gamma=GAMMA) as srv:
+            await srv.submit_many(reps)
+            await srv.submit(reps[0])                       # duplicate id
+            await srv.submit(dataclasses.replace(reps[1], client_id=77,
+                                                 gamma=2.0))  # γ mismatch
+            await srv.submit(dataclasses.replace(
+                reps[2], client_id=[78]))   # malformed: unhashable id
+            await srv.join()
+            return srv.num_clients, srv.rejected, await srv.solve()
+
+    n, rejected, w = asyncio.run(scenario())
+    assert n == 4
+    assert len(rejected) == 3
+    assert np.all(np.isfinite(w))
+
+
+def test_solve_before_any_arrival_raises():
+    async def scenario():
+        async with AsyncAFLServer(D, C, gamma=GAMMA) as srv:
+            with pytest.raises(ValueError):
+                await srv.solve()
+
+    asyncio.run(scenario())

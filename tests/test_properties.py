@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import analytic as al, streaming
+from repro.core.engine import AnalyticEngine
 from repro.fl.partition import make_partition
 
 DIM, CLASSES = 12, 4
@@ -100,6 +101,65 @@ def test_partition_is_a_partition(k, seed, scheme):
                            seed=seed % 100)
     allidx = np.sort(np.concatenate([p for p in parts if len(p)]))
     np.testing.assert_array_equal(allidx, np.arange(300))
+
+
+def _update_case(eng, seed, n0, ranks):
+    """Base stats + a sequence of low-rank arrivals; returns the base stats
+    and the chain of (post-merge stats, delta rows)."""
+    rng = np.random.default_rng(seed)
+    x0 = rng.standard_normal((n0, DIM))
+    y0 = np.eye(CLASSES)[rng.integers(0, CLASSES, n0)]
+    base = eng.client_stats(x0, y0)
+    stats, chain = base, []
+    for k in ranks:
+        xk = rng.standard_normal((k, DIM))
+        yk = np.eye(CLASSES)[rng.integers(0, CLASSES, k)]
+        stats = eng.merge(stats, eng.client_stats(xk, yk))
+        chain.append((stats, xk))
+    return base, chain
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10**6),
+       st.lists(st.integers(1, 3), min_size=1, max_size=2),
+       st.sampled_from([0.0, 0.05, 1.0]),
+       st.sampled_from([5, 60]))
+def test_factor_update_equals_refactor_numpy(seed, ranks, target_gamma, n0):
+    """Folding random low-rank deltas into a cached factor == refactoring
+    from scratch, to f64 precision — including the γ=0 rank-deficient start
+    (n0 < d ⇒ pinv fallback ⇒ factor_update must silently refactor; the
+    chain is short enough that n0=5 stays rank-deficient throughout, so the
+    well- and ill-posed regimes never blur)."""
+    eng = AnalyticEngine("numpy_f64", gamma=1.0)
+    base, chain = _update_case(eng, seed, n0, ranks)
+    f = eng.factor(base, target_gamma=target_gamma)
+    for stats, xk in chain:
+        # max_rank forces the update branch at this tiny DIM (the default
+        # budget d//16 is a perf crossover, not a correctness bound)
+        f = eng.factor_update(f, stats, xk, target_gamma=target_gamma,
+                              max_rank=4)
+    stats_final = chain[-1][0]
+    f_ref = eng.factor(stats_final, target_gamma=target_gamma)
+    np.testing.assert_allclose(
+        eng.factor_solve(f, stats_final.moment),
+        eng.factor_solve(f_ref, stats_final.moment), rtol=1e-9, atol=1e-9)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10**6), st.integers(1, 3),
+       st.sampled_from([0.05, 1.0]))
+def test_factor_update_equals_refactor_jax_f32(seed, k, target_gamma):
+    """Same invariant on the device backend at f32 tolerance."""
+    eng = AnalyticEngine("jax", gamma=1.0)
+    base, [(stats, xk)] = _update_case(eng, seed, 40, [k])
+    f0 = eng.factor(base, target_gamma=target_gamma)
+    f_upd = eng.factor_update(f0, stats, xk, target_gamma=target_gamma,
+                              max_rank=4)
+    f_ref = eng.factor(stats, target_gamma=target_gamma)
+    np.testing.assert_allclose(
+        np.asarray(eng.factor_solve(f_upd, stats.moment)),
+        np.asarray(eng.factor_solve(f_ref, stats.moment)),
+        rtol=1e-4, atol=1e-4)
 
 
 @settings(max_examples=10, deadline=None)

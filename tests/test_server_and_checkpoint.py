@@ -56,6 +56,42 @@ class TestAFLServer:
         with pytest.raises(ValueError):
             srv.submit(bad)
 
+    def test_state_roundtrip_preserves_count(self):
+        """state()/from_state() used to drop the sample count — restored
+        servers reported count=0.0. The full round trip must be lossless."""
+        x, y, reps = _reports()
+        srv = AFLServer(24, 5, gamma=1.0)
+        srv.submit_many(reps[:6])
+        assert float(srv._stats.count) == 300.0   # 6/8 of 400
+        srv2 = AFLServer.from_state(srv.state())
+        assert float(srv2._stats.count) == float(srv._stats.count)
+        np.testing.assert_array_equal(srv2.state()["count"],
+                                      srv.state()["count"])
+        # legacy checkpoints without the field still load (count falls to 0)
+        legacy = {k: v for k, v in srv.state().items() if k != "count"}
+        assert float(AFLServer.from_state(legacy)._stats.count) == 0.0
+
+    def test_low_rank_submit_updates_cached_factor(self):
+        """An arrival with a low-rank root folds into the cached factor
+        instead of invalidating it — and the next solve is still exact."""
+        x, y, reps = _reports(n_clients=8, n=400, d=24)  # 50 rows ≥ d → dense
+        srv = AFLServer(24, 5, gamma=1.0, update_rank_budget=6)
+        srv.submit_many(reps[:7])
+        srv.solve()
+        fact = srv._factor_cache[0.0]
+        assert fact.updatable
+        # a straggler with a genuinely small batch: n_k=4 < d ⇒ root rides
+        xs = np.random.default_rng(5).standard_normal((4, 24))
+        ys = np.eye(5)[[0, 1, 2, 3]]
+        late = make_report(99, xs, ys, 1.0)
+        assert late.root is not None and late.root.shape == (4, 24)
+        assert srv.submit(late)                   # cache survived
+        assert srv._factor_cache[0.0] is not fact  # ...but was updated
+        x_all = np.concatenate([x[:350], xs])
+        y_all = np.concatenate([y[:350], ys])
+        np.testing.assert_allclose(srv.solve(), al.ridge_solve(x_all, y_all, 0.0),
+                                   rtol=1e-8, atol=1e-9)
+
     def test_masked_aggregation_exact_and_hiding(self):
         x, y, reps = _reports()
         masked = masked_reports(reps, seed=7)
@@ -127,6 +163,7 @@ class TestCheckpoint:
         srv.submit_many(reps[:4])
         ckpt.save_server(tmp_path / "srv", srv)
         srv2 = ckpt.load_server(tmp_path / "srv")
+        assert float(srv2._stats.count) == float(srv._stats.count) == 200.0
         srv2.submit_many(reps[4:])           # resume after "restart"
         w_joint = al.ridge_solve(x, y, 0.0)
         np.testing.assert_allclose(srv2.solve(), w_joint, rtol=1e-8, atol=1e-9)
