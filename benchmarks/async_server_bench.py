@@ -26,8 +26,8 @@ import time
 
 import numpy as np
 
-from repro.fl.async_server import AsyncAFLServer
-from repro.fl.server import AFLServer, make_report
+from repro.fl import AsyncAFLServer
+from repro.fl import AFLServer, make_report
 
 from benchmarks.common import print_table
 

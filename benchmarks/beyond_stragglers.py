@@ -13,7 +13,7 @@ import numpy as np
 
 from repro.fl.afl import evaluate
 from repro.fl.partition import make_partition
-from repro.fl.server import AFLServer, make_report, masked_reports
+from repro.fl import AFLServer, make_report, masked_reports
 
 from benchmarks.common import feature_data, print_table
 

@@ -17,7 +17,7 @@ import time
 import numpy as np
 
 from repro.core.engine import AnalyticEngine
-from repro.fl.server import AFLServer, make_report
+from repro.fl import AFLServer, make_report
 
 from benchmarks.common import print_table
 

@@ -5,6 +5,17 @@ Paper structure: γ=0 breaks for large K (rank-deficient local Grams); without
 RI the accumulated KγI bias costs accuracy as γ grows; with RI every (γ>0, K)
 cell lands on the same joint-solution accuracy.
 
+The whole ablation now runs off **one eigendecomposition per K** via
+``AFLServer.solve_multi_gamma`` (engine lazy-γ semantics): the w/ RI cell is
+the solve at target ridge 0, and the w/o RI cell at table γ is the solve at
+effective ridge K·γ (Σ C_k^r = C_raw + KγI, eq 15) — so every cell is a
+d²·C spectral solve instead of its own Cholesky (or, previously, its own
+full pairwise run). The per-K speedup vs per-cell factorizations is recorded
+in the results JSON, together with a denser 64-point γ grid (the server-side
+cross-validation endpoint) where the one-eigh amortization pays off hardest.
+The γ=0 w/o-RI breakdown stays a paper-literal pairwise probe — that failure
+mode (inverting singular local Grams) only exists on Algorithm 1's path.
+
 Honesty note: on our well-conditioned synthetic features the KγI shrinkage is
 near-isotropic, so argmax accuracy barely moves even at γ=100 — the paper's
 9-point drop needs the ill-conditioned spectra of real CNN features. The bias
@@ -14,49 +25,104 @@ still shows the γ=0 rank-deficiency failure and the w/ RI identity.
 
 from __future__ import annotations
 
+import numpy as np
+
 from repro.config import FLConfig
-from repro.fl import afl
+from repro.fl import AFLClient, AFLServer, afl
+from repro.fl.partition import make_partition
 
 from benchmarks.common import feature_data, print_table
 
 GAMMAS = [0.0, 0.1, 1.0, 10.0, 100.0]
 
 
+def _best_of(fn, repeat=5):
+    """min-of-N wall time — these solves are ms-scale at d=128, so single
+    measurements are scheduler noise."""
+    import time
+
+    best, out = float("inf"), None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
 def run(quick: bool = False) -> list[dict]:
     train, test = feature_data()
+    x_te = test.x.astype(np.float64)
+    y_onehot = np.eye(train.num_classes, dtype=np.float64)[train.y]
     ks = [100, 400] if quick else [100, 500, 1000]
     rows, out = [], []
     for k in ks:
+        parts = make_partition(train.y, k, "iid", seed=0)
+        srv = AFLServer(train.x.shape[1], train.num_classes, gamma=1.0)
+        for cid, idx in enumerate(parts):
+            srv.submit(AFLClient(cid, gamma=1.0).local_stage(
+                train.x[idx].astype(np.float64), y_onehot[idx]))
+
+        # every cell from ONE eigendecomposition: target 0 is the w/ RI
+        # restore; target K·γ is the biased no-RI aggregate of table γ
+        targets = [0.0] + [k * g for g in GAMMAS if g > 0.0]
+
+        def per_cell(ts):
+            # per-cell reference: one independent Cholesky solve per target
+            # (engine path, no factor-cache retention — the apples-to-apples
+            # "each cell its own factorization" baseline)
+            return [srv.engine.solve(srv._stats, target_gamma=t) for t in ts]
+
+        _, t_cells = _best_of(lambda: per_cell(targets))
+        ws, t_sweep = _best_of(lambda: srv.solve_multi_gamma(targets))
+        accs = [afl.evaluate(w, x_te, test.y) for w in ws]
+        acc_ri, acc_no_ri = accs[0], dict(zip([g for g in GAMMAS if g > 0.0],
+                                              accs[1:]))
+
+        # dense server-side cross-validation grid: the amortization regime
+        grid = list(np.logspace(-3, 3, 64))
+        _, t_grid_cells = _best_of(lambda: per_cell(grid))
+        _, t_grid_sweep = _best_of(lambda: srv.solve_multi_gamma(grid))
+
         cells = [f"K={k}"]
         for gamma in GAMMAS:
-            accs = {}
-            for use_ri in (False, True):
-                if gamma == 0.0:
-                    if use_ri:
-                        accs[use_ri] = None
-                        continue
-                    try:
-                        # paper Algorithm 1 (pairwise recursion): γ=0 with
-                        # N_k < d inverts singular Grams → the breakdown the
-                        # paper reports. (The production sufficient-stats
-                        # path is exact even here — see Table A.1 note.)
-                        fl = FLConfig(num_clients=k, gamma=0.0, use_ri=False,
-                                      partition="iid")
-                        accs[use_ri] = afl.run_afl(train, test, fl,
-                                                   pairwise=True).accuracy
-                    except Exception:
-                        accs[use_ri] = float("nan")
-                else:
-                    fl = FLConfig(num_clients=k, gamma=gamma, use_ri=use_ri,
+            if gamma == 0.0:
+                try:
+                    # paper Algorithm 1 (pairwise recursion): γ=0 with
+                    # N_k < d inverts singular Grams → the breakdown the
+                    # paper reports. (The production sufficient-stats
+                    # path is exact even here — see Table A.1 note.)
+                    fl = FLConfig(num_clients=k, gamma=0.0, use_ri=False,
                                   partition="iid")
-                    accs[use_ri] = afl.run_afl(train, test, fl,
-                                               pairwise=True).accuracy
-            wo = "N/A" if accs[False] is None else f"{accs[False]:.4f}"
-            w = "N/A" if accs[True] is None else f"{accs[True]:.4f}"
-            cells.append(f"{wo}/{w}")
-            out.append(dict(clients=k, gamma=gamma,
-                            acc_no_ri=accs[False], acc_ri=accs[True]))
+                    wo = afl.run_afl(train, test, fl, pairwise=True).accuracy
+                except Exception:
+                    wo = float("nan")
+                w = None
+            else:
+                wo, w = acc_no_ri[gamma], acc_ri
+            cells.append(f"{'N/A' if wo is None else f'{wo:.4f}'}/"
+                         f"{'N/A' if w is None else f'{w:.4f}'}")
+            out.append(dict(clients=k, gamma=gamma, acc_no_ri=wo, acc_ri=w))
         rows.append(cells)
+        out.append(dict(
+            clients=k, timing=dict(
+                targets=len(targets),
+                per_cell_seconds=t_cells, multi_gamma_seconds=t_sweep,
+                speedup=t_cells / t_sweep,
+                grid_points=len(grid),
+                grid_per_cell_seconds=t_grid_cells,
+                grid_multi_gamma_seconds=t_grid_sweep,
+                grid_speedup=t_grid_cells / t_grid_sweep,
+                note="min-of-5 wall times, host BLAS; at d=128 each "
+                     "per-cell solve pays fixed BLAS-call overhead, so the "
+                     "sweep's win here is overhead amortization on top of "
+                     "the d3-vs-d2C algebra (see engine_bench for the "
+                     "large-d algebraic ratio)")))
     print_table("Table 3 analogue — RI ablation (cells: w/o RI / w/ RI)",
                 ["", *(f"g={g}" for g in GAMMAS)], rows)
+    for entry in out:
+        if "timing" in entry:
+            t = entry["timing"]
+            print(f"  K={entry['clients']}: multi-γ sweep {t['targets']} "
+                  f"targets {t['speedup']:.2f}x vs per-cell; "
+                  f"{t['grid_points']}-point grid {t['grid_speedup']:.2f}x")
     return out

@@ -16,8 +16,25 @@ import numpy as np
 from repro.config import FLConfig
 from repro.configs.registry import get_config
 from repro.data import synthetic as D
-from repro.fl import afl, baselines
+from repro.fl import AFLClient, AFLServer, ClientReport, afl, baselines
+from repro.fl.partition import make_partition
 from repro.models import transformer as T
+
+
+def afl_over_wire(train, test, fl: FLConfig) -> float:
+    """The AFL column through the canonical API: one AFLClient local stage
+    per client, each report crossing the wire as validated bytes."""
+    y_onehot = np.eye(train.num_classes)[train.y]
+    parts = make_partition(train.y, fl.num_clients, fl.partition,
+                           alpha=fl.alpha,
+                           shards_per_client=fl.shards_per_client,
+                           seed=fl.seed)
+    server = AFLServer(train.x.shape[1], train.num_classes, gamma=fl.gamma)
+    for cid, idx in enumerate(parts):
+        payload = AFLClient(cid, gamma=fl.gamma).local_stage(
+            train.x[idx], y_onehot[idx]).to_bytes()
+        server.submit(ClientReport.from_bytes(payload))
+    return afl.evaluate(server.solve(), test.x, test.y)
 
 
 def main() -> None:
@@ -49,8 +66,8 @@ def main() -> None:
                       ("NIID-2 s=2", dict(partition="niid2", shards_per_client=2))]:
         fl = FLConfig(num_clients=args.clients, **kw)
         fa = baselines.run_gradient_fl(train, test, fl, rounds=30)
-        res = afl.run_afl(train, test, fl)
-        print(f"{label:16s} {fa.accuracy:12.4f} {res.accuracy:12.4f}")
+        acc = afl_over_wire(train, test, fl)
+        print(f"{label:16s} {fa.accuracy:12.4f} {acc:12.4f}")
     print("\nAFL column is constant by construction (AA law); FedAvg drifts "
           "with heterogeneity.")
 

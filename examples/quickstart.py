@@ -1,36 +1,45 @@
-"""Quickstart: AFL in ~40 lines — the paper's Algorithm 1 end to end.
+"""Quickstart: AFL through the canonical client/coordinator API.
 
 Trains a federated linear probe over frozen features with K=100 clients under
-an extreme non-IID split, in ONE local epoch and ONE aggregation round, and
-checks the result is *identical* to training on the centralized dataset
-(the paper's invariance-to-data-partitioning property).
+an extreme non-IID split, in ONE local epoch and ONE aggregation round — each
+client's upload crossing the "network" as canonical wire bytes — and checks
+the result is *identical* to training on the centralized dataset (the paper's
+invariance-to-data-partitioning property).
 
   PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
 
-from repro.config import FLConfig
 from repro.data import synthetic as D
-from repro.fl import afl
+from repro.fl import AFLClient, AFLServer, ClientReport
+from repro.fl.afl import evaluate, joint_ridge
+from repro.fl.partition import make_partition
 
 # 1. A dataset of frozen-backbone features (stand-in for ResNet/CIFAR).
 ds = D.gaussian_mixture(n=10_000, dim=256, num_classes=50, separation=0.5)
 train, test = D.train_test_split(ds, test_frac=0.2)
+y_onehot = np.eye(train.num_classes)[train.y]
 
 # 2. The centralized reference: one ridge solve on all data (γ→0).
-w_joint, acc_joint = afl.joint_ridge(train, test, gamma=0.0)
+w_joint, acc_joint = joint_ridge(train, test, gamma=0.0)
 print(f"joint (centralized) accuracy: {acc_joint:.4f}")
 
-# 3. AFL: 100 clients, pathological non-IID split (Dirichlet α=0.01),
-#    one-epoch local stages + single-round aggregation + RI restore.
-fl = FLConfig(num_clients=100, gamma=1.0, partition="niid1", alpha=0.01)
-res = afl.run_afl(train, test, fl)
-print(f"AFL accuracy (K=100, α=0.01): {res.accuracy:.4f} "
-      f"in {res.train_seconds:.2f}s")
+# 3. AFL: 100 clients under a pathological non-IID split (Dirichlet α=0.01).
+#    Each client runs its one-epoch local stage and uploads ONE report —
+#    serialized to bytes, validated on ingest — to the coordinator.
+parts = make_partition(train.y, 100, "niid1", alpha=0.01, seed=0)
+server = AFLServer(dim=256, num_classes=50, gamma=1.0)
+for cid, idx in enumerate(parts):
+    payload = AFLClient(cid, gamma=1.0).local_stage(
+        train.x[idx], y_onehot[idx]).to_bytes()
+    server.submit(ClientReport.from_bytes(payload))
+w_afl = server.solve()                    # single round, RI-restored
+acc = evaluate(w_afl, test.x, test.y)
+print(f"AFL accuracy (K={server.num_clients}, α=0.01): {acc:.4f}")
 
 # 4. The paper's claim: exact equivalence, not approximation.
-dev = np.abs(res.weight - w_joint).max()
+dev = np.abs(w_afl - w_joint).max()
 print(f"max |W_afl - W_joint| = {dev:.2e}")
-assert dev < 1e-6 and abs(res.accuracy - acc_joint) < 1e-12
+assert dev < 1e-6 and abs(acc - acc_joint) < 1e-12
 print("AFL == joint training, under any partition. QED.")

@@ -10,9 +10,10 @@ the head/statistics scale this framework checkpoints — the frozen backbone is
 reproducible from its seed and is usually *not* checkpointed, which is itself
 an AFL property: the only trained state is (C_agg, Q_agg, W)).
 
-``save_server`` / ``load_server`` round-trip an :class:`repro.fl.server.
-AFLServer`, enabling the straggler workflow: checkpoint mid-aggregation,
-restart, late clients keep submitting.
+``save_server`` / ``load_server`` round-trip any :class:`repro.fl.api.
+Coordinator` state (all coordinator kinds share one checkpoint schema),
+enabling the straggler workflow: checkpoint mid-aggregation, restart — as
+the same kind or a different one — and late clients keep submitting.
 """
 
 from __future__ import annotations
@@ -85,13 +86,30 @@ def restore(path, like: Any = None) -> Any:
 
 
 def save_server(path, server, metadata: Optional[dict] = None) -> None:
+    """Checkpoint a coordinator (``state()`` speaks one shared schema).
+
+    For the async coordinator ``state()`` is a coroutine — checkpoint it
+    from its event loop: ``ckpt.save(path, await server.state())``.
+    """
+    import inspect
+
+    state = server.state()
+    if inspect.isawaitable(state):
+        state.close()
+        raise TypeError(
+            "async coordinator state() is a coroutine; checkpoint it from "
+            "the event loop: ckpt.save(path, await server.state())")
     meta = dict(metadata or {})
     meta["kind"] = "afl_server"
-    save(path, server.state(), metadata=meta)
+    save(path, state, metadata=meta)
 
 
-def load_server(path):
-    from repro.fl.server import AFLServer
+def load_server(path, cls=None):
+    """Restore a coordinator: :class:`repro.fl.api.AFLServer` by default, or
+    any ``cls`` with the protocol's ``from_state`` (e.g. ShardedCoordinator,
+    AsyncAFLServer)."""
+    if cls is None:
+        from repro.fl.api import AFLServer as cls
 
     state = restore(path)
-    return AFLServer.from_state(state)
+    return cls.from_state(state)

@@ -3,7 +3,7 @@
 Every path in this repo that touches the paper's statistics→solve pipeline —
 the host f64 reference (`core.analytic`), the device streaming accumulator
 (`core.streaming`), the one-collective federated solve (`core.distributed`),
-and the incremental serving server (`fl.server`) — routes through this module.
+and the serving coordinators (`fl.api`) — routes through this module.
 The math appears exactly once:
 
   * ``SuffStats``: the sufficient statistics of a (partial) analytic
@@ -25,7 +25,7 @@ Backends:
 
 The engine also exposes an explicit factorization handle
 (:meth:`AnalyticEngine.factor` / :meth:`AnalyticEngine.factor_solve`) so hot
-serving paths (``fl.server.AFLServer``) can cache the d³ Cholesky across
+serving paths (``fl.api.AFLServer``) can cache the d³ Cholesky across
 repeated ``solve()`` polls and pay only the d²·C triangular solves. The
 handle is *rank-updatable* (:meth:`Factorization.rank_update` /
 :meth:`AnalyticEngine.factor_update`): a low-rank client arrival folds into

@@ -1,0 +1,26 @@
+"""Federated-learning surface: one client/coordinator API (see fl/api.py).
+
+Canonical names live in :mod:`repro.fl.api` and are re-exported here;
+``repro.fl.server`` is a one-release deprecation shim over the same objects.
+Driver loops (:mod:`repro.fl.afl`), gradient baselines, and partitioners stay
+as submodules.
+"""
+
+from repro.fl.api import (AFLClient, AFLServer, ClientReport, Coordinator,
+                          GammaSweep, SCHEMA_VERSION, ShardedCoordinator,
+                          evaluate_weight, make_report, masked_reports)
+from repro.fl.async_server import AsyncAFLServer
+
+__all__ = [
+    "AFLClient",
+    "AFLServer",
+    "AsyncAFLServer",
+    "ClientReport",
+    "Coordinator",
+    "GammaSweep",
+    "SCHEMA_VERSION",
+    "ShardedCoordinator",
+    "evaluate_weight",
+    "make_report",
+    "masked_reports",
+]

@@ -18,6 +18,7 @@ import numpy as np
 from repro.config import FLConfig
 from repro.core import analytic as al
 from repro.data.synthetic import Dataset
+from repro.fl.api import AFLClient, AFLServer, evaluate_weight
 from repro.fl.partition import make_partition
 
 
@@ -40,8 +41,7 @@ def embed_with_backbone(backbone_fn: Callable, x: np.ndarray,
 
 
 def evaluate(weight: np.ndarray, x: np.ndarray, y: np.ndarray) -> float:
-    pred = np.argmax(x @ weight, axis=-1)
-    return float(np.mean(pred == y))
+    return evaluate_weight(weight, x, y)
 
 
 def run_afl(
@@ -59,6 +59,13 @@ def run_afl(
     ``feature_map``: optional shared non-linear projection φ applied to the
     (backbone) features before the analytic head (paper §5 / core.features) —
     the regression stays linear in φ-space, so every AFL invariance holds.
+
+    The production path (``use_ri=True``, ``pairwise=False``) drives the
+    canonical API: one :class:`~repro.fl.api.AFLClient` local stage per
+    client, one :class:`~repro.fl.api.ClientReport` submitted to an
+    :class:`~repro.fl.api.AFLServer`, one solve. The paper-literal
+    ``pairwise`` recursion and the no-RI ablation route through
+    :mod:`repro.core.analytic` (Table 3 / A.1).
     """
     t0 = time.perf_counter()
     x_tr, x_te = train.x, test.x
@@ -73,14 +80,20 @@ def run_afl(
     parts = make_partition(train.y, fl.num_clients, fl.partition,
                            alpha=fl.alpha, shards_per_client=fl.shards_per_client,
                            seed=fl.seed)
-    updates = []
-    for idx in parts:
-        # empty clients still upload (0-solution, γI Gram) — the AA law and
-        # the RI restore handle them exactly.
-        xi = x_tr[idx].astype(np.float64)
-        yi = y_tr[idx]
-        updates.append(al.local_stage(xi, yi, fl.gamma))
-    weight = al.afl_aggregate(updates, use_ri=fl.use_ri, pairwise=pairwise)
+    if fl.use_ri and not pairwise:
+        server = AFLServer(x_tr.shape[1], train.num_classes, gamma=fl.gamma)
+        for cid, idx in enumerate(parts):
+            # empty clients still upload (γI Gram, 0 moment) — the AA law
+            # and the RI restore handle them exactly.
+            server.submit(AFLClient(cid, gamma=fl.gamma).local_stage(
+                x_tr[idx].astype(np.float64), y_tr[idx]))
+        weight = server.solve(target_gamma=0.0)
+    else:
+        # paper-literal ablation path: per-client (Ŵ_k^r, C_k^r) uploads,
+        # AA-law recursion and/or the biased no-RI aggregate
+        updates = [al.local_stage(x_tr[idx].astype(np.float64), y_tr[idx],
+                                  fl.gamma) for idx in parts]
+        weight = al.afl_aggregate(updates, use_ri=fl.use_ri, pairwise=pairwise)
     dt = time.perf_counter() - t0
     acc = evaluate(weight, x_te.astype(np.float64), test.y)
     return AFLResult(weight, acc, dt, fl.num_clients, [len(p) for p in parts])

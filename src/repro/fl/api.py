@@ -1,0 +1,711 @@
+"""The one AFL client/coordinator API.
+
+The paper's whole pitch is a *single-round* protocol — one upload per client,
+one aggregation — and this module is that protocol's single surface:
+
+  * :class:`ClientReport` — the canonical, versioned wire format of a client
+    upload: regularized sufficient statistics (C_k^r, Q_k), the sample count,
+    and an optional low-rank root of the raw Gram. ``to_bytes()`` /
+    ``from_bytes()`` serialize it (configurable dtype, optional f32-root
+    compression, CRC-checked schema validation on ingest) so a report can
+    actually cross a network instead of living as three incompatible
+    in-process payloads.
+  * :class:`AFLClient` — the one-epoch local stage: (optionally) embed with a
+    frozen backbone / feature map, fold batches into engine ``SuffStats``,
+    track a low-rank QR root, and emit one :class:`ClientReport`.
+  * :class:`Coordinator` — the protocol every server-side implementation
+    satisfies: ``submit / submit_many / solve / solve_multi_gamma /
+    sweep(gammas, holdout) / state / from_state / num_clients``. Three
+    implementations ship: :class:`AFLServer` (synchronous, cached rank-
+    updatable Cholesky), :class:`~repro.fl.async_server.AsyncAFLServer`
+    (event-loop serving over the same seam), and :class:`ShardedCoordinator`
+    (the Gram pytree sharded over a jax mesh via
+    ``core.distributed.make_federated_solve`` — the K≥1000-client backend).
+
+All aggregation math routes through :class:`repro.core.engine.AnalyticEngine`;
+this module owns only protocol-level bookkeeping (ids, γ checks, caches,
+shard placement). ``repro.fl.server`` remains as a one-release deprecation
+shim over these names.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import struct
+import zlib
+from typing import (Any, Callable, Dict, Iterable, List, Optional, Protocol,
+                    Sequence, Tuple, runtime_checkable)
+
+import numpy as np
+
+from repro.core.engine import AnalyticEngine, Factorization, SuffStats
+
+__all__ = [
+    "SCHEMA_VERSION",
+    "ClientReport",
+    "AFLClient",
+    "make_report",
+    "masked_reports",
+    "evaluate_weight",
+    "GammaSweep",
+    "Coordinator",
+    "AFLServer",
+    "ShardedCoordinator",
+]
+
+# ---------------------------------------------------------------------------
+# Canonical wire format
+# ---------------------------------------------------------------------------
+
+SCHEMA_VERSION = 1
+_MAGIC = b"AFLR"
+_WIRE_DTYPES = {"float64": np.float64, "float32": np.float32}
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientReport:
+    """What one client uploads: regularized sufficient statistics.
+
+    gram:   C_k^r = X_kᵀX_k + γI   (d, d)
+    moment: Q_k   = X_kᵀY_k        (d, C)
+    (Equivalent information to the paper's (Ŵ_k^r, C_k^r) upload —
+    Q_k = C_k^r Ŵ_k^r — but numerically nicer to accumulate.)
+    count: number of local samples (diagnostics only; 0 when unknown).
+    root:  optional (n_k, d) square root of the RAW Gram, ``rootᵀroot =
+           X_kᵀX_k`` (e.g. the R factor of QR(X_k)). It carries exactly the
+           information already in ``gram`` — no extra privacy exposure — but
+           lets a coordinator fold the arrival into a cached Cholesky factor
+           as a rank-n_k update instead of refactoring. ``None`` (unknown
+           root, e.g. after masking) forces the refactor path.
+
+    Wire format (``to_bytes`` / ``from_bytes``), schema version 1::
+
+        b"AFLR" | u32 header_len | header JSON | gram | moment | [root]
+
+    Arrays travel C-order in the header-declared dtype; the header carries a
+    CRC-32 of the payload, so a flipped or truncated byte is rejected on
+    ingest (``ValueError``), as are unknown versions/dtypes and inconsistent
+    shapes. The default encoding (float64, uncompressed root) round-trips
+    **losslessly**; ``dtype=np.float32`` halves the wire size at ~1e-7
+    relative error, and ``compress_root=True`` stores only the root in f32
+    (the folded rootᵀ·root then deviates by ≲1e-6 relative — documented
+    tolerance for the rank-update path; gram/moment stay exact).
+    """
+
+    client_id: int
+    gram: np.ndarray
+    moment: np.ndarray
+    gamma: float
+    count: float = 0.0
+    root: Optional[np.ndarray] = None
+
+    def to_bytes(self, *, dtype=np.float64, compress_root: bool = False) -> bytes:
+        """Serialize to the canonical wire format (see class docstring)."""
+        dt = np.dtype(dtype)
+        if dt.name not in _WIRE_DTYPES:
+            raise ValueError(f"unsupported wire dtype {dt.name!r} "
+                             f"(one of {sorted(_WIRE_DTYPES)})")
+        gram = np.ascontiguousarray(np.asarray(self.gram, dt))
+        if gram.ndim != 2 or gram.shape[0] != gram.shape[1]:
+            raise ValueError(f"gram must be square, got {gram.shape}")
+        moment = np.ascontiguousarray(np.asarray(self.moment, dt))
+        if moment.ndim != 2 or moment.shape[0] != gram.shape[0]:
+            raise ValueError(f"moment shape {moment.shape} does not match "
+                             f"dim {gram.shape[0]}")
+        root = None
+        root_dt = np.dtype(np.float32) if compress_root else dt
+        if self.root is not None:
+            root = np.ascontiguousarray(
+                np.asarray(self.root, root_dt).reshape(-1, gram.shape[0]))
+        payload = gram.tobytes() + moment.tobytes() + (
+            root.tobytes() if root is not None else b"")
+        header = {
+            "version": SCHEMA_VERSION,
+            "client_id": int(self.client_id),
+            "gamma": float(self.gamma),
+            "count": float(self.count),
+            "dtype": dt.name,
+            "dim": int(gram.shape[0]),
+            "num_classes": int(moment.shape[1]),
+            "root_dtype": root_dt.name if root is not None else None,
+            "root_rows": int(root.shape[0]) if root is not None else None,
+            "crc32": zlib.crc32(payload),
+        }
+        hb = json.dumps(header, sort_keys=True).encode("utf-8")
+        return _MAGIC + struct.pack("<I", len(hb)) + hb + payload
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "ClientReport":
+        """Parse + validate a wire report; arrays land host-f64.
+
+        Raises ``ValueError`` for anything that is not a well-formed,
+        checksum-clean, schema-consistent version-1 report.
+        """
+        data = bytes(data)
+        if len(data) < len(_MAGIC) + 4 or data[: len(_MAGIC)] != _MAGIC:
+            raise ValueError("not an AFL client report (bad magic)")
+        (hlen,) = struct.unpack("<I", data[len(_MAGIC): len(_MAGIC) + 4])
+        body = len(_MAGIC) + 4
+        if len(data) < body + hlen:
+            raise ValueError("truncated report header")
+        try:
+            header = json.loads(data[body: body + hlen].decode("utf-8"))
+        except (UnicodeDecodeError, json.JSONDecodeError) as e:
+            raise ValueError(f"corrupt report header: {e}") from None
+        if header.get("version") != SCHEMA_VERSION:
+            raise ValueError(
+                f"unsupported report schema version {header.get('version')!r}"
+                f" (expected {SCHEMA_VERSION})")
+        try:
+            dt = _WIRE_DTYPES[header["dtype"]]
+            dim, num_classes = int(header["dim"]), int(header["num_classes"])
+            root_rows = header["root_rows"]
+            root_dt = (_WIRE_DTYPES[header["root_dtype"]]
+                       if root_rows is not None else None)
+            client_id = int(header["client_id"])
+            gamma, count = float(header["gamma"]), float(header["count"])
+            crc = int(header["crc32"])
+        except (KeyError, TypeError, ValueError) as e:
+            raise ValueError(f"malformed report header: {e}") from None
+        if dim <= 0 or num_classes <= 0 or (
+                root_rows is not None and root_rows < 0):
+            raise ValueError("malformed report header: non-positive shapes")
+        isz = np.dtype(dt).itemsize
+        n_gram, n_mom = dim * dim * isz, dim * num_classes * isz
+        n_root = (root_rows * dim * np.dtype(root_dt).itemsize
+                  if root_rows is not None else 0)
+        payload = data[body + hlen:]
+        if len(payload) != n_gram + n_mom + n_root:
+            raise ValueError(
+                f"payload length {len(payload)} does not match header shapes")
+        if zlib.crc32(payload) != crc:
+            raise ValueError("report payload failed its CRC-32 check")
+        gram = np.frombuffer(payload, dt, dim * dim).reshape(dim, dim)
+        moment = np.frombuffer(
+            payload, dt, dim * num_classes, offset=n_gram
+        ).reshape(dim, num_classes)
+        root = None
+        if root_rows is not None:
+            root = np.frombuffer(
+                payload, root_dt, root_rows * dim, offset=n_gram + n_mom
+            ).reshape(root_rows, dim).astype(np.float64)
+        if not (np.isfinite(gram).all() and np.isfinite(moment).all()
+                and (root is None or np.isfinite(root).all())
+                and np.isfinite(gamma) and np.isfinite(count)):
+            raise ValueError("report carries non-finite statistics")
+        return cls(client_id, gram.astype(np.float64),
+                   moment.astype(np.float64), gamma, count=count, root=root)
+
+
+# ---------------------------------------------------------------------------
+# The client side
+# ---------------------------------------------------------------------------
+
+
+class AFLClient:
+    """One client's local stage, start to finish.
+
+    ``update()`` folds (token or feature) batches — embedding them first when
+    a frozen ``backbone_fn`` / ``feature_map`` is configured — into engine
+    :class:`~repro.core.engine.SuffStats`; ``report()`` emits the single
+    canonical :class:`ClientReport` (regularized Gram, moment, sample count,
+    and — while the local row count stays below ``d`` — the low-rank QR root
+    of the raw Gram that lets coordinators rank-update cached factors).
+
+    >>> report = AFLClient(client_id=3, gamma=1.0).local_stage(x, y_onehot)
+    >>> payload = report.to_bytes()            # ...crosses the network...
+    >>> server.submit(ClientReport.from_bytes(payload))
+
+    The engine backend is pluggable: ``numpy_f64`` (default, paper-faithful
+    host arithmetic) or ``jax`` (device accumulation, optionally through the
+    Pallas Gram kernel; pass ``dtype=jnp.float64`` under ``jax_enable_x64``
+    for f64-on-device).
+    """
+
+    def __init__(
+        self,
+        client_id: int,
+        gamma: float = 1.0,
+        *,
+        backbone_fn: Optional[Callable] = None,
+        feature_map: Optional[Callable] = None,
+        backend: str = "numpy_f64",
+        dtype=None,
+        use_kernel: bool = False,
+        embed_batch: int = 256,
+    ):
+        self.client_id = client_id
+        self.gamma = float(gamma)
+        self.backbone_fn = backbone_fn
+        self.feature_map = feature_map
+        self.embed_batch = int(embed_batch)
+        self.engine = AnalyticEngine(
+            backend, gamma=gamma, dtype=dtype, use_kernel=use_kernel)
+        self._stats: Optional[SuffStats] = None
+        self._root_blocks: Optional[List[np.ndarray]] = []
+        self._rows = 0
+
+    def _embed(self, x):
+        if self.backbone_fn is not None:
+            x = np.asarray(x)
+            b = self.embed_batch
+            x = np.concatenate(
+                [np.asarray(self.backbone_fn(x[i: i + b]))
+                 for i in range(0, len(x), b)], 0) if len(x) else x
+        if self.feature_map is not None:
+            x = np.asarray(self.feature_map(np.asarray(x)))
+        return x
+
+    def update(self, x, y_onehot) -> "AFLClient":
+        """Fold one batch of local data into the running statistics."""
+        x = self._embed(x)
+        dim = int(np.asarray(x.shape)[-1])
+        classes = int(np.asarray(y_onehot.shape)[-1])
+        if self._stats is None:
+            self._stats = self.engine.init(dim, classes)
+        if self._stats.dim != dim:
+            raise ValueError(
+                f"batch dim {dim} != client dim {self._stats.dim}")
+        self._stats = self.engine.update(self._stats, x, y_onehot)
+        n = int(np.prod(np.asarray(x.shape)[:-1]))
+        self._rows += n
+        if self._root_blocks is not None:
+            if self._rows >= dim:
+                # a ≥ d-row root is no cheaper than a refactor — stop tracking
+                self._root_blocks = None
+            elif n:
+                self._root_blocks.append(
+                    np.asarray(x, np.float64).reshape(-1, dim))
+        return self
+
+    def report(self) -> ClientReport:
+        """Finish the local stage: one canonical report (host f64)."""
+        if self._stats is None:
+            raise ValueError("no local data folded in (call update first)")
+        stats = self.engine.finalize_client(self._stats)
+        gram = np.asarray(self.engine.regularized_gram(stats), np.float64)
+        moment = np.asarray(stats.moment, np.float64)
+        root = None
+        if self._root_blocks is not None:
+            rows = (np.concatenate(self._root_blocks, 0) if self._root_blocks
+                    else np.zeros((0, stats.dim)))
+            root = np.linalg.qr(rows, mode="r") if len(rows) else rows
+        return ClientReport(self.client_id, gram, moment, self.gamma,
+                            count=float(stats.count), root=root)
+
+    def local_stage(self, x, y_onehot) -> ClientReport:
+        """One-shot convenience: ``update(x, y)`` then ``report()``."""
+        return self.update(x, y_onehot).report()
+
+
+def make_report(client_id: int, x: np.ndarray, y_onehot: np.ndarray,
+                gamma: float) -> ClientReport:
+    """One client's local stage → upload (thin :class:`AFLClient` wrapper)."""
+    return AFLClient(client_id, gamma=gamma).local_stage(x, y_onehot)
+
+
+def masked_reports(reports: Sequence[ClientReport],
+                   seed: int = 0) -> list[ClientReport]:
+    """SecAgg-style pairwise masking of the uploads.
+
+    Every pair (u, v), u < v derives a shared mask from a common seed; u adds
+    it, v subtracts it. Any single report is then statistically useless to
+    the server, but Σ reports is unchanged — and since AFL aggregation IS
+    that sum, the masked protocol is exact (tested to ~1e-9).
+    """
+    n = len(reports)
+    masked_g = [r.gram.astype(np.float64).copy() for r in reports]
+    masked_q = [r.moment.astype(np.float64).copy() for r in reports]
+    for u in range(n):
+        for v in range(u + 1, n):
+            rng = np.random.default_rng(
+                (seed, reports[u].client_id, reports[v].client_id))
+            mg = rng.standard_normal(masked_g[u].shape)
+            mq = rng.standard_normal(masked_q[u].shape)
+            masked_g[u] += mg
+            masked_g[v] -= mg
+            masked_q[u] += mq
+            masked_q[v] -= mq
+    return [
+        # the mask is dense and full-rank, so a masked gram has no usable
+        # low-rank root — drop it and let the server take the refactor path
+        dataclasses.replace(r, gram=g, moment=q, root=None)
+        for r, g, q in zip(reports, masked_g, masked_q)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# The coordinator protocol
+# ---------------------------------------------------------------------------
+
+
+def evaluate_weight(weight, x, y) -> float:
+    """Top-1 accuracy of a linear head ``weight`` on features/int labels."""
+    pred = np.argmax(np.asarray(x) @ np.asarray(weight), axis=-1)
+    return float(np.mean(pred == np.asarray(y)))
+
+
+@dataclasses.dataclass(frozen=True)
+class GammaSweep:
+    """Result of a server-side γ model sweep against a holdout set."""
+
+    gammas: Tuple[float, ...]
+    weights: List[np.ndarray]
+    accuracies: Tuple[float, ...]
+    best_gamma: float
+    best_weight: np.ndarray
+
+    @property
+    def best_accuracy(self) -> float:
+        return max(self.accuracies)
+
+
+def _sweep_from_weights(weights: Sequence[np.ndarray],
+                        gammas: Sequence[float], holdout) -> GammaSweep:
+    x, y = holdout
+    accs = tuple(evaluate_weight(w, x, y) for w in weights)
+    best = int(np.argmax(accs))
+    return GammaSweep(tuple(float(g) for g in gammas), list(weights), accs,
+                      float(gammas[best]), weights[best])
+
+
+def _ingest_upload(report: ClientReport, *, dim: int, gamma: float,
+                   seen) -> SuffStats:
+    """Shared coordinator ingest: duplicate-id and γ checks, then strip the
+    lazily re-derivable γI (uploads carry the regularized C_k^r, the engine
+    keeps raw Grams with lazy per-client γ)."""
+    if report.client_id in seen:
+        raise ValueError(f"client {report.client_id} already aggregated")
+    if report.gamma != gamma:
+        raise ValueError(f"client γ={report.gamma} != server γ={gamma}")
+    raw = np.asarray(report.gram, np.float64) - gamma * np.eye(dim)
+    return SuffStats(
+        gram=raw,
+        moment=np.asarray(report.moment, np.float64),
+        count=float(report.count),
+        clients=1.0,
+    )
+
+
+def _restore_stats(state: Dict[str, np.ndarray], gamma: float, dim: int):
+    """Shared checkpoint restore: (SuffStats, seen ids) from the one state
+    schema every coordinator writes (regularized aggregate → raw + k)."""
+    seen = set(int(i) for i in state["seen"])
+    k = len(seen)
+    stats = SuffStats(
+        gram=np.array(state["gram"], np.float64) - k * gamma * np.eye(dim),
+        moment=np.array(state["moment"], np.float64),
+        # older checkpoints predate the count field — restore as 0
+        count=float(state.get("count", 0.0)),
+        clients=float(k),
+    )
+    return stats, seen
+
+
+@runtime_checkable
+class Coordinator(Protocol):
+    """What every AFL coordinator — sync, async, sharded — satisfies.
+
+    Methods may be coroutines (``AsyncAFLServer``); callers that must not
+    care use ``await``-when-awaitable dispatch (see the conformance suite).
+    ``submit`` returns the fold outcome: True when any cached factorization
+    survived the arrival (rank-updated in place, or nothing was cached),
+    False when the next solve will refactor.
+    """
+
+    dim: int
+    num_classes: int
+    gamma: float
+
+    @property
+    def num_clients(self) -> int: ...
+
+    def submit(self, report: ClientReport): ...
+
+    def submit_many(self, reports: Iterable[ClientReport]): ...
+
+    def solve(self, target_gamma: float = 0.0): ...
+
+    def solve_multi_gamma(self, gammas: Sequence[float]): ...
+
+    def sweep(self, gammas: Sequence[float], holdout): ...
+
+    def state(self) -> Dict[str, np.ndarray]: ...
+
+
+# ---------------------------------------------------------------------------
+# Synchronous coordinator
+# ---------------------------------------------------------------------------
+
+
+class AFLServer:
+    """Incremental AFL aggregation with RI restore at solve time.
+
+    >>> server = AFLServer(dim=d, num_classes=c, gamma=1.0)
+    >>> server.submit(report)              # any order, any time
+    >>> w = server.solve()                 # exact joint weight over arrivals
+
+    The AA law makes sufficient statistics additive ⇒ clients aggregate
+    **incrementally, in any order, at any time**; after any subset S has
+    reported, ``solve()`` is the exact joint solution over ∪S (Thm 1), and a
+    straggler that reports later just extends the subset. ``solve()`` factors
+    the regularized aggregate once per submission epoch (and per distinct
+    ``target_gamma``); repeated polls between arrivals reuse the cached
+    factor. A ``submit`` whose report carries a low-rank ``root`` (n_k ≤
+    ``update_rank_budget``) folds the arrival into every cached factor as an
+    O(n_k·d²) rank update; any other submit invalidates the cache and the
+    next solve refactors.
+    """
+
+    def __init__(self, dim: int, num_classes: int, gamma: float = 1.0,
+                 *, update_rank_budget: Optional[int] = None):
+        self.dim = dim
+        self.num_classes = num_classes
+        self.gamma = gamma
+        self.engine = AnalyticEngine("numpy_f64", gamma=gamma)
+        # Rank-update crossover: past ~d/16 rows the k fused rank-1 sweeps
+        # cost as much as the BLAS refactor (measured at d=2048 in
+        # benchmarks/async_server_bench.py; small d always favors refactor).
+        self.update_rank_budget = (
+            max(1, dim // 16) if update_rank_budget is None
+            else int(update_rank_budget))
+        self._stats = self.engine.init(dim, num_classes)
+        self._seen: set[int] = set()
+        self._factor_cache: Dict[float, Factorization] = {}
+
+    @property
+    def num_clients(self) -> int:
+        return len(self._seen)
+
+    def submit(self, report: ClientReport) -> bool:
+        """Merge one upload; returns True when the cached factors survived
+        (rank-updated in place, or nothing was cached), False when the
+        arrival invalidated them and the next solve will refactor."""
+        upload = _ingest_upload(report, dim=self.dim, gamma=self.gamma,
+                                seen=self._seen)
+        self._stats = self.engine.merge(self._stats, upload)
+        self._seen.add(report.client_id)
+        if self._try_factor_update(report.root):
+            return True
+        self._factor_cache.clear()
+        return False
+
+    def _try_factor_update(self, root: Optional[np.ndarray]) -> bool:
+        """Fold an arrival's low-rank root into every cached factor; False
+        when the cache must be invalidated instead (no root, rank past the
+        crossover, or a non-updatable pinv-fallback factor)."""
+        if not self._factor_cache:
+            return True                    # nothing cached — nothing to do
+        if root is None:
+            return False
+        root = np.asarray(root, np.float64).reshape(-1, self.dim)
+        if root.shape[0] > self.update_rank_budget:
+            return False
+        if not all(f.updatable for f in self._factor_cache.values()):
+            return False
+        self._factor_cache = {
+            key: f.rank_update(root) for key, f in self._factor_cache.items()}
+        return True
+
+    def submit_many(self, reports: Iterable[ClientReport]) -> None:
+        for r in reports:
+            self.submit(r)
+
+    def solve(self, target_gamma: float = 0.0) -> np.ndarray:
+        """Exact joint solution over all clients aggregated *so far*.
+
+        RI restore (Thm 2): the engine's lazy-γ bookkeeping means the kγI of
+        the k arrivals is never materialized; only ``target_gamma`` enters
+        the system. Stragglers simply have not been added yet — calling
+        solve() again after they report gives the exact larger-joint
+        solution (and re-factors, since the statistics changed).
+        """
+        if not self._seen:
+            raise ValueError("no clients aggregated")
+        key = float(target_gamma)
+        fact = self._factor_cache.get(key)
+        if fact is None:
+            fact = self.engine.factor(self._stats, target_gamma=key)
+            self._factor_cache[key] = fact
+        return self.engine.factor_solve(fact, self._stats.moment)
+
+    def solve_multi_gamma(self, gammas: Sequence[float]) -> list[np.ndarray]:
+        """γ model sweep over the current aggregate: one eigendecomposition,
+        one weight per candidate ridge (see engine.solve_multi_gamma)."""
+        if not self._seen:
+            raise ValueError("no clients aggregated")
+        return self.engine.solve_multi_gamma(self._stats, gammas)
+
+    def sweep(self, gammas: Sequence[float], holdout) -> GammaSweep:
+        """Server-side cross-validation: solve every candidate γ off ONE
+        eigendecomposition and score each on ``holdout = (x, y)``."""
+        return _sweep_from_weights(
+            self.solve_multi_gamma(gammas), gammas, holdout)
+
+    def state(self) -> Dict[str, np.ndarray]:
+        """Serializable coordinator state (see repro.checkpoint). ``gram``
+        is the paper-form regularized aggregate C_agg^r = ΣC_k^r, kept for
+        format stability across the raw-Gram refactor."""
+        return {
+            "gram": self.engine.regularized_gram(self._stats).copy(),
+            "moment": self._stats.moment.copy(),
+            "seen": np.array(sorted(self._seen), np.int64),
+            "gamma": np.float64(self.gamma),
+            "count": np.float64(self._stats.count),
+        }
+
+    @classmethod
+    def from_state(cls, state: Dict[str, np.ndarray],
+                   num_classes: Optional[int] = None) -> "AFLServer":
+        dim = state["gram"].shape[0]
+        srv = cls(dim, num_classes or state["moment"].shape[1],
+                  float(state["gamma"]))
+        srv._stats, srv._seen = _restore_stats(state, srv.gamma, dim)
+        return srv
+
+
+# ---------------------------------------------------------------------------
+# Sharded coordinator (the 1000-client backend)
+# ---------------------------------------------------------------------------
+
+
+class ShardedCoordinator:
+    """AFL coordination with the Gram pytree sharded over a jax mesh.
+
+    The statistics of a K-client federation are a 4-leaf additive pytree, so
+    at K≥1000 the coordinator does not need one global host aggregate:
+    arrivals round-robin into per-shard accumulators (host f64, so ingest
+    stays exact and lock-free), and ``solve()`` runs the whole aggregation
+    stage — per-shard partial sums → one psum → RI restore → Cholesky — as a
+    single XLA program via :func:`repro.core.distributed.make_federated_solve`,
+    with each shard's (d, d) Gram tile resident on its own device.
+
+    Device arithmetic follows jax's global precision: f32 by default,
+    f64 end-to-end under ``jax_enable_x64`` (the 1e-6-vs-sync conformance
+    path). ``solve_multi_gamma`` / ``sweep`` run on the merged statistics
+    through the host engine — one eigendecomposition, every γ — matching
+    :class:`AFLServer` exactly, and ``state()`` speaks the same checkpoint
+    schema, so the three coordinators are interchangeable behind
+    :class:`Coordinator`.
+    """
+
+    def __init__(self, dim: int, num_classes: int, gamma: float = 1.0,
+                 *, mesh=None, axis_names: Optional[Sequence[str]] = None):
+        import jax
+
+        self.dim = dim
+        self.num_classes = num_classes
+        self.gamma = gamma
+        self.engine = AnalyticEngine("numpy_f64", gamma=gamma)
+        if mesh is None:
+            mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+        self.mesh = mesh
+        self.axis_names = tuple(axis_names) if axis_names is not None \
+            else tuple(mesh.axis_names)
+        n_shards = 1
+        for a in self.axis_names:
+            n_shards *= mesh.shape[a]
+        self._shards: List[SuffStats] = [
+            self.engine.init(dim, num_classes) for _ in range(n_shards)]
+        self._seen: set[int] = set()
+        self._order = 0
+        self._solve_fns: Dict[float, Any] = {}
+
+    @property
+    def num_shards(self) -> int:
+        return len(self._shards)
+
+    @property
+    def num_clients(self) -> int:
+        return len(self._seen)
+
+    def submit(self, report: ClientReport) -> bool:
+        """Merge one upload into its round-robin shard. Returns True — the
+        sharded backend keeps no host factor cache to invalidate (the
+        device program refactors per solve), so every arrival 'survives'."""
+        upload = _ingest_upload(report, dim=self.dim, gamma=self.gamma,
+                                seen=self._seen)
+        i = self._order % len(self._shards)
+        self._order += 1
+        self._shards[i] = self.engine.merge(self._shards[i], upload)
+        self._seen.add(report.client_id)
+        return True
+
+    def submit_many(self, reports: Iterable[ClientReport]) -> None:
+        for r in reports:
+            self.submit(r)
+
+    def _merged(self) -> SuffStats:
+        agg = self._shards[0]
+        for s in self._shards[1:]:
+            agg = self.engine.merge(agg, s)
+        return agg
+
+    def _stacked(self):
+        """Per-shard statistics stacked on a leading federation dim, as the
+        3-leaf :class:`~repro.core.streaming.AnalyticState` the collective
+        consumes (clients bookkeeping is irrelevant under RI)."""
+        import jax.numpy as jnp
+
+        from repro.core.streaming import AnalyticState
+
+        return AnalyticState(
+            gram=jnp.asarray(np.stack([s.gram for s in self._shards])),
+            moment=jnp.asarray(np.stack([s.moment for s in self._shards])),
+            count=jnp.asarray(np.stack(
+                [np.float64(s.count) for s in self._shards])),
+        )
+
+    def solve(self, target_gamma: float = 0.0) -> np.ndarray:
+        """One collective: psum the sharded statistics, RI-restore, solve."""
+        from repro.core.distributed import make_federated_solve
+
+        if not self._seen:
+            raise ValueError("no clients aggregated")
+        key = float(target_gamma)
+        fn = self._solve_fns.get(key)
+        if fn is None:
+            fn = make_federated_solve(
+                self.mesh, axis_names=self.axis_names, gamma=self.gamma,
+                target_gamma=key)
+            self._solve_fns[key] = fn
+        return np.asarray(fn(self._stacked()), np.float64)
+
+    def solve_multi_gamma(self, gammas: Sequence[float]) -> list[np.ndarray]:
+        """γ model sweep on the merged statistics (host engine, one eigh) —
+        identical math to :meth:`AFLServer.solve_multi_gamma`."""
+        if not self._seen:
+            raise ValueError("no clients aggregated")
+        return self.engine.solve_multi_gamma(self._merged(), gammas)
+
+    def sweep(self, gammas: Sequence[float], holdout) -> GammaSweep:
+        return _sweep_from_weights(
+            self.solve_multi_gamma(gammas), gammas, holdout)
+
+    def state(self) -> Dict[str, np.ndarray]:
+        """Same checkpoint schema as :meth:`AFLServer.state` — coordinator
+        kinds are interchangeable across a save/restore boundary."""
+        agg = self._merged()
+        return {
+            "gram": self.engine.regularized_gram(agg).copy(),
+            "moment": agg.moment.copy(),
+            "seen": np.array(sorted(self._seen), np.int64),
+            "gamma": np.float64(self.gamma),
+            "count": np.float64(agg.count),
+        }
+
+    @classmethod
+    def from_state(cls, state: Dict[str, np.ndarray],
+                   num_classes: Optional[int] = None, *,
+                   mesh=None, axis_names: Optional[Sequence[str]] = None,
+                   ) -> "ShardedCoordinator":
+        dim = state["gram"].shape[0]
+        coord = cls(dim, num_classes or state["moment"].shape[1],
+                    float(state["gamma"]), mesh=mesh, axis_names=axis_names)
+        # statistics are additive, so placement is free: restore into shard 0
+        # and let round-robin resume from k
+        coord._shards[0], coord._seen = _restore_stats(state, coord.gamma,
+                                                       dim)
+        coord._order = len(coord._seen)
+        return coord

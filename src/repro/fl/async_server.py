@@ -4,21 +4,25 @@ The AA law makes AFL aggregation a *sum* of sufficient statistics, so there
 is no round structure to synchronize on: the server can accept a client
 upload at any moment and every ``solve()`` is the exact joint solution of
 whatever has arrived so far. :class:`AsyncAFLServer` turns that property
-into a serving loop:
+into a serving loop conforming to the :class:`repro.fl.api.Coordinator`
+protocol (same methods, same return values, awaited):
 
-  * ``submit()`` enqueues a :class:`~repro.fl.server.ClientReport` and
-    returns immediately; a single worker task drains the queue in arrival
-    order (asyncio's cooperative scheduling makes each apply atomic with
-    respect to solves, and an explicit lock keeps it that way even if the
-    linear algebra is ever pushed off-loop).
+  * ``submit()`` hands a :class:`~repro.fl.api.ClientReport` to a single
+    worker task that drains arrivals in order, and resolves to the same
+    fold-outcome bool the synchronous server returns (True: cached factors
+    survived; False: the next solve refactors). ``enqueue()`` is the
+    fire-and-forget variant for producers that must not block on apply.
   * Each arrival is folded into the live cached Cholesky factors as a
     **rank-n_k update** (``AFLServer.submit`` → ``engine.factor_update``,
     O(n_k·d²)) instead of invalidating them — the d³ refactorization
     disappears from the arrival hot path.
-  * ``solve()`` / ``solve_multi_gamma()`` serve concurrently from the live
-    factor: they reflect every arrival *applied* so far and never block on
-    submissions still queued (``join()`` waits for the queue to drain when a
-    caller wants the everyone-included answer).
+  * ``solve()`` / ``solve_multi_gamma()`` / ``sweep()`` serve concurrently
+    from the live factor: they reflect every arrival *applied* so far and
+    never block on submissions still queued (``join()`` waits for the queue
+    to drain when a caller wants the everyone-included answer).
+  * ``state()`` / ``from_state()`` round-trip the same checkpoint schema as
+    the synchronous server, so an event-loop deployment checkpoints and
+    restarts like any other coordinator.
 
 Deferred-refactor policy
 ------------------------
@@ -46,11 +50,12 @@ from __future__ import annotations
 
 import asyncio
 import dataclasses
-from typing import Optional, Sequence
+from typing import Dict, Iterable, Optional, Sequence
 
 import numpy as np
 
-from repro.fl.server import AFLServer, ClientReport
+from repro.fl.api import (AFLServer, ClientReport, GammaSweep,
+                          _sweep_from_weights)
 
 __all__ = ["AsyncAFLServer"]
 
@@ -59,7 +64,7 @@ class AsyncAFLServer:
     """Asyncio front-end over :class:`AFLServer` with incremental factors.
 
     >>> async with AsyncAFLServer(dim=d, num_classes=c, gamma=1.0) as srv:
-    ...     await srv.submit(report)       # returns once enqueued
+    ...     folded = await srv.submit(report)  # fold outcome, like sync
     ...     w_now = await srv.solve()      # exact for everything applied
     ...     await srv.join()               # drain stragglers
     ...     w_all = await srv.solve()
@@ -105,6 +110,20 @@ class AsyncAFLServer:
         self.deferred_refactors = 0
         self.rejected: list = []
 
+    # -- protocol surface (delegated) ---------------------------------------
+
+    @property
+    def dim(self) -> int:
+        return self._server.dim
+
+    @property
+    def num_classes(self) -> int:
+        return self._server.num_classes
+
+    @property
+    def gamma(self) -> float:
+        return self._server.gamma
+
     # -- lifecycle ----------------------------------------------------------
 
     async def start(self) -> "AsyncAFLServer":
@@ -130,13 +149,28 @@ class AsyncAFLServer:
 
     # -- submission side ----------------------------------------------------
 
-    async def submit(self, report: ClientReport) -> None:
-        """Enqueue an upload; the worker applies it in arrival order."""
-        await self._queue.put(report)
+    async def submit(self, report: ClientReport) -> bool:
+        """Submit one upload and await its application, resolving to the
+        same fold-outcome bool :meth:`AFLServer.submit` returns. A rejected
+        upload (duplicate id, γ mismatch, malformed report) raises here —
+        exactly like the sync server — without killing the worker."""
+        fut: asyncio.Future = asyncio.get_running_loop().create_future()
+        await self._queue.put((report, fut))
+        return await fut
 
-    async def submit_many(self, reports: Sequence[ClientReport]) -> None:
+    async def enqueue(self, report: ClientReport) -> None:
+        """Fire-and-forget: enqueue an upload and return immediately; the
+        worker applies it in arrival order. Rejections land in
+        ``self.rejected`` instead of raising to the producer."""
+        await self._queue.put((report, None))
+
+    async def submit_many(self, reports: Iterable[ClientReport]) -> None:
+        """Bulk submit with sync semantics: applied in order, stopping at
+        the first rejection (later reports are NOT aggregated) — so post-
+        exception state matches :meth:`AFLServer.submit_many` exactly. Use
+        :meth:`enqueue` per report for fire-and-forget pipelining."""
         for r in reports:
-            await self._queue.put(r)
+            await self.submit(r)
 
     async def join(self) -> None:
         """Wait until every enqueued submission has been applied."""
@@ -144,23 +178,29 @@ class AsyncAFLServer:
 
     async def _run(self) -> None:
         while True:
-            report = await self._queue.get()
+            report, fut = await self._queue.get()
             try:
                 async with self._lock:
-                    self._apply(report)
+                    outcome = self._apply(report)
+                if fut is not None and not fut.cancelled():
+                    fut.set_result(outcome)
             except Exception as e:
                 # a bad upload (duplicate id, γ mismatch, malformed arrays)
                 # must not kill the serving loop
                 self.rejected.append((getattr(report, "client_id", None),
                                       str(e)))
+                if fut is not None and not fut.cancelled():
+                    fut.set_exception(e)
             finally:
                 self._queue.task_done()
 
-    def _apply(self, report: ClientReport) -> None:
+    def _apply(self, report: ClientReport) -> bool:
         srv = self._server
         rank = (0 if report.root is None
                 else int(np.asarray(report.root).reshape(-1, srv.dim).shape[0]))
-        usable = 0 < rank <= srv.update_rank_budget
+        # rank 0 (an empty client's root) folds trivially — same outcome as
+        # the sync server, no reason to kill the cache
+        usable = report.root is not None and rank <= srv.update_rank_budget
         over = (self._applied_rank + rank > self.refactor_rank
                 or self._error_proxy(self._applied_rank + rank)
                 > self.error_budget)
@@ -171,17 +211,17 @@ class AsyncAFLServer:
             # policy says refactor: strip the root so the cache dies and the
             # NEXT solve pays the d³ once for this and any further
             # cache-killing arrivals in the burst
-            srv.submit(dataclasses.replace(report, root=None))
-            survived = False
+            survived = srv.submit(dataclasses.replace(report, root=None))
         if not had_factor:
-            return                          # no live factor — nothing to track
+            return survived                 # no live factor — nothing to track
         if survived:
             self._applied_rank += rank
-            self.updates += 1
+            self.updates += 1 if rank else 0
         else:
             # fold refused (policy, or a non-updatable pinv-fallback factor)
             self._applied_rank = 0
             self.deferred_refactors += 1
+        return survived
 
     def _error_proxy(self, applied_rank: int) -> float:
         """Worst-case relative drift of a factor after ``applied_rank``
@@ -201,6 +241,31 @@ class AsyncAFLServer:
     async def solve_multi_gamma(self, gammas: Sequence[float]) -> list:
         async with self._lock:
             return self._server.solve_multi_gamma(gammas)
+
+    async def sweep(self, gammas: Sequence[float], holdout) -> GammaSweep:
+        """Server-side γ cross-validation off one eigendecomposition."""
+        async with self._lock:
+            weights = self._server.solve_multi_gamma(gammas)
+        return _sweep_from_weights(weights, gammas, holdout)
+
+    # -- checkpointing ------------------------------------------------------
+
+    async def state(self) -> Dict[str, np.ndarray]:
+        """Serializable state of everything *applied* so far (same schema as
+        :meth:`AFLServer.state`; ``await join()`` first to include queued
+        arrivals)."""
+        async with self._lock:
+            return self._server.state()
+
+    @classmethod
+    def from_state(cls, state: Dict[str, np.ndarray],
+                   num_classes: Optional[int] = None,
+                   **kwargs) -> "AsyncAFLServer":
+        """Rebuild an (unstarted) async coordinator from a checkpoint; use
+        ``async with`` / ``await start()`` to bring the worker up."""
+        server = AFLServer.from_state(state, num_classes)
+        return cls(server.dim, server.num_classes, server.gamma,
+                   server=server, **kwargs)
 
     # -- introspection ------------------------------------------------------
 

@@ -1,248 +1,32 @@
-"""AFL server: incremental aggregation, partial participation, stragglers,
-and secure (masked) aggregation.
+"""DEPRECATED shim — the canonical FL surface moved to :mod:`repro.fl.api`.
 
-The paper's §5 lists partial participation and stragglers as open problems
-for AFL ("clients can only contribute after finishing local computations; the
-AFL needs to wait for all the clients"). The AA law actually makes these
-*easy*, and this module implements the consequences:
-
-  * Sufficient statistics are additive ⇒ the server can aggregate clients
-    **incrementally, in any order, at any time**. After any subset S has
-    reported, ``solve()`` returns the weight that joint training on ∪S's
-    data would produce — exactly, by Theorem 1. A straggler that reports
-    later just adds its (C_k^r, Q_k) and the next solve is exact for the
-    larger subset. No round structure, no re-training, no staleness.
-  * The server never needs raw features, and with **pairwise masking**
-    (SecAgg-style) it never even sees an individual client's statistics:
-    clients u<v share a seed; u adds M_{uv}, v subtracts it. Masks cancel in
-    the sum, and because AFL's aggregation IS a sum, masked aggregation is
-    *bit-exact* — unlike gradient FL where masking must survive averaging
-    weights by data size.
-
-All aggregation math routes through :class:`repro.core.engine.
-AnalyticEngine` (``numpy_f64`` backend); the server itself owns only a
-:class:`~repro.core.engine.SuffStats`, the set of seen client ids, and a
-**cached Cholesky factorization**: the serving hot path polls ``solve()``
-after every straggler arrival, and between arrivals the statistics are
-unchanged — so the d³ factorization is computed once per (submission epoch,
-target γ) and every further poll pays only the d²·C triangular solves.
-Arrivals that carry a low-rank ``root`` of their Gram don't even end the
-epoch: ``submit`` folds them into the cached factors as rank-n_k Cholesky
-updates (engine ``factor_update``), and only rootless / high-rank arrivals
-force a refactor. ``fl.async_server`` builds the event-loop serving story
-on top of exactly this seam.
+Every name that used to live here (``ClientReport``, ``AFLServer``,
+``make_report``, ``masked_reports``) is the *same object* re-exported from
+``repro.fl.api``; importing it through this module emits a
+``DeprecationWarning``. Update imports to ``repro.fl`` (or ``repro.fl.api``).
+This shim is kept for one release after the api.py redesign and then removed.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, Iterable, Optional, Sequence
+import warnings
 
-import numpy as np
-
-from repro.core.engine import AnalyticEngine, Factorization, SuffStats
+from repro.fl import api as _api
 
 __all__ = ["ClientReport", "AFLServer", "make_report", "masked_reports"]
 
 
-@dataclasses.dataclass(frozen=True)
-class ClientReport:
-    """What one client uploads: regularized sufficient statistics.
-
-    gram:   C_k^r = X_kᵀX_k + γI   (d, d)
-    moment: Q_k   = X_kᵀY_k        (d, C)
-    (Equivalent information to the paper's (Ŵ_k^r, C_k^r) upload —
-    Q_k = C_k^r Ŵ_k^r — but numerically nicer to accumulate.)
-    count: number of local samples (diagnostics only; 0 when unknown).
-    root:  optional (n_k, d) square root of the RAW Gram, ``rootᵀroot =
-           X_kᵀX_k`` (e.g. the R factor of QR(X_k)). It carries exactly the
-           information already in ``gram`` — no extra privacy exposure — but
-           lets the server fold the arrival into a cached Cholesky factor as
-           a rank-n_k update instead of refactoring. ``None`` (unknown root,
-           e.g. after masking) forces the refactor path.
-    """
-
-    client_id: int
-    gram: np.ndarray
-    moment: np.ndarray
-    gamma: float
-    count: float = 0.0
-    root: Optional[np.ndarray] = None
+def __getattr__(name: str):
+    if name in __all__:
+        warnings.warn(
+            f"repro.fl.server.{name} is deprecated; import it from repro.fl "
+            "(canonical home: repro.fl.api). This shim will be removed one "
+            "release after the api redesign.",
+            DeprecationWarning, stacklevel=2)
+        return getattr(_api, name)
+    raise AttributeError(
+        f"module 'repro.fl.server' has no attribute {name!r}")
 
 
-def make_report(client_id: int, x: np.ndarray, y_onehot: np.ndarray,
-                gamma: float) -> ClientReport:
-    """One client's local stage → upload, via the engine's update path."""
-    eng = AnalyticEngine("numpy_f64", gamma=gamma)
-    stats = eng.client_stats(x, y_onehot)
-    x2d = np.asarray(x, np.float64).reshape(-1, stats.dim)
-    root = np.linalg.qr(x2d, mode="r") if x2d.shape[0] < stats.dim else None
-    return ClientReport(client_id, eng.regularized_gram(stats), stats.moment,
-                        gamma, count=float(stats.count), root=root)
-
-
-class AFLServer:
-    """Incremental AFL aggregation with RI restore at solve time.
-
-    >>> server = AFLServer(dim=d, num_classes=c, gamma=1.0)
-    >>> server.submit(report)              # any order, any time
-    >>> w = server.solve()                 # exact joint weight over arrivals
-
-    ``solve()`` factors the regularized aggregate once per submission epoch
-    (and per distinct ``target_gamma``); repeated polls between arrivals
-    reuse the cached factor. A ``submit`` whose report carries a low-rank
-    ``root`` (n_k ≤ ``update_rank_budget``) folds the arrival into every
-    cached factor as an O(n_k·d²) rank update; any other submit invalidates
-    the cache and the next solve refactors.
-    """
-
-    def __init__(self, dim: int, num_classes: int, gamma: float = 1.0,
-                 *, update_rank_budget: Optional[int] = None):
-        self.dim = dim
-        self.num_classes = num_classes
-        self.gamma = gamma
-        self.engine = AnalyticEngine("numpy_f64", gamma=gamma)
-        # Rank-update crossover: past ~d/16 rows the k fused rank-1 sweeps
-        # cost as much as the BLAS refactor (measured at d=2048 in
-        # benchmarks/async_server_bench.py; small d always favors refactor).
-        self.update_rank_budget = (
-            max(1, dim // 16) if update_rank_budget is None
-            else int(update_rank_budget))
-        self._stats = self.engine.init(dim, num_classes)
-        self._seen: set[int] = set()
-        self._factor_cache: Dict[float, Factorization] = {}
-
-    @property
-    def num_clients(self) -> int:
-        return len(self._seen)
-
-    def submit(self, report: ClientReport) -> bool:
-        """Merge one upload; returns True when the cached factors survived
-        (rank-updated in place, or nothing was cached), False when the
-        arrival invalidated them and the next solve will refactor."""
-        if report.client_id in self._seen:
-            raise ValueError(f"client {report.client_id} already aggregated")
-        if report.gamma != self.gamma:
-            raise ValueError(
-                f"client γ={report.gamma} != server γ={self.gamma}")
-        # Uploads carry the regularized C_k^r (paper form); the engine keeps
-        # raw Grams with lazy per-client γ, so strip the γI on ingestion.
-        raw = np.asarray(report.gram, np.float64) - self.gamma * np.eye(self.dim)
-        upload = SuffStats(
-            gram=raw,
-            moment=np.asarray(report.moment, np.float64),
-            count=float(report.count),
-            clients=1.0,
-        )
-        self._stats = self.engine.merge(self._stats, upload)
-        self._seen.add(report.client_id)
-        if self._try_factor_update(report.root):
-            return True
-        self._factor_cache.clear()
-        return False
-
-    def _try_factor_update(self, root: Optional[np.ndarray]) -> bool:
-        """Fold an arrival's low-rank root into every cached factor; False
-        when the cache must be invalidated instead (no root, rank past the
-        crossover, or a non-updatable pinv-fallback factor)."""
-        if not self._factor_cache:
-            return True                    # nothing cached — nothing to do
-        if root is None:
-            return False
-        root = np.asarray(root, np.float64).reshape(-1, self.dim)
-        if root.shape[0] > self.update_rank_budget:
-            return False
-        if not all(f.updatable for f in self._factor_cache.values()):
-            return False
-        self._factor_cache = {
-            key: f.rank_update(root) for key, f in self._factor_cache.items()}
-        return True
-
-    def submit_many(self, reports: Iterable[ClientReport]) -> None:
-        for r in reports:
-            self.submit(r)
-
-    def solve(self, target_gamma: float = 0.0) -> np.ndarray:
-        """Exact joint solution over all clients aggregated *so far*.
-
-        RI restore (Thm 2): the engine's lazy-γ bookkeeping means the kγI of
-        the k arrivals is never materialized; only ``target_gamma`` enters
-        the system. Stragglers simply have not been added yet — calling
-        solve() again after they report gives the exact larger-joint
-        solution (and re-factors, since the statistics changed).
-        """
-        if not self._seen:
-            raise ValueError("no clients aggregated")
-        key = float(target_gamma)
-        fact = self._factor_cache.get(key)
-        if fact is None:
-            fact = self.engine.factor(self._stats, target_gamma=key)
-            self._factor_cache[key] = fact
-        return self.engine.factor_solve(fact, self._stats.moment)
-
-    def solve_multi_gamma(self, gammas: Sequence[float]) -> list[np.ndarray]:
-        """γ model sweep over the current aggregate: one eigendecomposition,
-        one weight per candidate ridge (see engine.solve_multi_gamma)."""
-        if not self._seen:
-            raise ValueError("no clients aggregated")
-        return self.engine.solve_multi_gamma(self._stats, gammas)
-
-    def state(self) -> Dict[str, np.ndarray]:
-        """Serializable server state (see repro.checkpoint). ``gram`` is the
-        paper-form regularized aggregate C_agg^r = ΣC_k^r, kept for format
-        stability across the raw-Gram refactor."""
-        return {
-            "gram": self.engine.regularized_gram(self._stats).copy(),
-            "moment": self._stats.moment.copy(),
-            "seen": np.array(sorted(self._seen), np.int64),
-            "gamma": np.float64(self.gamma),
-            "count": np.float64(self._stats.count),
-        }
-
-    @classmethod
-    def from_state(cls, state: Dict[str, np.ndarray],
-                   num_classes: Optional[int] = None) -> "AFLServer":
-        dim = state["gram"].shape[0]
-        srv = cls(dim, num_classes or state["moment"].shape[1],
-                  float(state["gamma"]))
-        seen = set(int(i) for i in state["seen"])
-        k = len(seen)
-        srv._stats = SuffStats(
-            gram=np.array(state["gram"], np.float64) - k * srv.gamma * np.eye(dim),
-            moment=np.array(state["moment"], np.float64),
-            # older checkpoints predate the count field — restore as 0
-            count=float(state.get("count", 0.0)),
-            clients=float(k),
-        )
-        srv._seen = seen
-        return srv
-
-
-def masked_reports(reports: Sequence[ClientReport],
-                   seed: int = 0) -> list[ClientReport]:
-    """SecAgg-style pairwise masking of the uploads.
-
-    Every pair (u, v), u < v derives a shared mask from a common seed; u adds
-    it, v subtracts it. Any single report is then statistically useless to
-    the server, but Σ reports is unchanged — and since AFL aggregation IS
-    that sum, the masked protocol is exact (tested to ~1e-9).
-    """
-    n = len(reports)
-    masked_g = [r.gram.astype(np.float64).copy() for r in reports]
-    masked_q = [r.moment.astype(np.float64).copy() for r in reports]
-    for u in range(n):
-        for v in range(u + 1, n):
-            rng = np.random.default_rng(
-                (seed, reports[u].client_id, reports[v].client_id))
-            mg = rng.standard_normal(masked_g[u].shape)
-            mq = rng.standard_normal(masked_q[u].shape)
-            masked_g[u] += mg
-            masked_g[v] -= mg
-            masked_q[u] += mq
-            masked_q[v] -= mq
-    return [
-        # the mask is dense and full-rank, so a masked gram has no usable
-        # low-rank root — drop it and let the server take the refactor path
-        dataclasses.replace(r, gram=g, moment=q, root=None)
-        for r, g, q in zip(reports, masked_g, masked_q)
-    ]
+def __dir__():
+    return sorted(__all__)

@@ -24,10 +24,9 @@ import numpy as np
 
 from repro.config import FLConfig
 from repro.configs.registry import get_config
-from repro.core import act, streaming
-from repro.core.distributed import make_federated_solve
-from repro.core.engine import AnalyticEngine
+from repro.core import act
 from repro.data import synthetic as D
+from repro.fl.api import AFLClient, AFLServer, ShardedCoordinator
 from repro.launch import mesh as M
 from repro.launch import sharding as SH
 from repro.launch import steps as ST
@@ -57,39 +56,37 @@ def run_analytic(cfg, mesh, train_ds, test_ds, fl: FLConfig, batch: int,
                  use_kernel: bool = False):
     """AFL on-device: one epoch of forwards, one aggregation collective.
 
-    Statistics accumulation and the solve both route through the shared
-    engine (jax backend; ``use_kernel=True`` folds batches with the Pallas
-    Gram kernel).
+    Drives the canonical API end to end: an :class:`~repro.fl.api.AFLClient`
+    (jax-backend engine; ``use_kernel=True`` folds batches with the Pallas
+    Gram kernel) accumulates the local stage, its
+    :class:`~repro.fl.api.ClientReport` is submitted to a coordinator —
+    :class:`~repro.fl.api.ShardedCoordinator` when the mesh has >1
+    federation shard (one psum collective), plain
+    :class:`~repro.fl.api.AFLServer` otherwise.
     """
     params = T.init_params(jax.random.key(0), cfg)
     embed = _embed_fn(params, cfg, mesh)
-    engine = AnalyticEngine("jax", gamma=fl.gamma, use_kernel=use_kernel)
-    stats = engine.init(cfg.d_model, cfg.num_classes)
+    client = AFLClient(0, gamma=fl.gamma, backend="jax",
+                       use_kernel=use_kernel)
     t0 = time.perf_counter()
     for toks, labels in _batches(train_ds, batch):
         emb = embed(params, jnp.asarray(toks))
         y = jax.nn.one_hot(jnp.asarray(labels), cfg.num_classes)
-        stats = engine.update(stats, emb, y)
-    # single-round aggregation: with >1 devices this is the one all-reduce;
-    # on one device it degenerates to the plain ridge solve.
+        client.update(emb, y)
+    # single-round aggregation: with >1 devices the sharded coordinator runs
+    # the one all-reduce; on one device it degenerates to the plain solve.
     naxes = M.batch_axes(mesh)
     n_shards = 1
     for a in naxes:
         n_shards *= mesh.shape[a]
     if n_shards > 1:
-        solve = make_federated_solve(mesh, axis_names=naxes, gamma=fl.gamma)
-        state = streaming.from_stats(stats)
-        # The host loop accumulated ONE global statistic; the federated solve
-        # expects one leading entry per federation shard. Statistics are
-        # additive (the AA law), so shard 0 carries the total and the rest
-        # carry zeros — the collective's merge restores the exact aggregate.
-        stacked = jax.tree.map(
-            lambda x: jnp.concatenate(
-                [x[None], jnp.zeros((n_shards - 1,) + x.shape, x.dtype)]),
-            state)
-        w = solve(stacked)
+        coord = ShardedCoordinator(cfg.d_model, cfg.num_classes,
+                                   gamma=fl.gamma, mesh=mesh,
+                                   axis_names=naxes)
     else:
-        w = engine.solve(engine.finalize_client(stats), target_gamma=0.0)
+        coord = AFLServer(cfg.d_model, cfg.num_classes, gamma=fl.gamma)
+    coord.submit(client.report())
+    w = coord.solve(target_gamma=0.0)
     train_s = time.perf_counter() - t0
     # evaluate
     correct = total = 0

@@ -10,8 +10,7 @@ import numpy as np
 import pytest
 
 from repro.core import analytic as al
-from repro.fl.async_server import AsyncAFLServer
-from repro.fl.server import AFLServer, make_report, masked_reports
+from repro.fl import AFLServer, AsyncAFLServer, make_report, masked_reports
 
 D, C, GAMMA = 24, 5, 1.0
 
@@ -133,23 +132,57 @@ def test_solve_multi_gamma_served_concurrently():
 
 
 def test_bad_uploads_rejected_without_killing_worker():
+    """``enqueue`` is fire-and-forget: rejections land in ``rejected`` and
+    the worker survives; an awaited ``submit`` raises like the sync server,
+    also without killing the loop."""
     _, _, reps = _reports(n_clients=4, seed=9)
 
     async def scenario():
         async with AsyncAFLServer(D, C, gamma=GAMMA) as srv:
             await srv.submit_many(reps)
-            await srv.submit(reps[0])                       # duplicate id
-            await srv.submit(dataclasses.replace(reps[1], client_id=77,
-                                                 gamma=2.0))  # γ mismatch
-            await srv.submit(dataclasses.replace(
+            await srv.enqueue(reps[0])                      # duplicate id
+            await srv.enqueue(dataclasses.replace(reps[1], client_id=77,
+                                                  gamma=2.0))  # γ mismatch
+            await srv.enqueue(dataclasses.replace(
                 reps[2], client_id=[78]))   # malformed: unhashable id
             await srv.join()
+            with pytest.raises(ValueError):
+                await srv.submit(reps[0])   # awaited duplicate raises
             return srv.num_clients, srv.rejected, await srv.solve()
 
     n, rejected, w = asyncio.run(scenario())
     assert n == 4
-    assert len(rejected) == 3
+    assert len(rejected) == 4
     assert np.all(np.isfinite(w))
+
+
+def test_submit_returns_the_sync_fold_outcome():
+    """API-drift regression: ``await async.submit(r)`` resolves to exactly
+    the bool the sync server returns for the same arrival sequence (with the
+    deferred-refactor policy opened wide so the paths are comparable)."""
+    _, _, reps = _reports(n_clients=10, seed=11)
+    masked = masked_reports(reps[5:], seed=1)   # root=None → cache kills
+    sequence = reps[:5] + masked
+
+    sync = AFLServer(D, C, gamma=GAMMA, update_rank_budget=6)
+    sync_outcomes = []
+    for r in sequence:
+        sync_outcomes.append(sync.submit(r))
+        sync.solve()                            # keep a live factor in play
+
+    async def scenario():
+        async with AsyncAFLServer(D, C, gamma=GAMMA, update_rank_budget=6,
+                                  refactor_rank=10**6,
+                                  error_budget=1.0) as srv:
+            outcomes = []
+            for r in sequence:
+                outcomes.append(await srv.submit(r))
+                await srv.solve()
+            return outcomes
+
+    async_outcomes = asyncio.run(scenario())
+    assert async_outcomes == sync_outcomes
+    assert True in async_outcomes and False in async_outcomes
 
 
 def test_solve_before_any_arrival_raises():

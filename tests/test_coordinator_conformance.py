@@ -1,0 +1,489 @@
+"""One conformance suite for every AFL coordinator.
+
+The :class:`repro.fl.api.Coordinator` protocol pins down the surface that
+sync (:class:`AFLServer`), async (:class:`AsyncAFLServer`) and sharded
+(:class:`ShardedCoordinator`) implementations share: submit fold outcomes,
+exact subset solves, the multi-γ sweep, the γ cross-validation endpoint, and
+one checkpoint schema. Each test body is written once against the protocol
+and parameterized over all three kinds; async methods are awaited through a
+dispatch helper, so drift between the implementations (the original
+``AsyncAFLServer.submit → None`` bug) can no longer hide.
+
+Also here: the canonical :class:`ClientReport` wire-format round-trip
+(lossless f64, documented-tolerance compressed-f32 roots, corrupt-payload
+rejection), the deprecation shim over ``repro.fl.server``, the f64-on-device
+parity run (jax x64 backend vs numpy_f64 at 1e-12 through the AFLClient →
+coordinator path, in a subprocess so x64 stays scoped), the 1e-6
+sharded-vs-sync solve check on that same x64 path, and the K=1000
+``fig2_clients`` run through the sharded backend.
+"""
+
+import asyncio
+import contextlib
+import inspect
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import analytic as al
+from repro.fl import (AFLClient, AFLServer, AsyncAFLServer, ClientReport,
+                      Coordinator, GammaSweep, ShardedCoordinator,
+                      make_report, masked_reports)
+from repro.fl import api as fl_api
+
+DIM, C, GAMMA = 24, 5, 1.0
+KINDS = ["sync", "async", "sharded"]
+# device (f32) arithmetic for the in-process sharded solve; the 1e-6/1e-12
+# claims are made on the x64 subprocess path below
+TOL = {"sync": dict(rtol=1e-8, atol=1e-10),
+       "async": dict(rtol=1e-8, atol=1e-10),
+       "sharded": dict(rtol=1e-3, atol=2e-3)}
+
+
+def _reports(n_clients=10, rows_each=8, seed=0):
+    rng = np.random.default_rng(seed)
+    n = n_clients * rows_each
+    x = rng.standard_normal((n, DIM))
+    y = np.eye(C)[rng.integers(0, C, n)]
+    reps = [make_report(k, x[k * rows_each:(k + 1) * rows_each],
+                        y[k * rows_each:(k + 1) * rows_each], GAMMA)
+            for k in range(n_clients)]
+    return x, y, reps
+
+
+async def _call(result):
+    """Protocol dispatch: await coroutine results, pass sync ones through."""
+    return await result if inspect.isawaitable(result) else result
+
+
+@contextlib.asynccontextmanager
+async def _make(kind, **kw):
+    if kind == "sync":
+        yield AFLServer(DIM, C, gamma=GAMMA, **kw)
+    elif kind == "sharded":
+        yield ShardedCoordinator(DIM, C, gamma=GAMMA)
+    else:
+        async with AsyncAFLServer(DIM, C, gamma=GAMMA, **kw) as srv:
+            yield srv
+
+
+@contextlib.asynccontextmanager
+async def _restore(kind, state):
+    if kind == "sync":
+        yield AFLServer.from_state(state)
+    elif kind == "sharded":
+        yield ShardedCoordinator.from_state(state)
+    else:
+        async with AsyncAFLServer.from_state(state) as srv:
+            yield srv
+
+
+@pytest.fixture(params=KINDS)
+def kind(request):
+    return request.param
+
+
+class TestCoordinatorConformance:
+    def test_satisfies_protocol(self, kind):
+        async def body():
+            async with _make(kind) as coord:
+                assert isinstance(coord, Coordinator)
+                assert (coord.dim, coord.num_classes, coord.gamma) == \
+                    (DIM, C, GAMMA)
+                assert coord.num_clients == 0
+
+        asyncio.run(body())
+
+    def test_submit_outcome_and_solve_matches_joint(self, kind):
+        x, y, reps = _reports()
+
+        async def body():
+            async with _make(kind) as coord:
+                outcomes = [await _call(coord.submit(r)) for r in reps]
+                assert all(isinstance(o, bool) for o in outcomes)
+                assert coord.num_clients == len(reps)
+                return await _call(coord.solve())
+
+        w = asyncio.run(body())
+        np.testing.assert_allclose(w, al.ridge_solve(x, y, 0.0), **TOL[kind])
+
+    def test_submit_many_and_partial_subsets(self, kind):
+        x, y, reps = _reports()
+
+        async def body():
+            async with _make(kind) as coord:
+                await _call(coord.submit_many(reps[:6]))
+                w_sub = await _call(coord.solve())
+                await _call(coord.submit_many(reps[6:]))
+                return w_sub, await _call(coord.solve())
+
+        w_sub, w_all = asyncio.run(body())
+        n6 = 6 * 8
+        np.testing.assert_allclose(
+            w_sub, al.ridge_solve(x[:n6], y[:n6], 0.0), **TOL[kind])
+        np.testing.assert_allclose(w_all, al.ridge_solve(x, y, 0.0),
+                                   **TOL[kind])
+
+    def test_duplicate_and_gamma_mismatch_raise(self, kind):
+        _, _, reps = _reports(n_clients=3)
+
+        async def body():
+            async with _make(kind) as coord:
+                await _call(coord.submit(reps[0]))
+                with pytest.raises(ValueError):
+                    await _call(coord.submit(reps[0]))
+                bad = make_report(99, np.zeros((4, DIM)), np.zeros((4, C)),
+                                  gamma=2.0)
+                with pytest.raises(ValueError):
+                    await _call(coord.submit(bad))
+                assert coord.num_clients == 1
+
+        asyncio.run(body())
+
+    def test_submit_many_stops_at_first_rejection(self, kind):
+        """Post-exception state is interchangeable across kinds: reports
+        after the rejected one are NOT aggregated."""
+        _, _, reps = _reports(n_clients=4)
+
+        async def body():
+            async with _make(kind) as coord:
+                await _call(coord.submit(reps[0]))
+                with pytest.raises(ValueError):
+                    await _call(coord.submit_many(
+                        [reps[1], reps[0], reps[2], reps[3]]))
+                assert coord.num_clients == 2      # reps[2:] never applied
+                await _call(coord.submit_many(reps[2:]))
+                assert coord.num_clients == 4
+
+        asyncio.run(body())
+
+    def test_empty_client_upload_is_exact_noop(self, kind):
+        """An empty client (0 rows, γI gram, rank-0 root) must fold with
+        outcome True and leave the solution unchanged."""
+        x, y, reps = _reports()
+        empty = make_report(999, np.zeros((0, DIM)), np.zeros((0, C)), GAMMA)
+        assert empty.root is not None and empty.root.shape == (0, DIM)
+
+        async def body():
+            async with _make(kind) as coord:
+                await _call(coord.submit_many(reps))
+                w0 = await _call(coord.solve())     # prime any factor cache
+                assert await _call(coord.submit(empty)) is True
+                return w0, await _call(coord.solve())
+
+        w0, w1 = asyncio.run(body())
+        np.testing.assert_allclose(w1, w0, rtol=1e-9,
+                                   atol=1e-6 if kind == "sharded" else 1e-12)
+
+    def test_solve_before_any_arrival_raises(self, kind):
+        async def body():
+            async with _make(kind) as coord:
+                with pytest.raises(ValueError):
+                    await _call(coord.solve())
+                with pytest.raises(ValueError):
+                    await _call(coord.solve_multi_gamma([0.0, 1.0]))
+
+        asyncio.run(body())
+
+    def test_multi_gamma_consistent_with_single_solves(self, kind):
+        _, _, reps = _reports()
+        gammas = [0.0, 0.1, 1.0]
+
+        async def body():
+            async with _make(kind) as coord:
+                await _call(coord.submit_many(reps))
+                sweep = await _call(coord.solve_multi_gamma(gammas))
+                singles = [await _call(coord.solve(g)) for g in gammas]
+                return sweep, singles
+
+        sweep, singles = asyncio.run(body())
+        assert len(sweep) == len(gammas)
+        for w_sweep, w_single in zip(sweep, singles):
+            np.testing.assert_allclose(w_sweep, w_single, rtol=1e-6,
+                                       atol=2e-3 if kind == "sharded"
+                                       else 1e-8)
+
+    def test_sweep_scores_holdout_and_picks_best(self, kind):
+        x, y, reps = _reports()
+        labels = np.argmax(y, -1)
+        gammas = [0.0, 1.0, 10.0]
+
+        async def body():
+            async with _make(kind) as coord:
+                await _call(coord.submit_many(reps))
+                return await _call(coord.sweep(gammas, (x, labels)))
+
+        sweep = asyncio.run(body())
+        assert isinstance(sweep, GammaSweep)
+        assert sweep.gammas == tuple(gammas)
+        assert len(sweep.accuracies) == len(gammas) == len(sweep.weights)
+        assert sweep.best_gamma in gammas
+        assert sweep.best_accuracy == max(sweep.accuracies)
+        i = sweep.gammas.index(sweep.best_gamma)
+        np.testing.assert_array_equal(sweep.best_weight, sweep.weights[i])
+
+    def test_state_roundtrip_same_kind(self, kind):
+        _, _, reps = _reports()
+
+        async def body():
+            async with _make(kind) as coord:
+                await _call(coord.submit_many(reps[:7]))
+                state = await _call(coord.state())
+                w0 = await _call(coord.solve())
+                async with _restore(kind, state) as back:
+                    assert back.num_clients == 7
+                    w1 = await _call(back.solve())
+                    # dedup survives the round trip…
+                    with pytest.raises(ValueError):
+                        await _call(back.submit(reps[0]))
+                    # …and aggregation resumes
+                    await _call(back.submit_many(reps[7:]))
+                    w_all = await _call(back.solve())
+                return w0, w1, w_all
+
+        w0, w1, w_all = asyncio.run(body())
+        np.testing.assert_allclose(w1, w0, rtol=1e-6,
+                                   atol=1e-4 if kind == "sharded" else 1e-10)
+        x, y, _ = _reports()
+        np.testing.assert_allclose(w_all, al.ridge_solve(x, y, 0.0),
+                                   **TOL[kind])
+
+    def test_state_interchangeable_across_kinds(self, kind):
+        """One checkpoint schema: state written by any kind restores into a
+        plain AFLServer (and vice versa) with the same solution."""
+        _, _, reps = _reports()
+
+        async def body():
+            async with _make(kind) as coord:
+                await _call(coord.submit_many(reps))
+                return await _call(coord.state()), await _call(coord.solve())
+
+        state, w = asyncio.run(body())
+        srv = AFLServer.from_state(state)
+        assert srv.num_clients == len(reps)
+        np.testing.assert_allclose(srv.solve(), w, rtol=1e-5,
+                                   atol=2e-3 if kind == "sharded" else 1e-10)
+
+    def test_masked_cohort_aggregates_exactly(self, kind):
+        x, y, reps = _reports(seed=3)
+        masked = masked_reports(reps, seed=7)
+
+        async def body():
+            async with _make(kind) as coord:
+                await _call(coord.submit_many(masked))
+                return await _call(coord.solve())
+
+        w = asyncio.run(body())
+        loose = dict(rtol=1e-3, atol=2e-3) if kind == "sharded" \
+            else dict(rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(w, al.ridge_solve(x, y, 0.0), **loose)
+
+
+class TestShardedPlacement:
+    def test_round_robin_spreads_clients(self):
+        _, _, reps = _reports()
+        coord = ShardedCoordinator(DIM, C, gamma=GAMMA)
+        coord.submit_many(reps)
+        counted = sum(float(s.clients) for s in coord._shards)
+        assert counted == len(reps)
+        # each shard's Gram is PSD and they sum to the aggregate
+        agg = sum(np.asarray(s.gram) for s in coord._shards)
+        srv = AFLServer(DIM, C, gamma=GAMMA)
+        srv.submit_many(reps)
+        np.testing.assert_allclose(agg, srv._stats.gram, rtol=1e-12,
+                                   atol=1e-9)
+
+
+class TestClientReportWire:
+    def test_f64_roundtrip_is_lossless(self):
+        _, _, reps = _reports(n_clients=2, rows_each=6)   # rows < d → root
+        r = reps[0]
+        assert r.root is not None
+        back = ClientReport.from_bytes(r.to_bytes())
+        assert (back.client_id, back.gamma, back.count) == \
+            (r.client_id, r.gamma, r.count)
+        np.testing.assert_array_equal(back.gram, r.gram)
+        np.testing.assert_array_equal(back.moment, r.moment)
+        np.testing.assert_array_equal(back.root, r.root)
+
+    def test_rootless_report_roundtrip(self):
+        _, _, reps = _reports(n_clients=2)
+        r = masked_reports(reps, seed=0)[0]
+        assert r.root is None
+        back = ClientReport.from_bytes(r.to_bytes())
+        assert back.root is None
+        np.testing.assert_array_equal(back.gram, r.gram)
+
+    def test_f32_wire_within_documented_tolerance(self):
+        x, y, reps = _reports(n_clients=4, rows_each=6)
+        r = reps[0]
+        back = ClientReport.from_bytes(r.to_bytes(dtype=np.float32))
+        np.testing.assert_allclose(back.gram, r.gram, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(back.moment, r.moment, rtol=1e-5,
+                                   atol=1e-5)
+
+    def test_compressed_f32_root_tolerance(self):
+        """compress_root=True keeps gram/moment exact; the folded rootᵀ·root
+        deviates ≲1e-6 relative (the documented rank-update tolerance)."""
+        x, y, reps = _reports(n_clients=4, rows_each=6)
+        r = reps[1]
+        back = ClientReport.from_bytes(r.to_bytes(compress_root=True))
+        np.testing.assert_array_equal(back.gram, r.gram)     # f64: exact
+        np.testing.assert_array_equal(back.moment, r.moment)
+        scale = np.abs(r.root.T @ r.root).max()
+        err = np.abs(back.root.T @ back.root - r.root.T @ r.root).max()
+        assert err <= 1e-6 * max(scale, 1.0)
+        # the solve through a compressed-root rank update stays within tol
+        srv = AFLServer(DIM, C, gamma=GAMMA, update_rank_budget=8)
+        srv.submit_many(reps[:1] + reps[2:])
+        srv.solve()
+        srv.submit(back)
+        np.testing.assert_allclose(srv.solve(), al.ridge_solve(x, y, 0.0),
+                                   rtol=1e-5, atol=1e-6)
+
+    @pytest.mark.parametrize("mutate", [
+        lambda b: b[:-1],                                  # truncated
+        lambda b: b"XXXX" + b[4:],                         # bad magic
+        lambda b: b[:len(b) // 2] +
+        bytes([b[len(b) // 2] ^ 0xFF]) + b[len(b) // 2 + 1:],  # bit flip
+        lambda b: b + b"\x00" * 8,                         # trailing junk
+        lambda b: b"AFLR\xff\xff\xff\x7f",                 # absurd header len
+    ])
+    def test_corrupt_payloads_rejected(self, mutate):
+        _, _, reps = _reports(n_clients=1, rows_each=6)
+        wire = reps[0].to_bytes()
+        with pytest.raises(ValueError):
+            ClientReport.from_bytes(mutate(wire))
+
+    def test_nonfinite_statistics_rejected(self):
+        import dataclasses
+        _, _, reps = _reports(n_clients=1, rows_each=6)
+        bad_gram = dataclasses.replace(reps[0],
+                                       gram=np.full((DIM, DIM), np.nan))
+        with pytest.raises(ValueError):
+            ClientReport.from_bytes(bad_gram.to_bytes())
+        # a NaN root with clean gram/moment would silently poison every
+        # cached factor through rank_update — ingest must reject it too
+        bad_root = dataclasses.replace(
+            reps[0], root=np.full_like(reps[0].root, np.inf))
+        with pytest.raises(ValueError):
+            ClientReport.from_bytes(bad_root.to_bytes())
+
+    def test_unknown_schema_version_rejected(self):
+        wire = bytearray(_reports(n_clients=1)[2][0].to_bytes())
+        # bump the version field inside the JSON header
+        idx = wire.find(b'"version": 1')
+        assert idx > 0
+        wire[idx: idx + len(b'"version": 1')] = b'"version": 9'
+        with pytest.raises(ValueError):
+            ClientReport.from_bytes(bytes(wire))
+
+
+class TestDeprecationShim:
+    def test_legacy_imports_warn_and_alias(self):
+        import repro.fl.server as legacy
+
+        for name, canonical in [("AFLServer", fl_api.AFLServer),
+                                ("ClientReport", fl_api.ClientReport),
+                                ("make_report", fl_api.make_report),
+                                ("masked_reports", fl_api.masked_reports)]:
+            with pytest.warns(DeprecationWarning, match="repro.fl.server"):
+                obj = getattr(legacy, name)
+            assert obj is canonical
+
+    def test_unknown_attribute_still_raises(self):
+        import repro.fl.server as legacy
+
+        with pytest.raises(AttributeError):
+            legacy.does_not_exist
+
+
+# ---------------------------------------------------------------------------
+# x64 path: f64-on-device parity + the 1e-6 sharded-vs-sync guarantee
+# ---------------------------------------------------------------------------
+
+_X64_SUBPROC = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ["JAX_ENABLE_X64"] = "1"
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core import analytic as al
+    from repro.fl import AFLClient, AFLServer, ClientReport, ShardedCoordinator
+
+    rng = np.random.default_rng(0)
+    d, c, k, per = 32, 5, 64, 8
+    x = rng.standard_normal((k, per, d))
+    y = np.eye(c)[rng.integers(0, c, (k, per))]
+
+    sync = AFLServer(d, c, gamma=1.0)
+    shard = ShardedCoordinator(d, c, gamma=1.0)
+    assert shard.num_shards == 8
+    for i in range(k):
+        # f64-on-device local stage vs the host-f64 reference: the wire
+        # reports must agree to 1e-12
+        r_jax = AFLClient(i, gamma=1.0, backend="jax",
+                          dtype=jnp.float64).local_stage(
+                              jnp.asarray(x[i]), jnp.asarray(y[i]))
+        r_np = AFLClient(i, gamma=1.0).local_stage(x[i], y[i])
+        assert np.abs(r_jax.gram - r_np.gram).max() < 1e-12
+        assert np.abs(r_jax.moment - r_np.moment).max() < 1e-12
+        sync.submit(r_np)
+        shard.submit(ClientReport.from_bytes(r_jax.to_bytes()))
+
+    for tg in (0.0, 0.5):
+        w_sync, w_shard = sync.solve(tg), shard.solve(tg)
+        err = np.abs(w_shard - w_sync).max()
+        assert err < 1e-6, f"sharded-vs-sync at target {tg}: {err}"
+    # end-to-end f64 parity through the coordinator path
+    flat_x = x.reshape(-1, d); flat_y = y.reshape(-1, c)
+    w_ref = al.ridge_solve(flat_x, flat_y, 0.0)
+    assert np.abs(sync.solve() - w_ref).max() < 1e-12
+    assert np.abs(shard.solve() - w_ref).max() < 1e-9
+    for w_a, w_b in zip(sync.solve_multi_gamma([0.0, 0.1, 1.0]),
+                        shard.solve_multi_gamma([0.0, 0.1, 1.0])):
+        assert np.abs(w_a - w_b).max() < 1e-9
+    print("OK")
+    """
+)
+
+
+def test_x64_f64_parity_and_sharded_matches_sync_1e6():
+    """jax_enable_x64 in a subprocess (x64 is process-global): the jax-f64
+    AFLClient matches numpy_f64 at 1e-12, and the 8-shard device solve
+    matches the sync server at 1e-6 (measured ~1e-13)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    res = subprocess.run(
+        [sys.executable, "-c", _X64_SUBPROC], capture_output=True, text=True,
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert res.returncode == 0, res.stderr
+    assert "OK" in res.stdout
+
+
+# ---------------------------------------------------------------------------
+# K=1000 through the sharded backend (the ROADMAP 1000-client item)
+# ---------------------------------------------------------------------------
+
+def test_fig2_k1000_goes_through_sharded_coordinator():
+    from benchmarks.common import feature_data
+    from benchmarks.fig2_clients import afl_sharded
+    from repro.config import FLConfig
+
+    train, test = feature_data()
+    fl = FLConfig(num_clients=1000, partition="niid1", alpha=0.1)
+    acc, coord = afl_sharded(train, test, fl)
+    assert isinstance(coord, ShardedCoordinator)
+    assert coord.num_clients == 1000
+    # client-number invariance survives the sharded device solve (f32 here,
+    # so compare accuracies rather than weights)
+    from repro.fl import afl
+    ref = afl.run_afl(train, test, fl)
+    assert abs(acc - ref.accuracy) < 0.02

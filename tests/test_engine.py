@@ -136,7 +136,7 @@ class TestFactorCaching:
             rtol=1e-12, atol=1e-12)
 
     def test_server_cache_reused_and_invalidated(self):
-        from repro.fl.server import AFLServer, make_report
+        from repro.fl import AFLServer, make_report
 
         rng = np.random.default_rng(7)
         d, c = 16, 3

@@ -9,8 +9,7 @@ from repro.config import FLConfig
 from repro.core import analytic as al
 from repro.core.features import identity_map, relu_map, rff_map
 from repro.data import synthetic as D
-from repro.fl import afl
-from repro.fl.server import AFLServer, make_report, masked_reports
+from repro.fl import AFLServer, afl, make_report, masked_reports
 
 
 def _reports(n_clients=8, n=400, d=24, c=5, gamma=1.0, seed=0):
@@ -156,6 +155,15 @@ class TestCheckpoint:
         ckpt.save(tmp_path / "ck", tree)
         with pytest.raises(ValueError):
             ckpt.restore(tmp_path / "ck", like={"w": np.ones((2, 2))})
+
+    def test_save_server_async_coroutine_state_guarded(self, tmp_path):
+        """AsyncAFLServer.state() is a coroutine; the sync save_server must
+        fail loudly with guidance instead of pickling a coroutine object."""
+        from repro.fl import AsyncAFLServer
+
+        srv = AsyncAFLServer(24, 5, gamma=1.0)
+        with pytest.raises(TypeError, match="await server.state"):
+            ckpt.save_server(tmp_path / "srv", srv)
 
     def test_server_roundtrip_resumes_aggregation(self, tmp_path):
         x, y, reps = _reports()
