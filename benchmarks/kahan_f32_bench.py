@@ -1,0 +1,120 @@
+"""Kahan-compensated f32 vs f64-on-device — through the AFLClient path.
+
+The ROADMAP's f64 item left one half open: is compensated-f32 accumulation
+(``kahan=True``) a viable cheap substitute for enabling x64 on device? This
+benchmark answers it on the canonical client path — ``AFLClient.update``
+folding many batches into engine SuffStats, ``report()`` emitting the wire
+report — comparing three device configurations against the host numpy-f64
+reference:
+
+  * ``jax f32``         — plain f32 accumulation (the default device mode)
+  * ``jax f32+kahan``   — compensated accumulation (2× adds, same dtype)
+  * ``jax f64``         — x64 end-to-end (toggled for the run, restored
+                          after, mirroring the scoped-x64 conformance test)
+
+Reported per (d, batches): max relative error of the accumulated Gram and
+moment vs the host-f64 reference, and the wall time of the whole local
+stage. The accumulation uses offset features (μ=1) so plain-f32
+cancellation drift actually shows at realistic batch counts.
+
+  PYTHONPATH=src python -m benchmarks.kahan_f32_bench
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _rel_err(a, b):
+    scale = max(float(np.abs(b).max()), 1e-30)
+    return float(np.abs(np.asarray(a, np.float64) - b).max() / scale)
+
+
+def _local_stage(make_client, batches):
+    client = make_client()
+    t0 = time.perf_counter()
+    for x, y in batches:
+        client.update(x, y)
+    report = client.report()          # materializes on host: device sync
+    dt = time.perf_counter() - t0
+    return report, dt
+
+
+def _bench_case(dim, classes, n_batches, batch_rows, seed=0):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.fl.api import AFLClient
+
+    rng = np.random.default_rng(seed)
+    # offset features: Gram entries grow ~n·(1+ρ), the accumulation regime
+    # where plain f32 loses digits batch over batch
+    batches = [
+        (rng.standard_normal((batch_rows, dim)).astype(np.float32) + 1.0,
+         np.eye(classes, dtype=np.float32)[
+             rng.integers(0, classes, batch_rows)])
+        for _ in range(n_batches)
+    ]
+
+    ref, _ = _local_stage(lambda: AFLClient(0, gamma=1.0), batches)
+
+    out = {"dim": dim, "classes": classes, "batches": n_batches,
+           "rows_per_batch": batch_rows,
+           "total_rows": n_batches * batch_rows, "variants": {}}
+
+    def record(name, make_client):
+        report, dt = _local_stage(make_client, batches)
+        out["variants"][name] = {
+            "gram_rel_err": _rel_err(report.gram, ref.gram),
+            "moment_rel_err": _rel_err(report.moment, ref.moment),
+            "seconds": dt,
+        }
+
+    record("jax_f32", lambda: AFLClient(0, gamma=1.0, backend="jax"))
+    record("jax_f32_kahan",
+           lambda: AFLClient(0, gamma=1.0, backend="jax", kahan=True))
+    # f64-on-device: x64 is process-global — toggle it for this measurement
+    # only and restore, exactly like the scoped-x64 conformance subprocess
+    jax.config.update("jax_enable_x64", True)
+    try:
+        record("jax_f64", lambda: AFLClient(0, gamma=1.0, backend="jax",
+                                            dtype=jnp.float64))
+    finally:
+        jax.config.update("jax_enable_x64", False)
+    return out
+
+
+def run(quick: bool = False):
+    cases = ([(256, 16, 64, 256)] if quick
+             else [(512, 32, 256, 256), (1024, 32, 256, 256)])
+    rows = []
+    for dim, classes, n_batches, batch_rows in cases:
+        case = _bench_case(dim, classes, n_batches, batch_rows)
+        rows.append(case)
+        print(f"d={dim} n={case['total_rows']} rows "
+              f"({n_batches}×{batch_rows}):")
+        f64 = case["variants"]["jax_f64"]["seconds"]
+        for name, v in case["variants"].items():
+            print(f"  {name:14s} gram_rel_err={v['gram_rel_err']:.3e}  "
+                  f"moment_rel_err={v['moment_rel_err']:.3e}  "
+                  f"{v['seconds']:.3f}s ({v['seconds'] / f64:.2f}× f64)")
+    return {
+        "description": "Kahan-compensated f32 vs f64-on-device through "
+                       "AFLClient.update/report (reference: host numpy_f64; "
+                       "offset μ=1 features; CPU host — TPU cost still "
+                       "unmeasured)",
+        "cases": rows,
+    }
+
+
+if __name__ == "__main__":
+    import json
+    import pathlib
+
+    out = run()
+    path = pathlib.Path("results/bench/kahan_f32_bench.json")
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(out, indent=1))
+    print(f"wrote {path}")

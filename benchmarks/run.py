@@ -29,6 +29,7 @@ MODULES = [
     ("kernels_micro", "Pallas kernel correctness sweep"),
     ("engine_bench", "Engine — cached-factorization solve throughput"),
     ("async_server_bench", "Async serving — rank-k update vs refactor"),
+    ("kahan_f32_bench", "Kahan-compensated f32 vs f64-on-device (AFLClient)"),
     ("roofline", "§Roofline — dry-run derived"),
 ]
 

@@ -13,7 +13,11 @@ an AFL property: the only trained state is (C_agg, Q_agg, W)).
 ``save_server`` / ``load_server`` round-trip any :class:`repro.fl.api.
 Coordinator` state (all coordinator kinds share one checkpoint schema),
 enabling the straggler workflow: checkpoint mid-aggregation, restart — as
-the same kind or a different one — and late clients keep submitting.
+the same kind or a different one — and late clients keep submitting. A
+:class:`~repro.fl.service.RemoteCoordinator` works as the source too — its
+``state()`` downloads the federation checkpoint over the wire — so an
+operator can snapshot a live remote federation and restore it into any
+local coordinator kind behind a fresh FederationService.
 """
 
 from __future__ import annotations
@@ -100,7 +104,7 @@ def save_server(path, server, metadata: Optional[dict] = None) -> None:
             "async coordinator state() is a coroutine; checkpoint it from "
             "the event loop: ckpt.save(path, await server.state())")
     meta = dict(metadata or {})
-    meta["kind"] = "afl_server"
+    meta["kind"] = type(server).__name__
     save(path, state, metadata=meta)
 
 

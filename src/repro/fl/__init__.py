@@ -1,15 +1,21 @@
 """Federated-learning surface: one client/coordinator API (see fl/api.py).
 
-Canonical names live in :mod:`repro.fl.api` and are re-exported here;
-``repro.fl.server`` is a one-release deprecation shim over the same objects.
-Driver loops (:mod:`repro.fl.afl`), gradient baselines, and partitioners stay
-as submodules.
+Canonical in-process names live in :mod:`repro.fl.api`; the serving layer —
+:class:`FederationService`, the in-proc/HTTP transports, and the wire-true
+:class:`RemoteCoordinator` — lives in :mod:`repro.fl.service`, with the
+typed failure taxonomy in :mod:`repro.fl.errors`. All are re-exported here.
+Driver loops (:mod:`repro.fl.afl`), gradient baselines, and partitioners
+stay as submodules.
 """
 
 from repro.fl.api import (AFLClient, AFLServer, ClientReport, Coordinator,
                           GammaSweep, SCHEMA_VERSION, ShardedCoordinator,
-                          evaluate_weight, make_report, masked_reports)
+                          VersionedWeights, evaluate_weight, make_report,
+                          masked_reports)
 from repro.fl.async_server import AsyncAFLServer
+from repro.fl.errors import ServiceError
+from repro.fl.service import (FederationService, HttpTransport,
+                              InProcTransport, RemoteCoordinator, serve_http)
 
 __all__ = [
     "AFLClient",
@@ -17,10 +23,17 @@ __all__ = [
     "AsyncAFLServer",
     "ClientReport",
     "Coordinator",
+    "FederationService",
     "GammaSweep",
+    "HttpTransport",
+    "InProcTransport",
+    "RemoteCoordinator",
     "SCHEMA_VERSION",
+    "ServiceError",
     "ShardedCoordinator",
+    "VersionedWeights",
     "evaluate_weight",
     "make_report",
     "masked_reports",
+    "serve_http",
 ]

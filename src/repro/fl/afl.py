@@ -52,6 +52,7 @@ def run_afl(
     backbone_fn: Optional[Callable] = None,
     feature_map: Optional[Callable] = None,
     pairwise: bool = False,
+    coordinator=None,
 ) -> AFLResult:
     """Full AFL: partition → local stages (one epoch each) → single-round
     aggregation (+ RI restore) → evaluate.
@@ -60,12 +61,18 @@ def run_afl(
     (backbone) features before the analytic head (paper §5 / core.features) —
     the regression stays linear in φ-space, so every AFL invariance holds.
 
+    ``coordinator``: where the reports go — any synchronous
+    :class:`~repro.fl.api.Coordinator` (defaults to a fresh in-process
+    :class:`~repro.fl.api.AFLServer`), or a ``http://`` URL string, which is
+    wrapped in a :class:`~repro.fl.service.RemoteCoordinator` so the whole
+    driver runs against a live :class:`~repro.fl.service.FederationService`
+    with no other call-site change.
+
     The production path (``use_ri=True``, ``pairwise=False``) drives the
     canonical API: one :class:`~repro.fl.api.AFLClient` local stage per
-    client, one :class:`~repro.fl.api.ClientReport` submitted to an
-    :class:`~repro.fl.api.AFLServer`, one solve. The paper-literal
-    ``pairwise`` recursion and the no-RI ablation route through
-    :mod:`repro.core.analytic` (Table 3 / A.1).
+    client, one :class:`~repro.fl.api.ClientReport` submitted to the
+    coordinator, one solve. The paper-literal ``pairwise`` recursion and the
+    no-RI ablation route through :mod:`repro.core.analytic` (Table 3 / A.1).
     """
     t0 = time.perf_counter()
     x_tr, x_te = train.x, test.x
@@ -81,7 +88,16 @@ def run_afl(
                            alpha=fl.alpha, shards_per_client=fl.shards_per_client,
                            seed=fl.seed)
     if fl.use_ri and not pairwise:
-        server = AFLServer(x_tr.shape[1], train.num_classes, gamma=fl.gamma)
+        if isinstance(coordinator, str):
+            from repro.fl.service import RemoteCoordinator
+
+            coordinator = RemoteCoordinator(coordinator)
+        server = coordinator if coordinator is not None else AFLServer(
+            x_tr.shape[1], train.num_classes, gamma=fl.gamma)
+        if (server.dim, server.gamma) != (x_tr.shape[1], fl.gamma):
+            raise ValueError(
+                f"coordinator (dim={server.dim}, γ={server.gamma}) does not "
+                f"match the run (dim={x_tr.shape[1]}, γ={fl.gamma})")
         for cid, idx in enumerate(parts):
             # empty clients still upload (γI Gram, 0 moment) — the AA law
             # and the RI restore handle them exactly.

@@ -24,8 +24,11 @@ one aggregation — and this module is that protocol's single surface:
 
 All aggregation math routes through :class:`repro.core.engine.AnalyticEngine`;
 this module owns only protocol-level bookkeeping (ids, γ checks, caches,
-shard placement). ``repro.fl.server`` remains as a one-release deprecation
-shim over these names.
+shard placement). The transport layer — :class:`~repro.fl.service.
+FederationService`, the in-proc/HTTP transports, and the wire-true
+:class:`~repro.fl.service.RemoteCoordinator` client — lives in
+:mod:`repro.fl.service`; failure modes are the typed taxonomy of
+:mod:`repro.fl.errors`.
 """
 
 from __future__ import annotations
@@ -33,6 +36,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import struct
+import uuid
 import zlib
 from typing import (Any, Callable, Dict, Iterable, List, Optional, Protocol,
                     Sequence, Tuple, runtime_checkable)
@@ -40,6 +44,7 @@ from typing import (Any, Callable, Dict, Iterable, List, Optional, Protocol,
 import numpy as np
 
 from repro.core.engine import AnalyticEngine, Factorization, SuffStats
+from repro.fl.errors import (DuplicateClient, EmptyFederation, GammaMismatch)
 
 __all__ = [
     "SCHEMA_VERSION",
@@ -49,6 +54,7 @@ __all__ = [
     "masked_reports",
     "evaluate_weight",
     "GammaSweep",
+    "VersionedWeights",
     "Coordinator",
     "AFLServer",
     "ShardedCoordinator",
@@ -220,7 +226,9 @@ class AFLClient:
     The engine backend is pluggable: ``numpy_f64`` (default, paper-faithful
     host arithmetic) or ``jax`` (device accumulation, optionally through the
     Pallas Gram kernel; pass ``dtype=jnp.float64`` under ``jax_enable_x64``
-    for f64-on-device).
+    for f64-on-device, or ``kahan=True`` for compensated-f32 accumulation —
+    see ``benchmarks/kahan_f32_bench.py`` for the measured accuracy/cost
+    trade against both).
     """
 
     def __init__(
@@ -233,6 +241,7 @@ class AFLClient:
         backend: str = "numpy_f64",
         dtype=None,
         use_kernel: bool = False,
+        kahan: bool = False,
         embed_batch: int = 256,
     ):
         self.client_id = client_id
@@ -241,7 +250,8 @@ class AFLClient:
         self.feature_map = feature_map
         self.embed_batch = int(embed_batch)
         self.engine = AnalyticEngine(
-            backend, gamma=gamma, dtype=dtype, use_kernel=use_kernel)
+            backend, gamma=gamma, dtype=dtype, use_kernel=use_kernel,
+            kahan=kahan)
         self._stats: Optional[SuffStats] = None
         self._root_blocks: Optional[List[np.ndarray]] = []
         self._rows = 0
@@ -347,6 +357,32 @@ def evaluate_weight(weight, x, y) -> float:
 
 
 @dataclasses.dataclass(frozen=True)
+class VersionedWeights:
+    """A solved-head snapshot stamped with its ETag-style staleness token.
+
+    ``etag`` is opaque and binds everything that identifies THIS head: the
+    coordinator's submission epoch (``version``, bumped on every successful
+    submit), the requested ``target_gamma``, and a per-coordinator-instance
+    salt (so a token minted before a checkpoint restore can never
+    accidentally match a restored server that happens to reach the same
+    epoch count). A downloader that remembers its last token asks
+    ``weights(target_gamma, if_etag=token)`` and gets a cheap not-modified
+    answer (``weight is None``) instead of a re-solve + re-download when
+    nothing new arrived — and a token minted for one γ can never validate a
+    download of another.
+    """
+
+    version: int
+    target_gamma: float
+    weight: Optional[np.ndarray]
+    etag: str = ""
+
+    @property
+    def not_modified(self) -> bool:
+        return self.weight is None
+
+
+@dataclasses.dataclass(frozen=True)
 class GammaSweep:
     """Result of a server-side γ model sweep against a holdout set."""
 
@@ -376,9 +412,9 @@ def _ingest_upload(report: ClientReport, *, dim: int, gamma: float,
     lazily re-derivable γI (uploads carry the regularized C_k^r, the engine
     keeps raw Grams with lazy per-client γ)."""
     if report.client_id in seen:
-        raise ValueError(f"client {report.client_id} already aggregated")
+        raise DuplicateClient(f"client {report.client_id} already aggregated")
     if report.gamma != gamma:
-        raise ValueError(f"client γ={report.gamma} != server γ={gamma}")
+        raise GammaMismatch(f"client γ={report.gamma} != server γ={gamma}")
     raw = np.asarray(report.gram, np.float64) - gamma * np.eye(dim)
     return SuffStats(
         gram=raw,
@@ -411,7 +447,10 @@ class Coordinator(Protocol):
     care use ``await``-when-awaitable dispatch (see the conformance suite).
     ``submit`` returns the fold outcome: True when any cached factorization
     survived the arrival (rank-updated in place, or nothing was cached),
-    False when the next solve will refactor.
+    False when the next solve will refactor. ``version`` is the submission
+    epoch — it changes on every successful submit — and ``weights`` returns
+    a :class:`VersionedWeights` snapshot honoring ``if_etag`` as an
+    ETag-style staleness token (opaque; binds epoch + γ + instance).
     """
 
     dim: int
@@ -420,6 +459,9 @@ class Coordinator(Protocol):
 
     @property
     def num_clients(self) -> int: ...
+
+    @property
+    def version(self) -> int: ...
 
     def submit(self, report: ClientReport): ...
 
@@ -430,6 +472,9 @@ class Coordinator(Protocol):
     def solve_multi_gamma(self, gammas: Sequence[float]): ...
 
     def sweep(self, gammas: Sequence[float], holdout): ...
+
+    def weights(self, target_gamma: float = 0.0, *,
+                if_etag: Optional[str] = None): ...
 
     def state(self) -> Dict[str, np.ndarray]: ...
 
@@ -473,10 +518,20 @@ class AFLServer:
         self._stats = self.engine.init(dim, num_classes)
         self._seen: set[int] = set()
         self._factor_cache: Dict[float, Factorization] = {}
+        self._version = 0
+        # per-instance etag salt: tokens minted against THIS coordinator can
+        # never validate against a restored/rebuilt one at the same epoch
+        self._etag_salt = uuid.uuid4().hex[:8]
 
     @property
     def num_clients(self) -> int:
         return len(self._seen)
+
+    @property
+    def version(self) -> int:
+        """Submission epoch: bumps on every successful submit. The staleness
+        token :meth:`weights` honors (restored checkpoints resume at k)."""
+        return self._version
 
     def submit(self, report: ClientReport) -> bool:
         """Merge one upload; returns True when the cached factors survived
@@ -486,6 +541,7 @@ class AFLServer:
                                 seen=self._seen)
         self._stats = self.engine.merge(self._stats, upload)
         self._seen.add(report.client_id)
+        self._version += 1
         if self._try_factor_update(report.root):
             return True
         self._factor_cache.clear()
@@ -522,7 +578,7 @@ class AFLServer:
         solution (and re-factors, since the statistics changed).
         """
         if not self._seen:
-            raise ValueError("no clients aggregated")
+            raise EmptyFederation("no clients aggregated")
         key = float(target_gamma)
         fact = self._factor_cache.get(key)
         if fact is None:
@@ -534,7 +590,7 @@ class AFLServer:
         """γ model sweep over the current aggregate: one eigendecomposition,
         one weight per candidate ridge (see engine.solve_multi_gamma)."""
         if not self._seen:
-            raise ValueError("no clients aggregated")
+            raise EmptyFederation("no clients aggregated")
         return self.engine.solve_multi_gamma(self._stats, gammas)
 
     def sweep(self, gammas: Sequence[float], holdout) -> GammaSweep:
@@ -542,6 +598,23 @@ class AFLServer:
         eigendecomposition and score each on ``holdout = (x, y)``."""
         return _sweep_from_weights(
             self.solve_multi_gamma(gammas), gammas, holdout)
+
+    def _etag(self, target_gamma: float) -> str:
+        return f"{self._etag_salt}-{self._version}-{float(target_gamma)!r}"
+
+    def weights(self, target_gamma: float = 0.0, *,
+                if_etag: Optional[str] = None) -> VersionedWeights:
+        """Versioned solved-head download. ``if_etag`` equal to the current
+        token for this (epoch, γ) short-circuits to a not-modified snapshot
+        (``weight is None``) without solving; the token is opaque and
+        γ-bound, so a head cached for one γ can never be revalidated as
+        another's."""
+        tag = self._etag(target_gamma)
+        if if_etag is not None and str(if_etag) == tag:
+            return VersionedWeights(self._version, float(target_gamma),
+                                    None, tag)
+        return VersionedWeights(self._version, float(target_gamma),
+                                self.solve(target_gamma), tag)
 
     def state(self) -> Dict[str, np.ndarray]:
         """Serializable coordinator state (see repro.checkpoint). ``gram``
@@ -562,6 +635,7 @@ class AFLServer:
         srv = cls(dim, num_classes or state["moment"].shape[1],
                   float(state["gamma"]))
         srv._stats, srv._seen = _restore_stats(state, srv.gamma, dim)
+        srv._version = len(srv._seen)
         return srv
 
 
@@ -611,6 +685,9 @@ class ShardedCoordinator:
         self._seen: set[int] = set()
         self._order = 0
         self._solve_fns: Dict[float, Any] = {}
+        self._version = 0
+        self._etag_salt = uuid.uuid4().hex[:8]
+        self._last_rebalance: Optional[Tuple[int, int]] = None
 
     @property
     def num_shards(self) -> int:
@@ -619,6 +696,11 @@ class ShardedCoordinator:
     @property
     def num_clients(self) -> int:
         return len(self._seen)
+
+    @property
+    def version(self) -> int:
+        """Submission epoch (see :meth:`AFLServer.version`)."""
+        return self._version
 
     def submit(self, report: ClientReport) -> bool:
         """Merge one upload into its round-robin shard. Returns True — the
@@ -630,11 +712,53 @@ class ShardedCoordinator:
         self._order += 1
         self._shards[i] = self.engine.merge(self._shards[i], upload)
         self._seen.add(report.client_id)
+        self._version += 1
         return True
 
     def submit_many(self, reports: Iterable[ClientReport]) -> None:
         for r in reports:
             self.submit(r)
+
+    def occupancy(self) -> List[int]:
+        """Clients currently resident per shard (placement observability —
+        the input signal for :meth:`rebalance` and, next, load-aware
+        placement)."""
+        return [int(s.clients) for s in self._shards]
+
+    def rebalance(self) -> Optional[Tuple[int, int]]:
+        """Migrate the fullest shard's statistics into the emptiest.
+
+        The AA law makes shard contents additive, so migration is a merge:
+        the aggregate — and therefore every solve — is invariant under it.
+        This is the primitive mid-federation mesh growth / load-aware
+        placement builds on: a new empty shard can absorb the hottest
+        shard's load in O(d²) host work, no device traffic. The freed shard
+        becomes the next round-robin target, so future arrivals fill the
+        vacated slot first.
+
+        Returns ``(src, dst)`` shard indices, or ``None`` when there is
+        nothing to move: fewer than 2 shards, the fullest holds at most one
+        more client than the emptiest, or the candidate move would just
+        undo this epoch's previous migration (without this guard,
+        ``while coord.rebalance(): ...`` would ping-pong the same blob
+        between two shards forever — at most one migration is performed per
+        submission epoch).
+        """
+        occ = self.occupancy()
+        if len(occ) < 2:
+            return None
+        src = int(np.argmax(occ))
+        dst = int(np.argmin(occ))
+        if occ[src] - occ[dst] <= 1:
+            return None
+        if self._last_rebalance == (self._version, src):
+            return None                    # would re-move this epoch's blob
+        self._shards[dst] = self.engine.merge(self._shards[dst],
+                                              self._shards[src])
+        self._shards[src] = self.engine.init(self.dim, self.num_classes)
+        self._order = src                  # fill the vacated shard next
+        self._last_rebalance = (self._version, dst)
+        return src, dst
 
     def _merged(self) -> SuffStats:
         agg = self._shards[0]
@@ -662,7 +786,7 @@ class ShardedCoordinator:
         from repro.core.distributed import make_federated_solve
 
         if not self._seen:
-            raise ValueError("no clients aggregated")
+            raise EmptyFederation("no clients aggregated")
         key = float(target_gamma)
         fn = self._solve_fns.get(key)
         if fn is None:
@@ -676,16 +800,31 @@ class ShardedCoordinator:
         """γ model sweep on the merged statistics (host engine, one eigh) —
         identical math to :meth:`AFLServer.solve_multi_gamma`."""
         if not self._seen:
-            raise ValueError("no clients aggregated")
+            raise EmptyFederation("no clients aggregated")
         return self.engine.solve_multi_gamma(self._merged(), gammas)
 
     def sweep(self, gammas: Sequence[float], holdout) -> GammaSweep:
         return _sweep_from_weights(
             self.solve_multi_gamma(gammas), gammas, holdout)
 
+    def _etag(self, target_gamma: float) -> str:
+        return f"{self._etag_salt}-{self._version}-{float(target_gamma)!r}"
+
+    def weights(self, target_gamma: float = 0.0, *,
+                if_etag: Optional[str] = None) -> VersionedWeights:
+        """Versioned solved-head download (see :meth:`AFLServer.weights`)."""
+        tag = self._etag(target_gamma)
+        if if_etag is not None and str(if_etag) == tag:
+            return VersionedWeights(self._version, float(target_gamma),
+                                    None, tag)
+        return VersionedWeights(self._version, float(target_gamma),
+                                self.solve(target_gamma), tag)
+
     def state(self) -> Dict[str, np.ndarray]:
         """Same checkpoint schema as :meth:`AFLServer.state` — coordinator
-        kinds are interchangeable across a save/restore boundary."""
+        kinds are interchangeable across a save/restore boundary — plus
+        ``shard_clients``, the per-shard occupancy (extra keys are ignored
+        by every ``from_state``, so interchange still holds)."""
         agg = self._merged()
         return {
             "gram": self.engine.regularized_gram(agg).copy(),
@@ -693,6 +832,7 @@ class ShardedCoordinator:
             "seen": np.array(sorted(self._seen), np.int64),
             "gamma": np.float64(self.gamma),
             "count": np.float64(agg.count),
+            "shard_clients": np.array(self.occupancy(), np.int64),
         }
 
     @classmethod
@@ -708,4 +848,5 @@ class ShardedCoordinator:
         coord._shards[0], coord._seen = _restore_stats(state, coord.gamma,
                                                        dim)
         coord._order = len(coord._seen)
+        coord._version = len(coord._seen)
         return coord

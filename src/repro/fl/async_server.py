@@ -55,7 +55,8 @@ from typing import Dict, Iterable, Optional, Sequence
 import numpy as np
 
 from repro.fl.api import (AFLServer, ClientReport, GammaSweep,
-                          _sweep_from_weights)
+                          VersionedWeights, _sweep_from_weights)
+from repro.fl.errors import Backpressure
 
 __all__ = ["AsyncAFLServer"]
 
@@ -83,6 +84,7 @@ class AsyncAFLServer:
         update_rank_budget: Optional[int] = None,
         refactor_rank: Optional[int] = None,
         error_budget: float = 1e-8,
+        max_pending: Optional[int] = None,
         server: Optional[AFLServer] = None,
     ):
         # ``server`` adopts an existing aggregate (e.g. restored from a
@@ -100,6 +102,11 @@ class AsyncAFLServer:
         self.refactor_rank = max(1, dim // 2) if refactor_rank is None \
             else int(refactor_rank)
         self.error_budget = float(error_budget)
+        # ingest high-watermark: with max_pending set, enqueue() refuses new
+        # fire-and-forget uploads once the queue holds that many unapplied
+        # reports (the backpressure signal transports surface as HTTP 429).
+        # submit() is unaffected — an awaiting producer IS the backpressure.
+        self.max_pending = None if max_pending is None else int(max_pending)
         self._queue: asyncio.Queue = asyncio.Queue()
         self._lock = asyncio.Lock()
         self._worker: Optional[asyncio.Task] = None
@@ -161,7 +168,15 @@ class AsyncAFLServer:
     async def enqueue(self, report: ClientReport) -> None:
         """Fire-and-forget: enqueue an upload and return immediately; the
         worker applies it in arrival order. Rejections land in
-        ``self.rejected`` instead of raising to the producer."""
+        ``self.rejected`` instead of raising to the producer. With
+        ``max_pending`` configured, a full queue raises
+        :class:`~repro.fl.errors.Backpressure` — the report is NOT queued
+        and coordinator state is untouched; back off and resubmit."""
+        if self.max_pending is not None \
+                and self._queue.qsize() >= self.max_pending:
+            raise Backpressure(
+                f"ingest queue at high-watermark ({self._queue.qsize()} "
+                f"pending ≥ max_pending={self.max_pending})")
         await self._queue.put((report, None))
 
     async def submit_many(self, reports: Iterable[ClientReport]) -> None:
@@ -248,6 +263,13 @@ class AsyncAFLServer:
             weights = self._server.solve_multi_gamma(gammas)
         return _sweep_from_weights(weights, gammas, holdout)
 
+    async def weights(self, target_gamma: float = 0.0, *,
+                      if_etag: Optional[str] = None) -> VersionedWeights:
+        """Versioned solved-head download over everything *applied* so far
+        (see :meth:`repro.fl.api.AFLServer.weights`)."""
+        async with self._lock:
+            return self._server.weights(target_gamma, if_etag=if_etag)
+
     # -- checkpointing ------------------------------------------------------
 
     async def state(self) -> Dict[str, np.ndarray]:
@@ -273,6 +295,11 @@ class AsyncAFLServer:
     def num_clients(self) -> int:
         """Clients applied so far (excludes queued-but-unapplied)."""
         return self._server.num_clients
+
+    @property
+    def version(self) -> int:
+        """Submission epoch of everything *applied* so far."""
+        return self._server.version
 
     @property
     def pending(self) -> int:

@@ -1,0 +1,860 @@
+"""FederationService: the transport-agnostic AFL serving surface.
+
+AFL's single-round AA law reduces a whole federation to "clients POST one
+report, then anyone may ask for the solved head" — so the serving API is
+small enough to pin down completely. This module does exactly that, in three
+layers that compose but never leak into each other:
+
+  * :class:`FederationService` — wraps ANY :class:`~repro.fl.api.Coordinator`
+    (sync :class:`~repro.fl.api.AFLServer`, event-loop
+    :class:`~repro.fl.async_server.AsyncAFLServer`, mesh-sharded
+    :class:`~repro.fl.api.ShardedCoordinator`) behind a routed bytes-in /
+    bytes-out API: ``describe``, ``submit``, ``submit_stream`` (framed
+    multi-report uploads with backpressure derived from the async queue's
+    ``pending``), ``solve`` / ``solve_multi_gamma`` / ``sweep`` (the γ
+    grid), ``weights`` (versioned solved-head download with an ETag-style
+    staleness token), ``state`` (checkpoint), and ``personalized_solve``
+    (client-specific target γ and/or a local-stats mixture). Failures are
+    the typed taxonomy of :mod:`repro.fl.errors`, carried on the wire as
+    stable codes.
+  * Transports — :class:`InProcTransport` (same bytes, same envelope, no
+    socket: the zero-copy default for tests) and :class:`HttpTransport` (a
+    stdlib ``http.server`` loopback server via :func:`serve_http`, plus the
+    ``http.client`` client side). Both move opaque byte envelopes; neither
+    knows what a Gram matrix is.
+  * :class:`RemoteCoordinator` — the client: speaks the service over bytes
+    yet satisfies the :class:`~repro.fl.api.Coordinator` protocol, so
+    ``run_afl``, ``launch/train.py`` and the examples can point at a URL
+    instead of an in-process object with zero call-site changes. It passes
+    the same conformance suite as the three local coordinators
+    (``tests/test_coordinator_conformance.py``), which makes
+    wire-equivalence — bit-for-bit at f64 — a permanent invariant.
+
+Envelope format (shared by requests and responses)::
+
+    b"AFLS" | u32 header_len | header JSON | array payload | blob
+
+The header carries an array manifest (name/shape/dtype), the blob length,
+and a CRC-32 of everything after the header, mirroring the
+:class:`~repro.fl.api.ClientReport` wire rules: a flipped or truncated byte
+is rejected, never silently folded into a federation.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import http.client
+import http.server
+import inspect
+import json
+import struct
+import threading
+import urllib.parse
+import zlib
+from typing import (Any, Dict, Iterable, List, Optional, Sequence, Tuple,
+                    Union)
+
+import numpy as np
+
+from repro.core.engine import AnalyticEngine, SuffStats
+from repro.fl import errors as E
+from repro.fl.api import (ClientReport, GammaSweep, VersionedWeights,
+                          _restore_stats)
+
+__all__ = [
+    "pack_message",
+    "unpack_message",
+    "frame_reports",
+    "FederationService",
+    "InProcTransport",
+    "HttpTransport",
+    "HttpFederationServer",
+    "serve_http",
+    "RemoteCoordinator",
+]
+
+# ---------------------------------------------------------------------------
+# The byte envelope
+# ---------------------------------------------------------------------------
+
+_MAGIC = b"AFLS"
+_ARRAY_DTYPES = {"float64": np.float64, "float32": np.float32,
+                 "int64": np.int64}
+_HOST_ENGINE = AnalyticEngine("numpy_f64")
+
+
+def pack_message(header: Dict[str, Any],
+                 arrays: Sequence[Tuple[str, np.ndarray]] = (),
+                 blob: bytes = b"") -> bytes:
+    """Serialize one service message: JSON header + named arrays + an
+    optional opaque blob (e.g. a nested ClientReport payload)."""
+    manifest, parts = [], []
+    for name, arr in arrays:
+        arr = np.asarray(arr)
+        if not arr.flags.c_contiguous:
+            # (not ascontiguousarray — that would promote 0-d scalars to 1-d)
+            arr = np.ascontiguousarray(arr)
+        if arr.dtype.name not in _ARRAY_DTYPES:
+            raise ValueError(f"unsupported envelope dtype {arr.dtype.name!r} "
+                             f"for array {name!r}")
+        manifest.append({"name": str(name), "shape": list(arr.shape),
+                         "dtype": arr.dtype.name})
+        parts.append(arr.tobytes())
+    payload = b"".join(parts) + bytes(blob)
+    header = dict(header)
+    header["arrays"] = manifest
+    header["blob_len"] = len(blob)
+    header["crc32"] = zlib.crc32(payload)
+    hb = json.dumps(header, sort_keys=True).encode("utf-8")
+    return _MAGIC + struct.pack("<I", len(hb)) + hb + payload
+
+
+def unpack_message(data: bytes) -> Tuple[dict, Dict[str, np.ndarray], bytes]:
+    """Parse + validate a service message → (header, {name: array}, blob).
+
+    Raises :class:`~repro.fl.errors.BadRequest` for anything that is not a
+    well-formed, checksum-clean envelope.
+    """
+    data = bytes(data)
+    if len(data) < len(_MAGIC) + 4 or data[: len(_MAGIC)] != _MAGIC:
+        raise E.BadRequest("not a federation service message (bad magic)")
+    (hlen,) = struct.unpack("<I", data[len(_MAGIC): len(_MAGIC) + 4])
+    body = len(_MAGIC) + 4
+    if len(data) < body + hlen:
+        raise E.BadRequest("truncated message header")
+    try:
+        header = json.loads(data[body: body + hlen].decode("utf-8"))
+    except (UnicodeDecodeError, json.JSONDecodeError) as exc:
+        raise E.BadRequest(f"corrupt message header: {exc}") from None
+    payload = data[body + hlen:]
+    try:
+        manifest = header["arrays"]
+        blob_len = int(header["blob_len"])
+        crc = int(header["crc32"])
+        specs = [(str(a["name"]), tuple(int(s) for s in a["shape"]),
+                  _ARRAY_DTYPES[a["dtype"]]) for a in manifest]
+    except (KeyError, TypeError, ValueError) as exc:
+        raise E.BadRequest(f"malformed message header: {exc}") from None
+    if blob_len < 0 or any(s < 0 for _, shape, _ in specs for s in shape):
+        raise E.BadRequest("malformed message header: negative sizes")
+    sizes = [int(np.prod(shape, dtype=np.int64)) * np.dtype(dt).itemsize
+             for _, shape, dt in specs]
+    if len(payload) != sum(sizes) + blob_len:
+        raise E.BadRequest(
+            f"payload length {len(payload)} does not match header manifest")
+    if zlib.crc32(payload) != crc:
+        raise E.BadRequest("message payload failed its CRC-32 check")
+    arrays, off = {}, 0
+    for (name, shape, dt), nbytes in zip(specs, sizes):
+        count = int(np.prod(shape, dtype=np.int64))
+        # copy: frombuffer views are read-only and would pin the whole
+        # response buffer — callers must get ordinary writable arrays,
+        # exactly like an in-process coordinator returns
+        arrays[name] = np.frombuffer(
+            payload, dt, count, offset=off).reshape(shape).copy()
+        off += nbytes
+    return header, arrays, payload[off:]
+
+
+def frame_reports(payloads: Iterable[bytes]) -> bytes:
+    """Frame multiple report payloads into one ``submit_stream`` body:
+    ``u32 count | (u32 len | payload)*``."""
+    payloads = [bytes(p) for p in payloads]
+    return struct.pack("<I", len(payloads)) + b"".join(
+        struct.pack("<I", len(p)) + p for p in payloads)
+
+
+def _unframe_reports(body: bytes) -> List[bytes]:
+    body = bytes(body)
+    if len(body) < 4:
+        raise E.BadRequest("truncated stream body")
+    (count,) = struct.unpack("<I", body[:4])
+    frames, off = [], 4
+    for _ in range(count):
+        if len(body) < off + 4:
+            raise E.BadRequest("truncated stream frame header")
+        (n,) = struct.unpack("<I", body[off: off + 4])
+        off += 4
+        if len(body) < off + n:
+            raise E.BadRequest("truncated stream frame")
+        frames.append(body[off: off + n])
+        off += n
+    if off != len(body):
+        raise E.BadRequest("trailing bytes after the last stream frame")
+    return frames
+
+
+def _decode_response(data: bytes) -> Tuple[dict, Dict[str, np.ndarray], bytes]:
+    """Client-side decode: re-raise the typed error an error response
+    carried, otherwise return (header, arrays, blob)."""
+    header, arrays, blob = unpack_message(data)
+    if not header.get("ok", False):
+        raise E.from_code(header.get("error", "internal"),
+                          header.get("message", "service error"))
+    return header, arrays, blob
+
+
+# ---------------------------------------------------------------------------
+# One hosted federation: a coordinator + its concurrency discipline
+# ---------------------------------------------------------------------------
+
+
+class _Federation:
+    """Adapter making any coordinator callable from transport threads.
+
+    Sync coordinators are serialized under one lock; an async coordinator
+    gets a dedicated daemon event loop (started lazily, its worker task
+    brought up via ``start()``) and every call crosses into it through
+    ``run_coroutine_threadsafe`` — so exceptions, return values, and the
+    coordinator's own internal locking behave exactly as in-process.
+    """
+
+    def __init__(self, coordinator):
+        self.coordinator = coordinator
+        self.is_async = inspect.iscoroutinefunction(
+            getattr(coordinator, "submit", None))
+        self._lock = threading.RLock()
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._thread: Optional[threading.Thread] = None
+
+    def start(self) -> "_Federation":
+        if self.is_async and self._loop is None:
+            self._loop = asyncio.new_event_loop()
+            self._thread = threading.Thread(
+                target=self._loop.run_forever, daemon=True,
+                name="afl-federation-loop")
+            self._thread.start()
+            start = getattr(self.coordinator, "start", None)
+            if start is not None:
+                self._run(start())
+        return self
+
+    def _run(self, awaitable):
+        return asyncio.run_coroutine_threadsafe(
+            awaitable, self._loop).result()
+
+    def call(self, name: str, *args, **kwargs):
+        """Invoke a coordinator method, awaiting it when it is a coroutine."""
+        method = getattr(self.coordinator, name)
+        if self.is_async:
+            out = method(*args, **kwargs)
+            return self._run(out) if inspect.isawaitable(out) else out
+        with self._lock:
+            return method(*args, **kwargs)
+
+    @property
+    def pending(self) -> int:
+        """Unapplied queued reports (0 for coordinators without a queue)."""
+        return int(getattr(self.coordinator, "pending", 0))
+
+    def close(self) -> None:
+        if self._loop is not None:
+            try:
+                close = getattr(self.coordinator, "close", None)
+                if close is not None:
+                    self._run(close())
+            finally:
+                self._loop.call_soon_threadsafe(self._loop.stop)
+                self._thread.join(timeout=5)
+                self._loop.close()
+                self._loop = None
+                self._thread = None
+
+
+# ---------------------------------------------------------------------------
+# The service
+# ---------------------------------------------------------------------------
+
+
+class FederationService:
+    """Routes byte envelopes to hosted coordinators (any kind, any count).
+
+    >>> service = FederationService(AFLServer(dim=d, num_classes=c))
+    >>> coord = RemoteCoordinator(service)            # in-proc transport
+    >>> with serve_http(service) as srv:              # ...or over HTTP
+    ...     coord = RemoteCoordinator(srv.url)
+
+    ``handle(route, body, federation)`` is the single wire entrypoint both
+    transports call; it never raises — every failure becomes an error
+    envelope carrying a stable taxonomy code plus the HTTP status the
+    transport should surface. ``max_report_bytes`` bounds any single report
+    payload (checked before parsing); ``max_pending`` is the ingest
+    high-watermark for queue-backed coordinators — once ``pending`` reaches
+    it, submissions answer ``backpressure`` (HTTP 429, retryable) and the
+    coordinator state stays untouched.
+    """
+
+    def __init__(self, coordinator=None, *, federation_id: str = "default",
+                 max_report_bytes: int = 64 << 20,
+                 max_pending: Optional[int] = None):
+        self.max_report_bytes = int(max_report_bytes)
+        self.max_pending = None if max_pending is None else int(max_pending)
+        self._feds: Dict[str, _Federation] = {}
+        if coordinator is not None:
+            self.add_federation(federation_id, coordinator)
+
+    # -- lifecycle / registry -----------------------------------------------
+
+    def add_federation(self, federation_id: str,
+                       coordinator) -> "FederationService":
+        """Host another coordinator under ``federation_id`` (async kinds get
+        their worker loop brought up here)."""
+        self._feds[str(federation_id)] = _Federation(coordinator).start()
+        return self
+
+    def coordinator(self, federation_id: str = "default"):
+        """The backing coordinator object (in-proc introspection/tests)."""
+        return self._fed(federation_id).coordinator
+
+    def federation_ids(self) -> List[str]:
+        return sorted(self._feds)
+
+    def close(self) -> None:
+        for fed in self._feds.values():
+            fed.close()
+
+    def __enter__(self) -> "FederationService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def _fed(self, federation_id: str) -> _Federation:
+        fed = self._feds.get(str(federation_id))
+        if fed is None:
+            raise E.UnknownFederation(
+                f"no federation {federation_id!r} "
+                f"(hosting: {self.federation_ids()})")
+        return fed
+
+    # -- the wire entrypoint -------------------------------------------------
+
+    def handle(self, route: str, body: bytes = b"",
+               federation: str = "default") -> Tuple[bytes, int]:
+        """Dispatch one request → (response envelope, HTTP status)."""
+        try:
+            handler = self._ROUTES.get(route)
+            if handler is None:
+                raise E.BadRequest(
+                    f"unknown route {route!r} (one of {sorted(self._ROUTES)})")
+            fed = self._fed(federation)
+            return handler(self, fed, bytes(body)), 200
+        except E.ServiceError as exc:
+            return self._error(exc)
+        except ValueError as exc:
+            return self._error(E.BadRequest(str(exc)))
+        except Exception as exc:                      # noqa: BLE001
+            # never leak a stack trace onto the wire; "internal" decodes to
+            # the bare ServiceError on the client
+            err = E.ServiceError(f"{type(exc).__name__}: {exc}")
+            return self._error(err)
+
+    @staticmethod
+    def _error(exc: E.ServiceError) -> Tuple[bytes, int]:
+        return (pack_message({"ok": False, "error": exc.code,
+                              "message": str(exc),
+                              "retryable": exc.retryable}),
+                exc.http_status)
+
+    @staticmethod
+    def _ok(header: Dict[str, Any],
+            arrays: Sequence[Tuple[str, np.ndarray]] = (),
+            blob: bytes = b"") -> bytes:
+        return pack_message({"ok": True, **header}, arrays, blob=blob)
+
+    # -- shared ingest helpers ----------------------------------------------
+
+    def _parse_report(self, payload: bytes) -> ClientReport:
+        if len(payload) > self.max_report_bytes:
+            raise E.OversizedReport(
+                f"report payload is {len(payload)} bytes "
+                f"(limit {self.max_report_bytes})")
+        try:
+            return ClientReport.from_bytes(payload)
+        except E.ServiceError:
+            raise
+        except ValueError as exc:
+            raise E.CorruptReport(str(exc)) from None
+
+    def _check_backpressure(self, fed: _Federation) -> None:
+        if self.max_pending is not None and fed.pending >= self.max_pending:
+            raise E.Backpressure(
+                f"{fed.pending} reports pending ≥ "
+                f"max_pending={self.max_pending}")
+
+    @staticmethod
+    def _request_header(body: bytes) -> Tuple[dict, Dict[str, np.ndarray],
+                                              bytes]:
+        if not body:
+            return {}, {}, b""
+        return unpack_message(body)
+
+    # -- routes ---------------------------------------------------------------
+
+    def _r_describe(self, fed: _Federation, body: bytes) -> bytes:
+        c = fed.coordinator
+        return self._ok({
+            "kind": type(c).__name__,
+            "dim": int(c.dim),
+            "num_classes": int(c.num_classes),
+            "gamma": float(c.gamma),
+            "num_clients": int(c.num_clients),
+            "version": int(c.version),
+            "pending": fed.pending,
+            "max_report_bytes": self.max_report_bytes,
+        })
+
+    def _r_submit(self, fed: _Federation, body: bytes) -> bytes:
+        """Body = one raw :class:`ClientReport` payload → fold outcome."""
+        report = self._parse_report(body)
+        self._check_backpressure(fed)
+        folded = fed.call("submit", report)
+        c = fed.coordinator
+        return self._ok({"folded": bool(folded),
+                         "num_clients": int(c.num_clients),
+                         "version": int(c.version)})
+
+    def _r_submit_stream(self, fed: _Federation, body: bytes) -> bytes:
+        """Framed multi-report upload; each frame is accepted/rejected
+        independently, so one corrupt report in a batch cannot poison the
+        rest. Queue-backed coordinators ingest fire-and-forget through
+        ``enqueue`` (the transport answer is *queued*, not *folded*);
+        backpressure — the service watermark or the coordinator's own —
+        rejects a frame without touching state."""
+        frames = _unframe_reports(body)
+        results: List[Dict[str, Any]] = []
+        accepted = 0
+        for frame in frames:
+            try:
+                report = self._parse_report(frame)
+                if fed.is_async:
+                    self._check_backpressure(fed)
+                    fed.call("enqueue", report)
+                    results.append({"ok": True, "queued": True})
+                else:
+                    folded = fed.call("submit", report)
+                    results.append({"ok": True, "queued": False,
+                                    "folded": bool(folded)})
+                accepted += 1
+            except E.ServiceError as exc:
+                results.append({"ok": False, "error": exc.code,
+                                "message": str(exc),
+                                "retryable": exc.retryable})
+            except ValueError as exc:
+                results.append({"ok": False, "error": E.BadRequest.code,
+                                "message": str(exc), "retryable": False})
+        return self._ok({"results": results, "accepted": accepted,
+                         "pending": fed.pending,
+                         "version": int(fed.coordinator.version)})
+
+    def _r_solve(self, fed: _Federation, body: bytes) -> bytes:
+        header, _, _ = self._request_header(body)
+        tg = float(header.get("target_gamma", 0.0))
+        w = fed.call("solve", tg)
+        return self._ok(
+            {"target_gamma": tg, "version": int(fed.coordinator.version)},
+            [("weight", np.asarray(w, np.float64))])
+
+    def _r_solve_multi_gamma(self, fed: _Federation, body: bytes) -> bytes:
+        header, _, _ = self._request_header(body)
+        gammas = [float(g) for g in header.get("gammas", ())]
+        if not gammas:
+            raise E.BadRequest("solve_multi_gamma requires a non-empty "
+                               "'gammas' list")
+        ws = fed.call("solve_multi_gamma", gammas)
+        stacked = np.stack([np.asarray(w, np.float64) for w in ws])
+        return self._ok(
+            {"gammas": gammas, "version": int(fed.coordinator.version)},
+            [("weights", stacked)])
+
+    def _r_sweep(self, fed: _Federation, body: bytes) -> bytes:
+        header, arrays, _ = self._request_header(body)
+        gammas = [float(g) for g in header.get("gammas", ())]
+        if not gammas or "x" not in arrays or "y" not in arrays:
+            raise E.BadRequest("sweep requires 'gammas' plus holdout arrays "
+                               "'x' and 'y'")
+        sweep: GammaSweep = fed.call("sweep", gammas,
+                                     (arrays["x"], arrays["y"]))
+        best = sweep.gammas.index(sweep.best_gamma)
+        return self._ok(
+            {"gammas": list(sweep.gammas),
+             "accuracies": list(sweep.accuracies),
+             "best_gamma": float(sweep.best_gamma),
+             "best_index": int(best),
+             "version": int(fed.coordinator.version)},
+            [("weights", np.stack([np.asarray(w, np.float64)
+                                   for w in sweep.weights]))])
+
+    def _r_weights(self, fed: _Federation, body: bytes) -> bytes:
+        header, _, _ = self._request_header(body)
+        tg = float(header.get("target_gamma", 0.0))
+        if_etag = header.get("if_etag")
+        vw: VersionedWeights = fed.call(
+            "weights", tg,
+            if_etag=None if if_etag is None else str(if_etag))
+        meta = {"version": int(vw.version), "target_gamma": tg,
+                "etag": vw.etag, "not_modified": vw.not_modified}
+        if vw.not_modified:
+            return self._ok(meta)
+        return self._ok(meta, [("weight", np.asarray(vw.weight, np.float64))])
+
+    def _r_state(self, fed: _Federation, body: bytes) -> bytes:
+        state = fed.call("state")
+        arrays = [(k, np.asarray(v)) for k, v in state.items()]
+        return self._ok({"kind": type(fed.coordinator).__name__,
+                         "version": int(fed.coordinator.version)}, arrays)
+
+    def _r_personalized_solve(self, fed: _Federation, body: bytes) -> bytes:
+        """Per-client head from the shared aggregate (ROADMAP's
+        personalization item): a client-specific target γ, optionally mixed
+        with the client's OWN local statistics — solve
+        ``(C_agg + β·C_k + γ_c·I) W = Q_agg + β·Q_k`` with the client's
+        report riding in the envelope blob. β > 0 tilts the shared head
+        toward the client's local distribution; β = 0 (no report) is the
+        pure per-γ personalization. The federation aggregate is read, never
+        written, so personalization can not corrupt the shared state.
+        """
+        header, _, blob = self._request_header(body)
+        tg = float(header.get("target_gamma", 0.0))
+        c = fed.coordinator
+        if c.num_clients == 0:
+            raise E.EmptyFederation("no clients aggregated")
+        if not blob:
+            w = fed.call("solve", tg)
+            return self._ok({"target_gamma": tg, "mix_weight": 0.0,
+                             "version": int(c.version)},
+                            [("weight", np.asarray(w, np.float64))])
+        report = self._parse_report(blob)
+        beta = float(header.get("mix_weight", 1.0))
+        state = fed.call("state")
+        dim = int(state["gram"].shape[0])
+        stats, _seen = _restore_stats(state, float(state["gamma"]), dim)
+        raw_k = (np.asarray(report.gram, np.float64)
+                 - report.gamma * np.eye(dim))
+        mixed = SuffStats(
+            gram=stats.gram + beta * raw_k,
+            moment=stats.moment + beta * np.asarray(report.moment,
+                                                    np.float64),
+            count=stats.count + beta * report.count,
+            clients=stats.clients,
+        )
+        w = _HOST_ENGINE.solve(mixed, target_gamma=tg)
+        return self._ok({"target_gamma": tg, "mix_weight": beta,
+                         "version": int(c.version)},
+                        [("weight", np.asarray(w, np.float64))])
+
+    _ROUTES = {
+        "describe": _r_describe,
+        "submit": _r_submit,
+        "submit_stream": _r_submit_stream,
+        "solve": _r_solve,
+        "solve_multi_gamma": _r_solve_multi_gamma,
+        "sweep": _r_sweep,
+        "weights": _r_weights,
+        "state": _r_state,
+        "personalized_solve": _r_personalized_solve,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Transports
+# ---------------------------------------------------------------------------
+
+
+class InProcTransport:
+    """Zero-copy loopback: the same byte envelopes, no socket. The default
+    for tests — what crosses this transport is exactly what would cross
+    HTTP, so in-proc coverage IS wire coverage."""
+
+    def __init__(self, service: FederationService):
+        self._service = service
+
+    def request(self, route: str, body: bytes = b"",
+                federation: str = "default") -> bytes:
+        data, _status = self._service.handle(route, body, federation)
+        return data
+
+    def close(self) -> None:
+        pass
+
+
+class HttpTransport:
+    """Client side of the loopback HTTP transport (stdlib ``http.client``).
+
+    One short-lived connection per request keeps the transport trivially
+    thread-safe; at loopback latencies connection reuse is noise next to the
+    d² payloads.
+    """
+
+    def __init__(self, url: str, *, timeout: float = 60.0):
+        parts = urllib.parse.urlsplit(url)
+        if parts.scheme != "http":
+            raise ValueError(f"HttpTransport speaks http:// only, got {url!r}")
+        self._host = parts.hostname or "127.0.0.1"
+        self._port = parts.port or 80
+        self._prefix = parts.path.rstrip("/")
+        self._timeout = float(timeout)
+
+    def request(self, route: str, body: bytes = b"",
+                federation: str = "default") -> bytes:
+        conn = http.client.HTTPConnection(self._host, self._port,
+                                          timeout=self._timeout)
+        try:
+            path = (f"{self._prefix}/v1/"
+                    f"{urllib.parse.quote(federation, safe='')}/{route}")
+            conn.request("POST", path, body=body,
+                         headers={"Content-Type":
+                                  "application/octet-stream"})
+            return conn.getresponse().read()
+        finally:
+            conn.close()
+
+    def close(self) -> None:
+        pass
+
+
+class _HttpHandler(http.server.BaseHTTPRequestHandler):
+    service: FederationService = None  # type: ignore[assignment]
+    server_version = "AFLFederationService/1"
+    protocol_version = "HTTP/1.1"
+
+    def _respond(self, data: bytes, status: int) -> None:
+        self.send_response(status)
+        self.send_header("Content-Type", "application/octet-stream")
+        self.send_header("Content-Length", str(len(data)))
+        self.end_headers()
+        self.wfile.write(data)
+
+    def _route(self, body: bytes) -> Tuple[bytes, int]:
+        parts = [p for p in self.path.split("?")[0].split("/") if p]
+        if len(parts) != 3 or parts[0] != "v1":
+            return FederationService._error(E.BadRequest(
+                f"path {self.path!r} is not /v1/<federation>/<route>"))
+        return self.service.handle(parts[2], body,
+                                   urllib.parse.unquote(parts[1]))
+
+    def do_POST(self) -> None:  # noqa: N802 (stdlib handler naming)
+        length = int(self.headers.get("Content-Length") or 0)
+        # refuse to even read a body past the request cap — backstop against
+        # memory-ballooning uploads (8× single-report cap: stream batches)
+        if length > 8 * self.service.max_report_bytes:
+            self._respond(*FederationService._error(E.OversizedReport(
+                f"request body is {length} bytes")))
+            return
+        body = self.rfile.read(length) if length else b""
+        self._respond(*self._route(body))
+
+    def do_GET(self) -> None:  # noqa: N802
+        """GET works for the body-less reads (describe / weights / state) —
+        curl-friendly introspection of a live federation."""
+        self._respond(*self._route(b""))
+
+    def log_message(self, *args) -> None:  # silence per-request stderr spam
+        pass
+
+
+class HttpFederationServer:
+    """A threaded stdlib HTTP server hosting one :class:`FederationService`
+    on loopback (or any interface). Context-manager friendly::
+
+        with serve_http(FederationService(server)) as srv:
+            coord = RemoteCoordinator(srv.url)
+    """
+
+    def __init__(self, service: FederationService, host: str = "127.0.0.1",
+                 port: int = 0):
+        handler = type("BoundHandler", (_HttpHandler,), {"service": service})
+        self.service = service
+        self._httpd = http.server.ThreadingHTTPServer((host, port), handler)
+        self.host, self.port = self._httpd.server_address[:2]
+        self.url = f"http://{self.host}:{self.port}"
+        self._thread: Optional[threading.Thread] = None
+
+    def start(self) -> "HttpFederationServer":
+        if self._thread is None:
+            self._thread = threading.Thread(
+                target=self._httpd.serve_forever, daemon=True,
+                name="afl-http-server")
+            self._thread.start()
+        return self
+
+    def close(self, *, close_service: bool = False) -> None:
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        self._thread = None
+        if close_service:
+            self.service.close()
+
+    def __enter__(self) -> "HttpFederationServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def serve_http(service: FederationService, host: str = "127.0.0.1",
+               port: int = 0) -> HttpFederationServer:
+    """Serve a federation over loopback HTTP; returns the started server
+    (``.url`` carries the ephemeral port when ``port=0``)."""
+    return HttpFederationServer(service, host, port).start()
+
+
+# ---------------------------------------------------------------------------
+# The remote client
+# ---------------------------------------------------------------------------
+
+
+class RemoteCoordinator:
+    """A :class:`~repro.fl.api.Coordinator` whose backing state lives behind
+    a transport.
+
+    Construction accepts a URL string (→ :class:`HttpTransport`), a
+    :class:`FederationService` (→ :class:`InProcTransport`), or any object
+    with the transport ``request`` method. ``describe`` pins dim/classes/γ
+    at construction; everything else is a wire round-trip, and every error
+    re-raises as the same typed taxonomy exception an in-process coordinator
+    would have thrown — which is why this class passes the local
+    coordinators' conformance suite verbatim.
+
+    The one deliberate divergence: ``sweep`` ships the holdout to the
+    service and scores there (one round-trip for the whole γ grid) instead
+    of downloading every candidate head.
+    """
+
+    def __init__(self,
+                 transport: Union[str, FederationService, "InProcTransport",
+                                  "HttpTransport"],
+                 *, federation: str = "default"):
+        if isinstance(transport, str):
+            transport = HttpTransport(transport)
+        elif isinstance(transport, FederationService):
+            transport = InProcTransport(transport)
+        self._transport = transport
+        self.federation = str(federation)
+        info = self.describe()
+        self.dim = int(info["dim"])
+        self.num_classes = int(info["num_classes"])
+        self.gamma = float(info["gamma"])
+        self.kind = str(info.get("kind", "unknown"))
+
+    # -- plumbing -----------------------------------------------------------
+
+    def _request(self, route: str, header: Optional[dict] = None,
+                 arrays: Sequence[Tuple[str, np.ndarray]] = (),
+                 blob: bytes = b"", raw: Optional[bytes] = None):
+        if raw is not None:
+            body = bytes(raw)
+        elif header is None and not arrays and not blob:
+            body = b""
+        else:
+            body = pack_message(header or {}, arrays, blob=blob)
+        return _decode_response(
+            self._transport.request(route, body, self.federation))
+
+    def close(self) -> None:
+        self._transport.close()
+
+    def __enter__(self) -> "RemoteCoordinator":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- protocol surface ---------------------------------------------------
+
+    def describe(self) -> dict:
+        header, _, _ = self._request("describe")
+        return header
+
+    @property
+    def num_clients(self) -> int:
+        return int(self.describe()["num_clients"])
+
+    @property
+    def version(self) -> int:
+        return int(self.describe()["version"])
+
+    @property
+    def pending(self) -> int:
+        return int(self.describe()["pending"])
+
+    def submit(self, report: ClientReport) -> bool:
+        return self.submit_bytes(report.to_bytes())
+
+    def submit_bytes(self, payload: bytes) -> bool:
+        """Submit an already-serialized report (skips the re-encode when the
+        caller holds wire bytes — e.g. relaying a client upload)."""
+        header, _, _ = self._request("submit", raw=payload)
+        return bool(header["folded"])
+
+    def submit_many(self, reports: Iterable[ClientReport]) -> None:
+        """Sync semantics (stop at first rejection), matching
+        :meth:`repro.fl.api.AFLServer.submit_many`; for fire-and-forget
+        batching use :meth:`submit_stream`."""
+        for report in reports:
+            self.submit(report)
+
+    def submit_stream(self, payloads: Iterable[bytes]) -> dict:
+        """Upload many serialized reports in ONE framed request; returns the
+        per-frame outcome dict (``results`` / ``accepted`` / ``pending`` /
+        ``version``). Queue-backed federations ingest asynchronously —
+        ``pending`` is the live backpressure signal."""
+        header, _, _ = self._request("submit_stream",
+                                     raw=frame_reports(payloads))
+        return header
+
+    def solve(self, target_gamma: float = 0.0) -> np.ndarray:
+        _, arrays, _ = self._request(
+            "solve", {"target_gamma": float(target_gamma)})
+        return arrays["weight"]
+
+    def solve_multi_gamma(self, gammas: Sequence[float]) -> List[np.ndarray]:
+        _, arrays, _ = self._request(
+            "solve_multi_gamma", {"gammas": [float(g) for g in gammas]})
+        return list(arrays["weights"])
+
+    def sweep(self, gammas: Sequence[float], holdout) -> GammaSweep:
+        x, y = holdout
+        ya = np.asarray(y)
+        ya = (ya.astype(np.int64) if ya.dtype.kind in "iub"
+              else ya.astype(np.float64))
+        header, arrays, _ = self._request(
+            "sweep", {"gammas": [float(g) for g in gammas]},
+            [("x", np.asarray(x, np.float64)), ("y", ya)])
+        weights = list(arrays["weights"])
+        best = int(header["best_index"])
+        return GammaSweep(tuple(float(g) for g in header["gammas"]), weights,
+                          tuple(float(a) for a in header["accuracies"]),
+                          float(header["best_gamma"]), weights[best])
+
+    def weights(self, target_gamma: float = 0.0, *,
+                if_etag: Optional[str] = None) -> VersionedWeights:
+        req = {"target_gamma": float(target_gamma)}
+        if if_etag is not None:
+            req["if_etag"] = str(if_etag)
+        header, arrays, _ = self._request("weights", req)
+        return VersionedWeights(int(header["version"]),
+                                float(header["target_gamma"]),
+                                arrays.get("weight"),
+                                str(header.get("etag", "")))
+
+    def personalized_solve(self, target_gamma: float = 0.0, *,
+                           report: Union[ClientReport, bytes, None] = None,
+                           mix_weight: Optional[float] = None) -> np.ndarray:
+        """Per-client head: client-specific target γ, optionally mixed with
+        the client's own local statistics (``report`` + ``mix_weight`` β)."""
+        req: Dict[str, Any] = {"target_gamma": float(target_gamma)}
+        if mix_weight is not None:
+            req["mix_weight"] = float(mix_weight)
+        blob = b""
+        if report is not None:
+            blob = (bytes(report) if isinstance(report, (bytes, bytearray))
+                    else report.to_bytes())
+        _, arrays, _ = self._request("personalized_solve", req, blob=blob)
+        return arrays["weight"]
+
+    def state(self) -> Dict[str, np.ndarray]:
+        """Download the federation checkpoint (the one shared coordinator
+        state schema — restorable into any local coordinator kind)."""
+        _, arrays, _ = self._request("state")
+        return arrays

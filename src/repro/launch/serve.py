@@ -1,14 +1,25 @@
-"""Serving launcher: batched prefill + decode against any assigned arch.
+"""Serving launcher: LLM decode OR a live AFL federation endpoint.
 
-Drives the inference path the decode input-shapes exercise: prefill a batch
-of prompts, then autoregressively decode with the per-family cache (KV for
-dense/moe, SSM/conv state for mamba, recurrent state for xLSTM, cross-attn
-memory for enc-dec). Greedy sampling — the request semantics, batching and
-cache plumbing are the point, not the sampler.
+Two serving workloads share this entrypoint:
 
-Usage (CPU example — reduced config):
+* **LLM decode** (default): batched prefill + autoregressive decode against
+  any assigned arch with the per-family cache (KV for dense/moe, SSM/conv
+  state for mamba, recurrent state for xLSTM, cross-attn memory for
+  enc-dec). Greedy sampling — the request semantics, batching and cache
+  plumbing are the point, not the sampler.
+
+* **Federation serving** (``--federation``): bring up a
+  :class:`~repro.fl.service.FederationService` over loopback HTTP — any
+  coordinator kind behind it — and serve submit/solve/weights/state/
+  personalized_solve until interrupted. Remote clients point
+  :class:`~repro.fl.service.RemoteCoordinator` (or ``launch/train.py
+  --server-url``) at the printed URL.
+
+Usage (CPU examples — reduced config):
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3_12b \
       --batch 4 --prompt-len 32 --gen 16
+  PYTHONPATH=src python -m repro.launch.serve --federation --dim 256 \
+      --classes 50 --gamma 1.0 --port 8790 --coordinator async
 """
 
 from __future__ import annotations
@@ -53,15 +64,67 @@ def serve(cfg, batch: int, prompt_len: int, gen: int, seed: int = 0):
     return out, t1 - t0, t2 - t1
 
 
+def serve_federation(args) -> None:
+    """Host a FederationService over HTTP until interrupted."""
+    from repro.fl import AFLServer, AsyncAFLServer, ShardedCoordinator
+    from repro.fl.service import FederationService, serve_http
+
+    kinds = {
+        "sync": lambda: AFLServer(args.dim, args.classes, gamma=args.gamma),
+        "async": lambda: AsyncAFLServer(args.dim, args.classes,
+                                        gamma=args.gamma,
+                                        max_pending=args.max_pending),
+        "sharded": lambda: ShardedCoordinator(args.dim, args.classes,
+                                              gamma=args.gamma),
+    }
+    coordinator = kinds[args.coordinator]()
+    service = FederationService(coordinator, max_pending=args.max_pending)
+    with service, serve_http(service, args.host, args.port) as srv:
+        print(f"federation up: {srv.url}  "
+              f"(coordinator={args.coordinator} d={args.dim} "
+              f"C={args.classes} γ={args.gamma:g})")
+        print(f"  submit:  POST {srv.url}/v1/default/submit  "
+              "(ClientReport.to_bytes payload)")
+        print(f"  weights: GET  {srv.url}/v1/default/weights")
+        print("ctrl-c to stop")
+        try:
+            import threading
+
+            threading.Event().wait()
+        except KeyboardInterrupt:
+            print("shutting down")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None,
+                    help="LLM serving arch (required unless --federation)")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    fed = ap.add_argument_group("federation serving")
+    fed.add_argument("--federation", action="store_true",
+                     help="serve an AFL FederationService over HTTP instead "
+                          "of LLM decode")
+    fed.add_argument("--dim", type=int, default=256)
+    fed.add_argument("--classes", type=int, default=50)
+    fed.add_argument("--gamma", type=float, default=1.0)
+    fed.add_argument("--coordinator", default="sync",
+                     choices=["sync", "async", "sharded"])
+    fed.add_argument("--host", default="127.0.0.1")
+    fed.add_argument("--port", type=int, default=8790)
+    fed.add_argument("--max-pending", type=int, default=None,
+                     help="ingest high-watermark (HTTP 429 past it)")
     args = ap.parse_args()
+
+    if args.federation:
+        serve_federation(args)
+        return
+    if args.arch is None:
+        ap.error("--arch is required for LLM serving "
+                 "(or pass --federation)")
 
     cfg = get_config(args.arch)
     if args.reduced:

@@ -53,13 +53,16 @@ def _embed_fn(params, cfg, mesh):
 
 
 def run_analytic(cfg, mesh, train_ds, test_ds, fl: FLConfig, batch: int,
-                 use_kernel: bool = False):
+                 use_kernel: bool = False, server_url: str = ""):
     """AFL on-device: one epoch of forwards, one aggregation collective.
 
     Drives the canonical API end to end: an :class:`~repro.fl.api.AFLClient`
     (jax-backend engine; ``use_kernel=True`` folds batches with the Pallas
     Gram kernel) accumulates the local stage, its
     :class:`~repro.fl.api.ClientReport` is submitted to a coordinator —
+    a :class:`~repro.fl.service.RemoteCoordinator` when ``server_url``
+    points at a live :class:`~repro.fl.service.FederationService` (e.g.
+    ``launch/serve.py --federation``), else
     :class:`~repro.fl.api.ShardedCoordinator` when the mesh has >1
     federation shard (one psum collective), plain
     :class:`~repro.fl.api.AFLServer` otherwise.
@@ -79,7 +82,14 @@ def run_analytic(cfg, mesh, train_ds, test_ds, fl: FLConfig, batch: int,
     n_shards = 1
     for a in naxes:
         n_shards *= mesh.shape[a]
-    if n_shards > 1:
+    if server_url:
+        from repro.fl.service import RemoteCoordinator
+
+        coord = RemoteCoordinator(server_url)
+        if coord.dim != cfg.d_model:
+            raise ValueError(f"remote federation dim={coord.dim} != model "
+                             f"d_model={cfg.d_model}")
+    elif n_shards > 1:
         coord = ShardedCoordinator(cfg.d_model, cfg.num_classes,
                                    gamma=fl.gamma, mesh=mesh,
                                    axis_names=naxes)
@@ -150,6 +160,10 @@ def main() -> None:
     ap.add_argument("--gamma", type=float, default=1.0)
     ap.add_argument("--kernel", action="store_true",
                     help="fold Gram batches with the Pallas kernel")
+    ap.add_argument("--server-url", default="",
+                    help="submit to a FederationService at this URL instead "
+                         "of aggregating in-process (see launch/serve.py "
+                         "--federation)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -171,9 +185,11 @@ def main() -> None:
     fl = FLConfig(gamma=args.gamma)
     if args.mode == "analytic":
         acc, dt = run_analytic(cfg, mesh, train_ds, test_ds, fl, args.batch,
-                               use_kernel=args.kernel)
+                               use_kernel=args.kernel,
+                               server_url=args.server_url)
+        where = f" via {args.server_url}" if args.server_url else ""
         print(f"AFL analytic: acc={acc:.4f} train_time={dt:.2f}s (one epoch, "
-              f"single aggregation)")
+              f"single aggregation{where})")
     else:
         acc, dt = run_gradient(cfg, mesh, train_ds, test_ds, fl, args.batch,
                                args.rounds)

@@ -1,17 +1,20 @@
 """One conformance suite for every AFL coordinator.
 
 The :class:`repro.fl.api.Coordinator` protocol pins down the surface that
-sync (:class:`AFLServer`), async (:class:`AsyncAFLServer`) and sharded
-(:class:`ShardedCoordinator`) implementations share: submit fold outcomes,
-exact subset solves, the multi-γ sweep, the γ cross-validation endpoint, and
-one checkpoint schema. Each test body is written once against the protocol
-and parameterized over all three kinds; async methods are awaited through a
-dispatch helper, so drift between the implementations (the original
-``AsyncAFLServer.submit → None`` bug) can no longer hide.
+sync (:class:`AFLServer`), async (:class:`AsyncAFLServer`), sharded
+(:class:`ShardedCoordinator`) and remote (:class:`RemoteCoordinator` over a
+real loopback-HTTP :class:`FederationService`) implementations share: submit
+fold outcomes, exact subset solves, the multi-γ sweep, the γ cross-validation
+endpoint, versioned weights, and one checkpoint schema. Each test body is
+written once against the protocol and parameterized over all four kinds;
+async methods are awaited through a dispatch helper, so drift between the
+implementations (the original ``AsyncAFLServer.submit → None`` bug) can no
+longer hide — and because the remote kind runs the same matrix over actual
+HTTP bytes, wire-equivalence is a permanent invariant, not a demo.
 
 Also here: the canonical :class:`ClientReport` wire-format round-trip
 (lossless f64, documented-tolerance compressed-f32 roots, corrupt-payload
-rejection), the deprecation shim over ``repro.fl.server``, the f64-on-device
+rejection), the remote-vs-in-proc bit-for-bit f64 check, the f64-on-device
 parity run (jax x64 backend vs numpy_f64 at 1e-12 through the AFLClient →
 coordinator path, in a subprocess so x64 stays scoped), the 1e-6
 sharded-vs-sync solve check on that same x64 path, and the K=1000
@@ -31,17 +34,19 @@ import pytest
 
 from repro.core import analytic as al
 from repro.fl import (AFLClient, AFLServer, AsyncAFLServer, ClientReport,
-                      Coordinator, GammaSweep, ShardedCoordinator,
-                      make_report, masked_reports)
-from repro.fl import api as fl_api
+                      Coordinator, FederationService, GammaSweep,
+                      RemoteCoordinator, ShardedCoordinator, VersionedWeights,
+                      make_report, masked_reports, serve_http)
 
 DIM, C, GAMMA = 24, 5, 1.0
-KINDS = ["sync", "async", "sharded"]
+KINDS = ["sync", "async", "sharded", "remote"]
 # device (f32) arithmetic for the in-process sharded solve; the 1e-6/1e-12
-# claims are made on the x64 subprocess path below
+# claims are made on the x64 subprocess path below. The remote kind fronts
+# an AFLServer over f64-lossless wire bytes, so it inherits sync tolerances.
 TOL = {"sync": dict(rtol=1e-8, atol=1e-10),
        "async": dict(rtol=1e-8, atol=1e-10),
-       "sharded": dict(rtol=1e-3, atol=2e-3)}
+       "sharded": dict(rtol=1e-3, atol=2e-3),
+       "remote": dict(rtol=1e-8, atol=1e-10)}
 
 
 def _reports(n_clients=10, rows_each=8, seed=0):
@@ -61,11 +66,25 @@ async def _call(result):
 
 
 @contextlib.asynccontextmanager
+async def _serve_remote(server):
+    """A RemoteCoordinator speaking REAL loopback-HTTP bytes to ``server``."""
+    with serve_http(FederationService(server)) as http:
+        coord = RemoteCoordinator(http.url)
+        try:
+            yield coord
+        finally:
+            coord.close()
+
+
+@contextlib.asynccontextmanager
 async def _make(kind, **kw):
     if kind == "sync":
         yield AFLServer(DIM, C, gamma=GAMMA, **kw)
     elif kind == "sharded":
         yield ShardedCoordinator(DIM, C, gamma=GAMMA)
+    elif kind == "remote":
+        async with _serve_remote(AFLServer(DIM, C, gamma=GAMMA, **kw)) as rc:
+            yield rc
     else:
         async with AsyncAFLServer(DIM, C, gamma=GAMMA, **kw) as srv:
             yield srv
@@ -77,6 +96,9 @@ async def _restore(kind, state):
         yield AFLServer.from_state(state)
     elif kind == "sharded":
         yield ShardedCoordinator.from_state(state)
+    elif kind == "remote":
+        async with _serve_remote(AFLServer.from_state(state)) as rc:
+            yield rc
     else:
         async with AsyncAFLServer.from_state(state) as srv:
             yield srv
@@ -282,6 +304,38 @@ class TestCoordinatorConformance:
             else dict(rtol=1e-6, atol=1e-7)
         np.testing.assert_allclose(w, al.ridge_solve(x, y, 0.0), **loose)
 
+    def test_weights_are_versioned_with_staleness_token(self, kind):
+        """``weights`` is the download endpoint: a VersionedWeights equal to
+        solve(), whose etag token changes on submit and short-circuits
+        (weight=None) when the caller is already current. The token is
+        γ-bound: a token minted for one target γ never revalidates a
+        download of another."""
+        _, _, reps = _reports()
+
+        async def body():
+            async with _make(kind) as coord:
+                await _call(coord.submit_many(reps[:5]))
+                vw = await _call(coord.weights())
+                cached = await _call(coord.weights(if_etag=vw.etag))
+                other_gamma = await _call(coord.weights(1.0,
+                                                        if_etag=vw.etag))
+                await _call(coord.submit(reps[5]))
+                fresh = await _call(coord.weights(if_etag=vw.etag))
+                w_now = await _call(coord.solve())
+                return vw, cached, other_gamma, fresh, w_now
+
+        vw, cached, other_gamma, fresh, w_now = asyncio.run(body())
+        assert isinstance(vw, VersionedWeights)
+        assert vw.weight is not None and not vw.not_modified and vw.etag
+        assert cached.not_modified and cached.etag == vw.etag
+        # same epoch, different γ: MUST download (γ=0 head is not the γ=1)
+        assert not other_gamma.not_modified
+        assert other_gamma.etag != vw.etag
+        assert fresh.etag != vw.etag and not fresh.not_modified
+        assert fresh.version != vw.version
+        np.testing.assert_allclose(fresh.weight, w_now, rtol=1e-9,
+                                   atol=1e-6 if kind == "sharded" else 1e-12)
+
 
 class TestShardedPlacement:
     def test_round_robin_spreads_clients(self):
@@ -383,23 +437,36 @@ class TestClientReportWire:
             ClientReport.from_bytes(bytes(wire))
 
 
-class TestDeprecationShim:
-    def test_legacy_imports_warn_and_alias(self):
-        import repro.fl.server as legacy
+class TestRemoteWireEquivalence:
+    """The acceptance bar for the serving redesign: a federation driven over
+    loopback HTTP produces the SAME f64 bits as the in-proc coordinator."""
 
-        for name, canonical in [("AFLServer", fl_api.AFLServer),
-                                ("ClientReport", fl_api.ClientReport),
-                                ("make_report", fl_api.make_report),
-                                ("masked_reports", fl_api.masked_reports)]:
-            with pytest.warns(DeprecationWarning, match="repro.fl.server"):
-                obj = getattr(legacy, name)
-            assert obj is canonical
+    def test_remote_solved_head_bit_for_bit_at_f64(self):
+        x, y, reps = _reports()
+        inproc = AFLServer(DIM, C, gamma=GAMMA)
+        inproc.submit_many(reps)
 
-    def test_unknown_attribute_still_raises(self):
-        import repro.fl.server as legacy
+        async def body():
+            async with _make("remote") as coord:
+                outcomes = [await _call(coord.submit(r)) for r in reps]
+                assert all(isinstance(o, bool) for o in outcomes)
+                return (await _call(coord.solve()),
+                        await _call(coord.solve(0.5)),
+                        await _call(coord.solve_multi_gamma([0.0, 0.1, 1.0])))
 
-        with pytest.raises(AttributeError):
-            legacy.does_not_exist
+        w0, w_half, multi = asyncio.run(body())
+        # f64 wire encoding is lossless and the backing math is identical —
+        # equality here is exact, not approximate
+        np.testing.assert_array_equal(w0, inproc.solve())
+        np.testing.assert_array_equal(w_half, inproc.solve(0.5))
+        for w_remote, w_local in zip(multi,
+                                     inproc.solve_multi_gamma([0.0, 0.1, 1.0])):
+            np.testing.assert_array_equal(w_remote, w_local)
+
+    def test_remote_shim_module_is_gone(self):
+        """The repro.fl.server deprecation window (PR 3) is closed."""
+        with pytest.raises(ModuleNotFoundError):
+            import repro.fl.server  # noqa: F401
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,372 @@
+"""FederationService / transport / error-taxonomy tests.
+
+The conformance matrix (test_coordinator_conformance.py) already proves a
+RemoteCoordinator behaves like a local coordinator on the happy paths; this
+file locks down the serving layer itself: the canonical error taxonomy over
+the wire (corrupt / oversized / queue-full must map to the right codes AND
+leave coordinator state untouched), framed multi-report streaming with
+backpressure, the personalized-solve endpoint's math, transport equivalence
+(in-proc bytes == HTTP bytes), multi-federation routing, and the sharded
+coordinator's occupancy/rebalance placement primitives.
+"""
+
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.fl import (AFLServer, AsyncAFLServer, ClientReport,
+                      FederationService, HttpTransport, InProcTransport,
+                      RemoteCoordinator, ShardedCoordinator, make_report,
+                      serve_http)
+from repro.fl import errors as E
+from repro.fl.service import frame_reports, pack_message, unpack_message
+
+DIM, C, GAMMA = 16, 4, 1.0
+
+
+def _reports(n=6, rows=5, seed=0, start_id=0):
+    rng = np.random.default_rng(seed)
+    return [make_report(start_id + k, rng.standard_normal((rows, DIM)),
+                        np.eye(C)[rng.integers(0, C, rows)], GAMMA)
+            for k in range(n)]
+
+
+def _service(**kw):
+    return FederationService(AFLServer(DIM, C, gamma=GAMMA), **kw)
+
+
+# ---------------------------------------------------------------------------
+# Error taxonomy over the wire
+# ---------------------------------------------------------------------------
+
+
+class TestErrorTaxonomy:
+    def test_corrupt_payload_maps_to_corrupt_report_and_keeps_state(self):
+        svc = _service()
+        rc = RemoteCoordinator(svc)
+        rc.submit(_reports(1)[0])
+        wire = bytearray(_reports(1, start_id=50)[0].to_bytes())
+        wire[len(wire) // 2] ^= 0xFF                       # bit flip
+        with pytest.raises(E.CorruptReport) as exc:
+            rc.submit_bytes(bytes(wire))
+        assert exc.value.code == "corrupt_report"
+        assert isinstance(exc.value, ValueError)           # taxonomy contract
+        assert rc.num_clients == 1                         # state untouched
+        assert svc.coordinator().num_clients == 1
+
+    def test_oversized_report_rejected_before_parsing(self):
+        svc = _service(max_report_bytes=256)
+        rc = RemoteCoordinator(svc)
+        payload = _reports(1)[0].to_bytes()                # ≫ 256 bytes
+        with pytest.raises(E.OversizedReport) as exc:
+            rc.submit_bytes(payload)
+        assert exc.value.code == "oversized_report"
+        assert rc.num_clients == 0
+
+    def test_queue_full_maps_to_backpressure_and_keeps_state(self):
+        svc = FederationService(AsyncAFLServer(DIM, C, gamma=GAMMA),
+                                max_pending=0)
+        try:
+            rc = RemoteCoordinator(svc)
+            with pytest.raises(E.Backpressure) as exc:
+                rc.submit(_reports(1)[0])
+            assert exc.value.code == "backpressure"
+            assert exc.value.retryable                     # client may retry
+            assert rc.num_clients == 0
+        finally:
+            svc.close()
+
+    def test_async_server_enqueue_honors_its_own_watermark(self):
+        """The coordinator-level backpressure hook (no service involved):
+        with max_pending set, a full ingest queue refuses enqueue()."""
+        reps = _reports(3)
+
+        async def body():
+            srv = AsyncAFLServer(DIM, C, gamma=GAMMA, max_pending=2)
+            # no worker started → nothing drains: deterministic queue depth
+            await srv.enqueue(reps[0])
+            await srv.enqueue(reps[1])
+            with pytest.raises(E.Backpressure):
+                await srv.enqueue(reps[2])
+            assert srv.pending == 2
+
+        asyncio.run(body())
+
+    def test_duplicate_and_gamma_mismatch_codes(self):
+        rc = RemoteCoordinator(_service())
+        reps = _reports(2)
+        rc.submit(reps[0])
+        with pytest.raises(E.DuplicateClient) as exc:
+            rc.submit(reps[0])
+        assert exc.value.code == "duplicate_client"
+        bad_gamma = make_report(99, np.zeros((3, DIM)), np.zeros((3, C)), 2.0)
+        with pytest.raises(E.GammaMismatch) as exc:
+            rc.submit(bad_gamma)
+        assert exc.value.code == "gamma_mismatch"
+        with pytest.raises(E.EmptyFederation):
+            RemoteCoordinator(_service()).solve()
+
+    def test_unknown_federation_and_route(self):
+        svc = _service()
+        with pytest.raises(E.UnknownFederation):
+            RemoteCoordinator(svc, federation="nope")
+        data, status = svc.handle("no_such_route", b"")
+        header, _, _ = unpack_message(data)
+        assert status == 400 and header["error"] == "bad_request"
+
+    def test_internal_errors_never_leak_raw_exceptions(self):
+        """A handler blowing up yields a structured 'internal' envelope, not
+        a transport-level crash."""
+        svc = _service()
+
+        class Boom(RuntimeError):
+            pass
+
+        def explode(*a, **k):
+            raise Boom("kaboom")
+
+        svc.coordinator().solve = explode
+        svc.coordinator().submit_many(_reports(2))
+        data, status = svc.handle("solve", b"")
+        header, _, _ = unpack_message(data)
+        assert status == 500 and header["error"] == "internal"
+        assert "kaboom" in header["message"]
+
+
+# ---------------------------------------------------------------------------
+# Streaming ingest
+# ---------------------------------------------------------------------------
+
+
+class TestSubmitStream:
+    def test_mixed_batch_partial_acceptance(self):
+        """One framed request carrying good + corrupt + duplicate reports:
+        each frame succeeds/fails independently with its own code."""
+        rc = RemoteCoordinator(_service())
+        reps = _reports(3)
+        frames = [reps[0].to_bytes(), b"garbage", reps[1].to_bytes(),
+                  reps[0].to_bytes(), reps[2].to_bytes()]
+        out = rc.submit_stream(frames)
+        codes = [r.get("error") for r in out["results"]]
+        assert out["accepted"] == 3
+        assert codes == [None, "corrupt_report", None, "duplicate_client",
+                         None]
+        assert rc.num_clients == 3
+
+    def test_stream_into_async_queue_and_drain(self):
+        svc = FederationService(AsyncAFLServer(DIM, C, gamma=GAMMA))
+        try:
+            with serve_http(svc) as http:
+                rc = RemoteCoordinator(http.url)
+                reps = _reports(8)
+                out = rc.submit_stream([r.to_bytes() for r in reps])
+                assert out["accepted"] == 8
+                assert all(r.get("queued") for r in out["results"])
+                # fire-and-forget: the worker drains in arrival order
+                for _ in range(200):
+                    if rc.num_clients == 8 and rc.pending == 0:
+                        break
+                ref = AFLServer(DIM, C, gamma=GAMMA)
+                ref.submit_many(reps)
+                np.testing.assert_array_equal(rc.solve(), ref.solve())
+        finally:
+            svc.close()
+
+    def test_malformed_framing_is_bad_request(self):
+        svc = _service()
+        data, status = svc.handle("submit_stream", b"\x05\x00\x00\x00tiny")
+        header, _, _ = unpack_message(data)
+        assert status == 400 and header["error"] == "bad_request"
+
+
+# ---------------------------------------------------------------------------
+# Personalization endpoint
+# ---------------------------------------------------------------------------
+
+
+class TestPersonalizedSolve:
+    def test_gamma_only_matches_plain_solve(self):
+        rc = RemoteCoordinator(_service())
+        rc.submit_many(_reports())
+        np.testing.assert_array_equal(rc.personalized_solve(0.7),
+                                      rc.solve(0.7))
+
+    def test_local_stats_mixture_math(self):
+        """(C_agg + β·C_k + γ_t·I) W = Q_agg + β·Q_k — checked against a
+        direct dense solve, through real wire bytes."""
+        reps = _reports()
+        rc = RemoteCoordinator(_service())
+        rc.submit_many(reps)
+        mine, beta, tg = reps[2], 3.0, 0.25
+        w = rc.personalized_solve(tg, report=mine, mix_weight=beta)
+
+        eye = np.eye(DIM)
+        agg_g = sum(r.gram - GAMMA * eye for r in reps)
+        agg_q = sum(r.moment for r in reps)
+        raw_k = mine.gram - GAMMA * eye
+        expected = np.linalg.solve(agg_g + beta * raw_k + tg * eye,
+                                   agg_q + beta * mine.moment)
+        np.testing.assert_allclose(w, expected, rtol=1e-8, atol=1e-10)
+        # personalization reads the aggregate, never writes it
+        assert rc.num_clients == len(reps)
+        np.testing.assert_array_equal(rc.personalized_solve(tg), rc.solve(tg))
+
+    def test_mixture_tilts_toward_the_clients_local_solution(self):
+        """As β grows, the personalized head converges to the client's own
+        local solve — the aggregate becomes a prior, not the answer. (The
+        client needs ≥ d local rows so its raw Gram is full-rank and the
+        β → ∞ limit is well-posed.)"""
+        reps = _reports()
+        mine = _reports(1, rows=4 * DIM, seed=9, start_id=42)[0]
+        rc = RemoteCoordinator(_service())
+        rc.submit_many(reps + [mine])
+        raw_k = mine.gram - GAMMA * np.eye(DIM)
+        w_local = np.linalg.solve(raw_k, mine.moment)
+        devs = [np.abs(rc.personalized_solve(1.0, report=mine, mix_weight=b)
+                       - w_local).max()
+                for b in (0.0, 10.0, 1000.0)]
+        assert devs[2] < devs[1] < devs[0]
+
+    def test_empty_federation_rejected(self):
+        rc = RemoteCoordinator(_service())
+        with pytest.raises(E.EmptyFederation):
+            rc.personalized_solve(0.0, report=_reports(1)[0], mix_weight=1.0)
+
+
+# ---------------------------------------------------------------------------
+# Transport equivalence + multi-federation routing
+# ---------------------------------------------------------------------------
+
+
+class TestTransports:
+    def test_inproc_and_http_return_identical_bytes(self):
+        svc = _service()
+        svc.coordinator().submit_many(_reports())
+        inproc = InProcTransport(svc)
+        with serve_http(svc) as http:
+            over_http = HttpTransport(http.url)
+            for route, body in [("describe", b""),
+                                ("solve", pack_message({"target_gamma": 0.5})),
+                                ("state", b"")]:
+                assert inproc.request(route, body) == \
+                    over_http.request(route, body)
+
+    def test_multiple_federations_are_isolated(self):
+        svc = FederationService(AFLServer(DIM, C, gamma=GAMMA),
+                                federation_id="team-a")
+        svc.add_federation("team-b", AFLServer(DIM, C, gamma=GAMMA))
+        a = RemoteCoordinator(svc, federation="team-a")
+        b = RemoteCoordinator(svc, federation="team-b")
+        a.submit_many(_reports(4, seed=1))
+        b.submit_many(_reports(2, seed=2, start_id=100))
+        assert (a.num_clients, b.num_clients) == (4, 2)
+        assert svc.federation_ids() == ["team-a", "team-b"]
+        assert np.abs(a.solve() - b.solve()).max() > 0
+
+    def test_remote_results_are_writable_like_local_ones(self):
+        """Zero call-site changes includes mutability: a caller that
+        post-processes weights in place must not care that the arrays
+        arrived over a wire (frombuffer views are read-only — copy)."""
+        rc = RemoteCoordinator(_service())
+        rc.submit_many(_reports(3))
+        w = rc.solve()
+        w *= 2.0
+        vw = rc.weights()
+        vw.weight[0, 0] += 1.0
+        st = rc.state()
+        st["gram"][0, 0] += 1.0
+
+    def test_http_get_works_for_reads(self):
+        import urllib.request
+
+        svc = _service()
+        svc.coordinator().submit_many(_reports(2))
+        with serve_http(svc) as http:
+            with urllib.request.urlopen(
+                    f"{http.url}/v1/default/describe") as resp:
+                header, _, _ = unpack_message(resp.read())
+        assert header["ok"] and header["num_clients"] == 2
+
+    def test_checkpoint_roundtrip_through_remote_state(self, tmp_path):
+        """repro.checkpoint speaks the service: save a remote federation's
+        state, restore it into a local server, resume submitting."""
+        from repro import checkpoint as ckpt
+
+        reps = _reports()
+        rc = RemoteCoordinator(_service())
+        rc.submit_many(reps[:4])
+        ckpt.save_server(tmp_path / "fed", rc)
+        back = ckpt.load_server(tmp_path / "fed")
+        assert back.num_clients == 4
+        back.submit_many(reps[4:])
+        ref = AFLServer(DIM, C, gamma=GAMMA)
+        ref.submit_many(reps)
+        np.testing.assert_allclose(back.solve(), ref.solve(), rtol=1e-9,
+                                   atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Sharded placement: occupancy + rebalance
+# ---------------------------------------------------------------------------
+
+
+def _sharded(n_shards=4):
+    """A ShardedCoordinator widened to ``n_shards`` host accumulators.
+
+    Placement (round-robin, occupancy, rebalance) is pure host-side list
+    manipulation — independent of the device mesh — so padding the shard
+    list lets a 1-device CI host exercise multi-shard placement. (The
+    device-mesh solve path is covered by the x64 subprocess test in
+    test_coordinator_conformance.py.)
+    """
+    coord = ShardedCoordinator(DIM, C, gamma=GAMMA)
+    while len(coord._shards) < n_shards:
+        coord._shards.append(coord.engine.init(DIM, C))
+    return coord
+
+
+class TestShardedPlacementOps:
+    def test_occupancy_tracks_round_robin_and_lands_in_state(self):
+        coord = _sharded(4)
+        reps = _reports(7)
+        coord.submit_many(reps)
+        occ = coord.occupancy()
+        assert sum(occ) == 7 and max(occ) - min(occ) <= 1
+        state = coord.state()
+        np.testing.assert_array_equal(state["shard_clients"], occ)
+        # extra key must not break cross-kind restore
+        srv = AFLServer.from_state(state)
+        assert srv.num_clients == 7
+
+    def test_rebalance_moves_fullest_into_emptiest_invariantly(self):
+        coord = _sharded(4)
+        reps = _reports(9)
+        # skew placement: everything lands in shard 0
+        for r in reps:
+            coord.submit(r)
+            coord._order = 0
+        assert coord.occupancy()[0] == 9
+        before = coord.state()
+        moved = coord.rebalance()
+        assert moved is not None and moved[0] == 0
+        occ = coord.occupancy()
+        assert occ[0] == 0 and sum(occ) == 9
+        after = coord.state()
+        # statistics are additive ⇒ the aggregate is migration-invariant
+        np.testing.assert_allclose(after["gram"], before["gram"],
+                                   rtol=1e-12, atol=1e-9)
+        np.testing.assert_allclose(after["moment"], before["moment"],
+                                   rtol=1e-12, atol=1e-9)
+        # no ping-pong: the blob just migrated is not migrated back — a
+        # `while coord.rebalance(): ...` operator loop must terminate
+        assert coord.rebalance() is None
+        # a new submission opens the next epoch and re-arms rebalance
+        coord.submit(_reports(1, start_id=77)[0])
+        assert coord.rebalance() is not None
+
+    def test_rebalance_noop_when_balanced(self):
+        coord = _sharded(3)
+        coord.submit_many(_reports(3))                 # one client per shard
+        assert coord.rebalance() is None
+        assert _sharded(1).rebalance() is None         # nothing to move to
