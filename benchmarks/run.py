@@ -2,7 +2,10 @@
 
   PYTHONPATH=src python -m benchmarks.run [--quick] [--only table1,...]
 
-Writes results/bench/<name>.json per module and prints each table.
+Writes results/bench/<name>.json per module and prints each table. Every run
+also appends a consolidated entry — git SHA, suite, per-module wall seconds —
+to results/bench/BENCH_solve.json, the run-over-run perf trajectory (one
+entry per (sha, suite); re-running the same commit replaces its entry).
 """
 
 from __future__ import annotations
@@ -11,6 +14,7 @@ import argparse
 import importlib
 import json
 import pathlib
+import subprocess
 import time
 import traceback
 
@@ -30,8 +34,46 @@ MODULES = [
     ("engine_bench", "Engine — cached-factorization solve throughput"),
     ("async_server_bench", "Async serving — rank-k update vs refactor"),
     ("kahan_f32_bench", "Kahan-compensated f32 vs f64-on-device (AFLClient)"),
+    ("solve_kernels_bench",
+     "Solve kernels — fused γ-sweep, batched factor, tiled d=6144"),
     ("roofline", "§Roofline — dry-run derived"),
 ]
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+            text=True, check=True).stdout.strip()
+    except (OSError, subprocess.CalledProcessError):
+        return "unknown"
+
+
+def record_trajectory(outdir: pathlib.Path, suite: str,
+                      module_seconds: dict, failures: list) -> None:
+    """Append this run to the BENCH_solve.json perf trajectory.
+
+    Keyed by (git sha, suite): re-running the same commit replaces its
+    entry, so the file stays one line of history per measured state instead
+    of growing with every retry.
+    """
+    path = outdir / "BENCH_solve.json"
+    try:
+        trajectory = json.loads(path.read_text())
+        assert isinstance(trajectory, list)
+    except (OSError, ValueError, AssertionError):
+        trajectory = []
+    sha = _git_sha()
+    trajectory = [e for e in trajectory
+                  if not (e.get("sha") == sha and e.get("suite") == suite)]
+    trajectory.append({
+        "sha": sha,
+        "suite": suite,
+        "recorded_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "modules": {k: round(v, 3) for k, v in module_seconds.items()},
+        "failures": sorted(failures),
+    })
+    path.write_text(json.dumps(trajectory, indent=1))
 
 
 def main() -> None:
@@ -46,6 +88,7 @@ def main() -> None:
     outdir.mkdir(parents=True, exist_ok=True)
     only = {m for m in args.only.split(",") if m}
     failures = []
+    module_seconds = {}
     t_start = time.perf_counter()
     for name, desc in MODULES:
         if only and name not in only:
@@ -56,10 +99,14 @@ def main() -> None:
             mod = importlib.import_module(f"benchmarks.{name}")
             rows = mod.run(quick=args.quick)
             (outdir / f"{name}.json").write_text(json.dumps(rows, indent=1))
-            print(f"[{name}: {time.perf_counter()-t0:.1f}s]")
+            module_seconds[name] = time.perf_counter() - t0
+            print(f"[{name}: {module_seconds[name]:.1f}s]")
         except Exception:
             failures.append(name)
             traceback.print_exc()
+    suite = ("quick" if args.quick else "full") + (
+        f":{','.join(sorted(only))}" if only else "")
+    record_trajectory(outdir, suite, module_seconds, failures)
     print(f"\ntotal: {time.perf_counter()-t_start:.1f}s")
     if failures:
         raise SystemExit(f"benchmark failures: {failures}")

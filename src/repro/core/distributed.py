@@ -33,6 +33,7 @@ __all__ = [
     "federated_solve",
     "federated_solve_no_ri",
     "make_federated_solve",
+    "make_tiled_federated_solve",
 ]
 
 _ENGINE = AnalyticEngine("jax")
@@ -124,5 +125,69 @@ def make_federated_solve(
             local, axis_names=ax, num_clients=num_clients, gamma=gamma,
             **({"target_gamma": target_gamma} if use_ri else {}),
         )
+
+    return jax.jit(_agg)
+
+
+def make_tiled_federated_solve(
+    mesh: Mesh,
+    *,
+    axis_names: Sequence[str] = ("data",),
+    target_gamma: float = 0.0,
+    use_kernel: bool = False,
+):
+    """Build a jitted aggregation over a row-TILED Gram: tiles-per-shard → W.
+
+    ``make_federated_solve`` psums whole (d, d) leaves — every shard holds a
+    full-size partial aggregate, so per-device resident memory is d²
+    regardless of the mesh. At d=6144 that is ~302 MB of f64 per device just
+    for the Gram partials, which is what capped the PR-3 sharded backend.
+    Here each shard instead holds ONE ``(d/shards, d)`` row tile of the one
+    global Gram (``ShardedCoordinator(tiled_gram=True)`` scatters every
+    arrival across the tiles at ingest, so the tiles already ARE the
+    aggregate — d²/shards resident per device). The returned function takes
+    the stacked tiles ``(shards, d/shards, d)`` and the matching moment
+    tiles ``(shards, d/shards, C)``, and in one XLA program:
+
+      1. each shard scatters its tile into an otherwise-zero full system at
+         its own row offset (``axis_index`` → ``dynamic_update_slice``),
+      2. ONE psum assembles the replicated global (d, d) system — the same
+         collective family as the leaf psum, but each shard contributes
+         every Gram entry exactly once instead of a full-size partial
+         (the full matrix is a transient of the solve, not resident state),
+      3. RI restore is a diagonal shift (raw tiles + ``target_gamma``·I —
+         the engine's lazy-γ semantics), and the replicated system is
+         factored and solved in-graph (``use_kernel=True`` routes this
+         through the blocked Pallas Cholesky of ``repro.kernels.solve``).
+
+    Device arithmetic follows jax's global precision; under
+    ``jax_enable_x64`` the result matches the sync host path ≤1e-6 at
+    d=6144 on an 8-way mesh (``benchmarks/solve_kernels_bench.py``).
+    """
+    ax = tuple(axis_names)
+    engine = AnalyticEngine("jax", use_kernel=use_kernel)
+
+    @functools.partial(
+        shard_map, mesh=mesh, in_specs=(P(ax), P(ax)), out_specs=P()
+    )
+    def _agg(gram_tiles: jax.Array, moment_tiles: jax.Array) -> jax.Array:
+        # linear shard index over the (possibly multi-axis) federation mesh
+        idx = jnp.asarray(0)
+        for a in ax:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        gt = gram_tiles[0]                     # (rows, d) — this shard's tile
+        mt = moment_tiles[0]                   # (rows, C)
+        rows, d = gt.shape
+        offset = (idx * rows).astype(jnp.int32)
+        zero = jnp.zeros((), jnp.int32)
+        full_g = jax.lax.dynamic_update_slice(
+            jnp.zeros((d, d), gt.dtype), gt, (offset, zero))
+        full_m = jax.lax.dynamic_update_slice(
+            jnp.zeros((d, mt.shape[1]), mt.dtype), mt, (offset, zero))
+        full_g = jax.lax.psum(full_g, ax)
+        full_m = jax.lax.psum(full_m, ax)
+        a_sys = full_g + jnp.asarray(target_gamma, gt.dtype) * jnp.eye(
+            d, dtype=gt.dtype)
+        return engine.backend.solve_sym(a_sys, full_m)
 
     return jax.jit(_agg)

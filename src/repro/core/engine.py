@@ -48,6 +48,8 @@ except ImportError:  # pragma: no cover - scipy ships with jax, but stay soft
 __all__ = [
     "SuffStats",
     "Factorization",
+    "SweepFactorization",
+    "SweepRefreshNeeded",
     "AnalyticEngine",
     "NumpyF64Backend",
     "JaxBackend",
@@ -127,6 +129,69 @@ class Factorization:
         return self.backend.rank_update(self, xs)
 
 
+class SweepRefreshNeeded(RuntimeError):
+    """A rank-updated sweep handle cannot answer this γ grid exactly (the
+    base spectrum hits the pinv cutoff with pending low-rank corrections) —
+    re-eigendecompose the current statistics and retry."""
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepFactorization:
+    """Rank-updatable eigendecomposition handle for repeated multi-γ sweeps.
+
+    ``vals/vecs`` are the eigendecomposition ``base = V Λ Vᵀ`` of the raw
+    (RI) — or regularized (no-RI) — aggregate Gram at the time the handle
+    was built; the d³ ``eigh`` is the whole cost of a γ sweep, so a serving
+    coordinator wants to pay it once and keep sweeping as the federation
+    evolves. ``u`` accumulates the low-rank roots of every Gram delta merged
+    since (``uᵀu`` = the raw update), with ``vu = Vᵀuᵀ`` cached so each
+    sweep works entirely in the fixed eigenbasis:
+
+        (B(γ) + uᵀu)⁻¹ Q  =  B⁻¹Q − B⁻¹uᵀ (I + u B⁻¹ uᵀ)⁻¹ u B⁻¹ Q,
+        B(γ) = V (Λ+γ) Vᵀ
+
+    — exact Woodbury algebra, O(d²·(C+k) + k³) per γ instead of a fresh d³
+    eigendecomposition. The update itself (:meth:`rank_update`) is O(d²·k):
+    one projection of the new roots into the eigenbasis. Past
+    ``AFLServer.sweep_rank_budget`` accumulated rows (default d/8; see
+    ``benchmarks/solve_kernels_bench.py`` for the measured crossover) a
+    fresh handle is cheaper per sweep again and callers rebuild.
+
+    With no pending update (``rank == 0``) the solve path is the plain
+    spectral sweep — bit-identical to :meth:`AnalyticEngine.
+    solve_multi_gamma`'s historical output, including the pinv-style
+    truncation for rank-deficient γ=0 systems. With pending updates the
+    truncation would no longer equal the pseudo-inverse of the *updated*
+    system, so that combination raises :class:`SweepRefreshNeeded` instead
+    of silently answering a subtly different question.
+    """
+
+    vals: Any
+    vecs: Any
+    backend: Any
+    u: np.ndarray                 # (k, d) pending raw-Gram update roots
+    vu: np.ndarray                # (d, k) = vecsᵀ · uᵀ, cached projection
+
+    @property
+    def rank(self) -> int:
+        return int(self.u.shape[0])
+
+    @property
+    def dim(self) -> int:
+        return int(self.u.shape[1])
+
+    def rank_update(self, xs) -> "SweepFactorization":
+        """Fold update rows ``xs (k, d)`` (``xsᵀxs`` = the merged raw-Gram
+        delta) into the handle: append to ``u`` and project once."""
+        xs = np.asarray(xs, np.float64).reshape(-1, self.dim)
+        if not xs.shape[0]:
+            return self
+        proj = np.asarray(self.vecs, np.float64).T @ xs.T
+        return dataclasses.replace(
+            self, u=np.concatenate([self.u, xs], 0),
+            vu=np.concatenate([self.vu, proj], 1))
+
+
 # ---------------------------------------------------------------------------
 # Backends
 # ---------------------------------------------------------------------------
@@ -195,10 +260,14 @@ class JaxBackend:
     """Device jax arrays, jit-able; f32 by default (f64 where x64 is on).
 
     ``use_kernel=True`` routes the Gram update through the fused Pallas
-    kernel (`repro.kernels.ops.gram_update`: Mosaic on TPU, interpreter
-    elsewhere). The solve is an in-graph Cholesky — by construction the
-    engine only hands it PD systems (γ>0 or full-rank statistics); callers
-    needing the singular γ=0 path use the ``numpy_f64`` backend.
+    kernel (`repro.kernels.ops.gram_update`) AND the factor/solve/γ-sweep
+    through the blocked Pallas solve kernels (`repro.kernels.solve`:
+    blocked Cholesky, batched substitution, fused multi-γ sweep — Mosaic on
+    TPU, interpreter elsewhere). The solve path assumes PD systems (γ>0 or
+    full-rank statistics); a singular system surfaces as NaNs, which
+    :meth:`AnalyticEngine.solve_multi_gamma` detects and reroutes to the
+    eigendecomposition/pinv path (direct ``solve`` callers needing γ=0
+    rank-deficient semantics use the ``numpy_f64`` backend).
     """
 
     name = "jax"
@@ -239,6 +308,13 @@ class JaxBackend:
         return g, q, jnp.asarray(x.shape[0], self.dtype)
 
     def factor(self, a) -> Factorization:
+        if self.use_kernel:
+            from repro.kernels import ops as _kops
+
+            # blocked Pallas Cholesky; handle shape matches cho_factor's
+            # (tri, lower) convention so rank_update works unchanged
+            return Factorization(
+                (_kops.blocked_cholesky(a[None])[0], True), backend=self)
         import jax.scipy.linalg as jsl
 
         return Factorization(jsl.cho_factor(a), backend=self)
@@ -257,12 +333,26 @@ class JaxBackend:
         return Factorization((self._rank_update_fn(tri, xs), True), backend=self)
 
     def factor_solve(self, f: Factorization, b):
+        if self.use_kernel:
+            from repro.kernels import ops as _kops
+
+            tri, lower = f.handle
+            l = tri if lower else tri.T
+            return _kops.cholesky_solve(l[None], b[None])[0]
         import jax.scipy.linalg as jsl
 
         return jsl.cho_solve(f.handle, b)
 
     def solve_sym(self, a, b):
         return self.factor_solve(self.factor(a), b)
+
+    def fused_sweep(self, a, b, gammas):
+        """Whole-γ-grid solve ``(a + γ_j I) W_j = b`` via the fused Pallas
+        sweep kernel (kernel path only); singular γs come back as NaNs."""
+        from repro.kernels import ops as _kops
+
+        return _kops.multi_gamma_solve(
+            a, b, self._jnp.asarray(gammas, self.dtype))
 
     def eigh(self, a):
         return self._jnp.linalg.eigh(a)
@@ -560,18 +650,109 @@ class AnalyticEngine:
         Returns a list of weights, one per γ, each the RI-restored
         (``use_ri=True``) or biased (``use_ri=False``, γ then *adds* the
         lazy kγ term per eq (15)) solution.
+
+        Backends route differently: the Pallas-kernel jax backend runs the
+        whole grid through ONE fused factor+solve kernel call
+        (:func:`repro.kernels.solve.multi_gamma_solve`), falling back to the
+        eigendecomposition below only when a system in the grid is singular
+        (the γ=0 rank-deficient ablations — NaNs trip the fallback, so pinv
+        semantics match the numpy_f64 oracle). Everything else goes through
+        a fresh :class:`SweepFactorization` — one eigendecomposition, every
+        γ; serving coordinators keep that handle and rank-update it instead
+        (see :meth:`sweep_factor` / :meth:`sweep_solve`).
         """
-        b = self.backend
+        gammas = [float(g) for g in gammas]
+        if getattr(self.backend, "use_kernel", False) and gammas:
+            base = stats.gram if use_ri else self.regularized_gram(stats)
+            ws = self.backend.fused_sweep(base, stats.moment, gammas)
+            ws_host = np.asarray(ws)
+            if (bool(np.isfinite(ws_host).all())
+                    and _cholesky_sweep_trustworthy(
+                        base, stats.moment, ws_host, rcond)):
+                return [ws[i] for i in range(len(gammas))]
+            # singular or ≈singular system in the grid (NaNs, or a solution
+            # blown up past what the pinv truncation would allow):
+            # eigendecomposition/pinv fallback with the caller's rcond
+        return self.sweep_solve(self.sweep_factor(stats, use_ri=use_ri),
+                                stats.moment, gammas, rcond=rcond)
+
+    def sweep_factor(self, stats: SuffStats, *,
+                     use_ri: bool = True) -> SweepFactorization:
+        """Eigendecompose the aggregate once for repeated γ sweeps.
+
+        The returned handle is rank-updatable: as low-rank arrivals merge
+        into an evolving federation, :meth:`SweepFactorization.rank_update`
+        folds their roots in O(d²·k) and :meth:`sweep_solve` stays exact via
+        Woodbury in the fixed eigenbasis — no per-sweep d³ re-factorization.
+        """
         base = stats.gram if use_ri else self.regularized_gram(stats)
-        vals, vecs = b.eigh(base)
-        vq = vecs.T @ stats.moment
+        vals, vecs = self.backend.eigh(base)
+        d = stats.dim
+        return SweepFactorization(vals, vecs, self.backend,
+                                  u=np.zeros((0, d)), vu=np.zeros((d, 0)))
+
+    def sweep_solve(
+        self,
+        handle: SweepFactorization,
+        moment,
+        gammas: Sequence[float],
+        *,
+        rcond: float = 1e-12,
+    ):
+        """Solve the γ grid against a (possibly rank-updated) sweep handle.
+
+        rank == 0 reproduces the plain spectral sweep bit-for-bit; with
+        pending updates each γ costs one extra k×k solve (exact Woodbury).
+        Raises :class:`SweepRefreshNeeded` when pending updates meet the
+        pinv truncation cutoff (rank-deficient base at γ≈0) — the caller
+        rebuilds the handle from current statistics, which always succeeds.
+        """
+        b = handle.backend
+        vals, vecs = handle.vals, handle.vecs
+        vq = vecs.T @ moment
         scale = abs(float(np.max(np.asarray(vals)))) if np.asarray(vals).size else 1.0
         cutoff = rcond * max(scale, np.finfo(np.float32).tiny)
+        k = handle.rank
+        eye_k = np.eye(k)
         out = []
         for g in gammas:
             inv = b.safe_reciprocal(vals + b.scalar(float(g)), cutoff)
-            out.append(vecs @ (inv[:, None] * vq))
+            if k == 0:
+                out.append(vecs @ (inv[:, None] * vq))
+                continue
+            inv_h = np.asarray(inv, np.float64)
+            if np.any(inv_h == 0.0):
+                raise SweepRefreshNeeded(
+                    f"spectral truncation at γ={g} with {k} pending update "
+                    "rows — rebuild the sweep handle from current stats")
+            su = inv_h[:, None] * np.asarray(handle.vu, np.float64)  # (d, k)
+            cap = eye_k + handle.vu.T @ su                           # (k, k)
+            rhs = su.T @ np.asarray(vq, np.float64)                  # (k, C)
+            coeff = inv_h[:, None] * np.asarray(vq, np.float64) \
+                - su @ np.linalg.solve(cap, rhs)
+            out.append(np.asarray(vecs, np.float64) @ coeff)
         return out
+
+
+def _cholesky_sweep_trustworthy(base, moment, ws_host, rcond) -> bool:
+    """Should a finite fused-Cholesky sweep result be trusted, or does the
+    grid need the eigendecomposition/pinv path?
+
+    NaN catches exactly-singular pivots, but roundoff can leave a
+    rank-deficient system's smallest pivots tiny-*positive*: the factor
+    then succeeds and returns finite weights with norms ~1/λ_noise — where
+    the documented pinv semantics (eigenvalues ≤ rcond·λ_max treated as
+    zero) would have truncated. For any γ the pinv solution satisfies
+    ``‖W‖ ≤ ‖Q‖ / (rcond·λ_max)``, and trace(base) ≥ λ_max for PSD base —
+    so a solution with ``‖W‖·rcond·trace > ‖Q‖`` can only come from
+    inverting spectrum the truncation would have zeroed. Conservative by at
+    most the d× gap between trace and λ_max (extra fallbacks are merely
+    slower, never wrong)."""
+    scale = float(np.trace(np.asarray(base, np.float64)))
+    q_norm = float(np.linalg.norm(np.asarray(moment, np.float64)))
+    w_norm = float(max(np.linalg.norm(w) for w in ws_host))
+    return w_norm * float(rcond) * max(scale, np.finfo(np.float32).tiny) \
+        <= q_norm
 
 
 def _kahan_add(total, comp, upd):

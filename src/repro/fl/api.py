@@ -43,7 +43,8 @@ from typing import (Any, Callable, Dict, Iterable, List, Optional, Protocol,
 
 import numpy as np
 
-from repro.core.engine import AnalyticEngine, Factorization, SuffStats
+from repro.core.engine import (AnalyticEngine, Factorization, SuffStats,
+                               SweepFactorization, SweepRefreshNeeded)
 from repro.fl.errors import (DuplicateClient, EmptyFederation, GammaMismatch)
 
 __all__ = [
@@ -504,7 +505,8 @@ class AFLServer:
     """
 
     def __init__(self, dim: int, num_classes: int, gamma: float = 1.0,
-                 *, update_rank_budget: Optional[int] = None):
+                 *, update_rank_budget: Optional[int] = None,
+                 sweep_rank_budget: Optional[int] = None):
         self.dim = dim
         self.num_classes = num_classes
         self.gamma = gamma
@@ -515,9 +517,18 @@ class AFLServer:
         self.update_rank_budget = (
             max(1, dim // 16) if update_rank_budget is None
             else int(update_rank_budget))
+        # Sweep-handle crossover: the eigendecomposition behind
+        # solve_multi_gamma is ~10× a Cholesky, so the Woodbury-updated
+        # handle stays worthwhile to much higher accumulated rank than the
+        # d/16 factor budget — past ~d/8 pending rows the per-γ k×k extras
+        # rival a fresh eigh (measured in benchmarks/solve_kernels_bench.py).
+        self.sweep_rank_budget = (
+            max(1, dim // 8) if sweep_rank_budget is None
+            else int(sweep_rank_budget))
         self._stats = self.engine.init(dim, num_classes)
         self._seen: set[int] = set()
         self._factor_cache: Dict[float, Factorization] = {}
+        self._sweep_cache: Optional[SweepFactorization] = None
         self._version = 0
         # per-instance etag salt: tokens minted against THIS coordinator can
         # never validate against a restored/rebuilt one at the same epoch
@@ -542,10 +553,28 @@ class AFLServer:
         self._stats = self.engine.merge(self._stats, upload)
         self._seen.add(report.client_id)
         self._version += 1
+        self._maintain_sweep_cache(report.root)
         if self._try_factor_update(report.root):
             return True
         self._factor_cache.clear()
         return False
+
+    def _maintain_sweep_cache(self, root: Optional[np.ndarray]) -> None:
+        """Fold an arrival's root into the cached eigendecomposition handle
+        (Woodbury pending set), or drop the handle when the arrival has no
+        root / would push past the sweep rank budget. Independent of the
+        Cholesky factor cache — the two have different crossovers."""
+        h = self._sweep_cache
+        if h is None:
+            return
+        if root is None:
+            self._sweep_cache = None
+            return
+        root = np.asarray(root, np.float64).reshape(-1, self.dim)
+        if h.rank + root.shape[0] > self.sweep_rank_budget:
+            self._sweep_cache = None
+            return
+        self._sweep_cache = h.rank_update(root)
 
     def _try_factor_update(self, root: Optional[np.ndarray]) -> bool:
         """Fold an arrival's low-rank root into every cached factor; False
@@ -587,11 +616,25 @@ class AFLServer:
         return self.engine.factor_solve(fact, self._stats.moment)
 
     def solve_multi_gamma(self, gammas: Sequence[float]) -> list[np.ndarray]:
-        """γ model sweep over the current aggregate: one eigendecomposition,
-        one weight per candidate ridge (see engine.solve_multi_gamma)."""
+        """γ model sweep over the current aggregate from a CACHED
+        eigendecomposition: the d³ eigh is paid once per cache lifetime, and
+        low-rank arrivals rank-update the handle (exact Woodbury in the
+        fixed eigenbasis) instead of invalidating it — repeated sweeps on an
+        evolving federation cost d²·(C+k) per γ, not d³ each (see
+        ``AnalyticEngine.sweep_factor``)."""
         if not self._seen:
             raise EmptyFederation("no clients aggregated")
-        return self.engine.solve_multi_gamma(self._stats, gammas)
+        if self._sweep_cache is None:
+            self._sweep_cache = self.engine.sweep_factor(self._stats)
+        try:
+            return self.engine.sweep_solve(self._sweep_cache,
+                                           self._stats.moment, gammas)
+        except SweepRefreshNeeded:
+            # pending updates + spectral truncation: rebuild from current
+            # statistics (a fresh handle always answers exactly)
+            self._sweep_cache = self.engine.sweep_factor(self._stats)
+            return self.engine.sweep_solve(self._sweep_cache,
+                                           self._stats.moment, gammas)
 
     def sweep(self, gammas: Sequence[float], holdout) -> GammaSweep:
         """Server-side cross-validation: solve every candidate γ off ONE
@@ -649,23 +692,46 @@ class ShardedCoordinator:
 
     The statistics of a K-client federation are a 4-leaf additive pytree, so
     at K≥1000 the coordinator does not need one global host aggregate:
-    arrivals round-robin into per-shard accumulators (host f64, so ingest
-    stays exact and lock-free), and ``solve()`` runs the whole aggregation
-    stage — per-shard partial sums → one psum → RI restore → Cholesky — as a
-    single XLA program via :func:`repro.core.distributed.make_federated_solve`,
+    arrivals land in per-shard accumulators (host f64, so ingest stays exact
+    and lock-free), and ``solve()`` runs the whole aggregation stage —
+    per-shard partial sums → one psum → RI restore → Cholesky — as a single
+    XLA program via :func:`repro.core.distributed.make_federated_solve`,
     with each shard's (d, d) Gram tile resident on its own device.
+
+    Placement is **load-aware** by default: ``submit`` routes each arrival
+    to the emptiest shard (ties broken cyclically, so uniform traffic
+    degenerates to exact round-robin), which keeps occupancy flat under
+    skewed arrival patterns and makes :meth:`rebalance` a recovery tool
+    rather than routine maintenance. ``placement="round_robin"`` restores
+    the PR-3 behavior (placement never changes the aggregate — the AA law
+    makes shard contents additive — only the occupancy profile).
+
+    ``tiled_gram=True`` changes what a shard *holds*: instead of a whole
+    (d, d) partial aggregate per shard (memory d² per device, psum of whole
+    leaves), each shard keeps only its (d/shards, d) **row tile of the one
+    global Gram** — every arrival's statistics are scattered across all
+    tiles, so placement is the aggregation and per-shard resident memory
+    scales as d²/shards. ``solve()`` then runs
+    :func:`repro.core.distributed.make_tiled_federated_solve`: each device
+    contributes its tile to the psum'd full matrix exactly once, and the
+    replicated system is factored in-graph. This is the d=6144-head
+    configuration (a whole-leaf psum at that size keeps 8 × 302 MB of f64
+    partials resident; tiles keep 38 MB per shard) — verified ≤1e-6 against
+    the sync path on an 8-way mesh in ``benchmarks/solve_kernels_bench.py``.
+    Tiled mode requires ``dim % num_shards == 0``.
 
     Device arithmetic follows jax's global precision: f32 by default,
     f64 end-to-end under ``jax_enable_x64`` (the 1e-6-vs-sync conformance
     path). ``solve_multi_gamma`` / ``sweep`` run on the merged statistics
     through the host engine — one eigendecomposition, every γ — matching
     :class:`AFLServer` exactly, and ``state()`` speaks the same checkpoint
-    schema, so the three coordinators are interchangeable behind
+    schema, so the coordinator kinds are interchangeable behind
     :class:`Coordinator`.
     """
 
     def __init__(self, dim: int, num_classes: int, gamma: float = 1.0,
-                 *, mesh=None, axis_names: Optional[Sequence[str]] = None):
+                 *, mesh=None, axis_names: Optional[Sequence[str]] = None,
+                 placement: str = "load_aware", tiled_gram: bool = False):
         import jax
 
         self.dim = dim
@@ -680,8 +746,27 @@ class ShardedCoordinator:
         n_shards = 1
         for a in self.axis_names:
             n_shards *= mesh.shape[a]
-        self._shards: List[SuffStats] = [
-            self.engine.init(dim, num_classes) for _ in range(n_shards)]
+        if placement not in ("load_aware", "round_robin"):
+            raise ValueError(f"unknown placement policy {placement!r} "
+                             "(load_aware | round_robin)")
+        self.placement = placement
+        self.tiled_gram = bool(tiled_gram)
+        if self.tiled_gram:
+            if dim % n_shards:
+                raise ValueError(
+                    f"tiled_gram requires dim divisible by the shard count "
+                    f"(dim={dim}, shards={n_shards})")
+            self._tile_rows = dim // n_shards
+            self._gram_tiles: List[np.ndarray] = [
+                np.zeros((self._tile_rows, dim)) for _ in range(n_shards)]
+            self._moment_tiles: List[np.ndarray] = [
+                np.zeros((self._tile_rows, num_classes))
+                for _ in range(n_shards)]
+            self._count = 0.0
+            self._shards: List[SuffStats] = []
+        else:
+            self._shards = [
+                self.engine.init(dim, num_classes) for _ in range(n_shards)]
         self._seen: set[int] = set()
         self._order = 0
         self._solve_fns: Dict[float, Any] = {}
@@ -691,7 +776,8 @@ class ShardedCoordinator:
 
     @property
     def num_shards(self) -> int:
-        return len(self._shards)
+        return (len(self._gram_tiles) if self.tiled_gram
+                else len(self._shards))
 
     @property
     def num_clients(self) -> int:
@@ -702,15 +788,43 @@ class ShardedCoordinator:
         """Submission epoch (see :meth:`AFLServer.version`)."""
         return self._version
 
+    def _place(self) -> int:
+        """Pick the shard for the next arrival: emptiest under the default
+        load-aware policy (cyclic tie-break from the round-robin cursor, so
+        equal occupancy IS round-robin), or the plain cursor."""
+        n = self.num_shards
+        if self.placement == "round_robin":
+            i = self._order % n
+            self._order += 1
+            return i
+        occ = self.occupancy()
+        low = min(occ)
+        for off in range(n):
+            j = (self._order + off) % n
+            if occ[j] == low:
+                self._order = j + 1
+                return j
+        raise AssertionError("unreachable: some shard holds the minimum")
+
     def submit(self, report: ClientReport) -> bool:
-        """Merge one upload into its round-robin shard. Returns True — the
-        sharded backend keeps no host factor cache to invalidate (the
-        device program refactors per solve), so every arrival 'survives'."""
+        """Merge one upload — into the emptiest shard (load-aware default),
+        or scattered as row tiles across every shard in tiled-Gram mode.
+        Returns True — the sharded backend keeps no host factor cache to
+        invalidate (the device program refactors per solve), so every
+        arrival 'survives'."""
         upload = _ingest_upload(report, dim=self.dim, gamma=self.gamma,
                                 seen=self._seen)
-        i = self._order % len(self._shards)
-        self._order += 1
-        self._shards[i] = self.engine.merge(self._shards[i], upload)
+        if self.tiled_gram:
+            gram = np.asarray(upload.gram, np.float64)
+            moment = np.asarray(upload.moment, np.float64)
+            r = self._tile_rows
+            for i in range(self.num_shards):
+                self._gram_tiles[i] += gram[i * r:(i + 1) * r]
+                self._moment_tiles[i] += moment[i * r:(i + 1) * r]
+            self._count += float(upload.count)
+        else:
+            i = self._place()
+            self._shards[i] = self.engine.merge(self._shards[i], upload)
         self._seen.add(report.client_id)
         self._version += 1
         return True
@@ -720,9 +834,12 @@ class ShardedCoordinator:
             self.submit(r)
 
     def occupancy(self) -> List[int]:
-        """Clients currently resident per shard (placement observability —
-        the input signal for :meth:`rebalance` and, next, load-aware
-        placement)."""
+        """Per-shard residency: clients per shard (the signal load-aware
+        placement and :meth:`rebalance` act on), or — in tiled-Gram mode,
+        where every client's statistics span all shards — the per-shard
+        resident Gram rows (always balanced by construction)."""
+        if self.tiled_gram:
+            return [self._tile_rows] * self.num_shards
         return [int(s.clients) for s in self._shards]
 
     def rebalance(self) -> Optional[Tuple[int, int]]:
@@ -738,12 +855,15 @@ class ShardedCoordinator:
 
         Returns ``(src, dst)`` shard indices, or ``None`` when there is
         nothing to move: fewer than 2 shards, the fullest holds at most one
-        more client than the emptiest, or the candidate move would just
-        undo this epoch's previous migration (without this guard,
+        more client than the emptiest, tiled-Gram mode (tiles are balanced
+        by construction), or the candidate move would just undo this
+        epoch's previous migration (without this guard,
         ``while coord.rebalance(): ...`` would ping-pong the same blob
         between two shards forever — at most one migration is performed per
         submission epoch).
         """
+        if self.tiled_gram:
+            return None
         occ = self.occupancy()
         if len(occ) < 2:
             return None
@@ -761,6 +881,14 @@ class ShardedCoordinator:
         return src, dst
 
     def _merged(self) -> SuffStats:
+        if self.tiled_gram:
+            # the tiles ARE the aggregate, partitioned by rows
+            return SuffStats(
+                gram=np.concatenate(self._gram_tiles, 0),
+                moment=np.concatenate(self._moment_tiles, 0),
+                count=float(self._count),
+                clients=float(len(self._seen)),
+            )
         agg = self._shards[0]
         for s in self._shards[1:]:
             agg = self.engine.merge(agg, s)
@@ -782,18 +910,31 @@ class ShardedCoordinator:
         )
 
     def solve(self, target_gamma: float = 0.0) -> np.ndarray:
-        """One collective: psum the sharded statistics, RI-restore, solve."""
-        from repro.core.distributed import make_federated_solve
+        """One collective: psum the sharded statistics (whole leaves, or
+        row tiles placed into the global system in tiled-Gram mode),
+        RI-restore, solve."""
+        from repro.core.distributed import (make_federated_solve,
+                                            make_tiled_federated_solve)
+
+        import jax.numpy as jnp
 
         if not self._seen:
             raise EmptyFederation("no clients aggregated")
         key = float(target_gamma)
         fn = self._solve_fns.get(key)
         if fn is None:
-            fn = make_federated_solve(
-                self.mesh, axis_names=self.axis_names, gamma=self.gamma,
-                target_gamma=key)
+            if self.tiled_gram:
+                fn = make_tiled_federated_solve(
+                    self.mesh, axis_names=self.axis_names, target_gamma=key)
+            else:
+                fn = make_federated_solve(
+                    self.mesh, axis_names=self.axis_names, gamma=self.gamma,
+                    target_gamma=key)
             self._solve_fns[key] = fn
+        if self.tiled_gram:
+            return np.asarray(
+                fn(jnp.asarray(np.stack(self._gram_tiles)),
+                   jnp.asarray(np.stack(self._moment_tiles))), np.float64)
         return np.asarray(fn(self._stacked()), np.float64)
 
     def solve_multi_gamma(self, gammas: Sequence[float]) -> list[np.ndarray]:
@@ -839,14 +980,26 @@ class ShardedCoordinator:
     def from_state(cls, state: Dict[str, np.ndarray],
                    num_classes: Optional[int] = None, *,
                    mesh=None, axis_names: Optional[Sequence[str]] = None,
+                   placement: str = "load_aware", tiled_gram: bool = False,
                    ) -> "ShardedCoordinator":
         dim = state["gram"].shape[0]
         coord = cls(dim, num_classes or state["moment"].shape[1],
-                    float(state["gamma"]), mesh=mesh, axis_names=axis_names)
-        # statistics are additive, so placement is free: restore into shard 0
-        # and let round-robin resume from k
-        coord._shards[0], coord._seen = _restore_stats(state, coord.gamma,
-                                                       dim)
+                    float(state["gamma"]), mesh=mesh, axis_names=axis_names,
+                    placement=placement, tiled_gram=tiled_gram)
+        stats, seen = _restore_stats(state, coord.gamma, dim)
+        coord._seen = seen
+        if tiled_gram:
+            r = coord._tile_rows
+            gram = np.asarray(stats.gram, np.float64)
+            moment = np.asarray(stats.moment, np.float64)
+            for i in range(coord.num_shards):
+                coord._gram_tiles[i] = gram[i * r:(i + 1) * r].copy()
+                coord._moment_tiles[i] = moment[i * r:(i + 1) * r].copy()
+            coord._count = float(stats.count)
+        else:
+            # statistics are additive, so placement is free: restore into
+            # shard 0 (load-aware placement then fills the others first)
+            coord._shards[0] = stats
         coord._order = len(coord._seen)
         coord._version = len(coord._seen)
         return coord

@@ -254,11 +254,17 @@ class AsyncAFLServer:
             return self._server.solve(target_gamma)
 
     async def solve_multi_gamma(self, gammas: Sequence[float]) -> list:
+        """γ sweep over everything applied, served from the wrapped
+        server's rank-updated eigendecomposition handle: low-rank arrivals
+        fold into the cached eigenbasis (Woodbury) instead of forcing a d³
+        re-factorization per sweep — the event-loop twin of the factor-cache
+        rank updates on the single-solve path."""
         async with self._lock:
             return self._server.solve_multi_gamma(gammas)
 
     async def sweep(self, gammas: Sequence[float], holdout) -> GammaSweep:
-        """Server-side γ cross-validation off one eigendecomposition."""
+        """Server-side γ cross-validation off the cached (rank-updated)
+        eigendecomposition — see :meth:`solve_multi_gamma`."""
         async with self._lock:
             weights = self._server.solve_multi_gamma(gammas)
         return _sweep_from_weights(weights, gammas, holdout)

@@ -579,14 +579,32 @@ class InProcTransport:
 
 
 class HttpTransport:
-    """Client side of the loopback HTTP transport (stdlib ``http.client``).
+    """Client side of the HTTP transport (stdlib ``http.client``).
 
-    One short-lived connection per request keeps the transport trivially
-    thread-safe; at loopback latencies connection reuse is noise next to the
-    d² payloads.
+    Connections are **kept alive and reused** (HTTP/1.1 persistent
+    connections, one pooled connection per calling thread, so the transport
+    stays trivially thread-safe without locking the socket; connections
+    owned by dead threads are swept on the next pool access, so thread
+    churn cannot leak sockets). At loopback latencies reuse is minor; over
+    a WAN it removes a TCP (and eventually TLS) handshake round-trip from
+    every submit/poll — the PR-4 ROADMAP rung. A pooled connection the
+    server has since closed (idle timeout, restart) is detected on its next
+    use and replaced with ONE transparent retry on a fresh connection —
+    with replay discipline: a failure while *sending* retries (the server
+    cannot have processed a request whose body never fully arrived), a
+    failure while *reading the response* retries only for read-only routes
+    (a mutating ``submit``/``submit_stream`` may already have been applied,
+    so replaying could double-apply — the error surfaces instead, and the
+    duplicate-client guard protects a caller who re-submits), and a
+    *timeout* is never retried. A failure on a *fresh* connection
+    propagates — that is a real transport error. ``keep_alive=False``
+    restores the one-shot connection-per-request behavior.
     """
 
-    def __init__(self, url: str, *, timeout: float = 60.0):
+    _MUTATING_ROUTES = frozenset({"submit", "submit_stream"})
+
+    def __init__(self, url: str, *, timeout: float = 60.0,
+                 keep_alive: bool = True):
         parts = urllib.parse.urlsplit(url)
         if parts.scheme != "http":
             raise ValueError(f"HttpTransport speaks http:// only, got {url!r}")
@@ -594,23 +612,87 @@ class HttpTransport:
         self._port = parts.port or 80
         self._prefix = parts.path.rstrip("/")
         self._timeout = float(timeout)
+        self.keep_alive = bool(keep_alive)
+        self._local = threading.local()
+        self._pool: Dict[threading.Thread, http.client.HTTPConnection] = {}
+        self._pool_lock = threading.Lock()
+
+    def _connect(self) -> http.client.HTTPConnection:
+        return http.client.HTTPConnection(self._host, self._port,
+                                          timeout=self._timeout)
+
+    def _pooled(self) -> Tuple[http.client.HTTPConnection, bool]:
+        """This thread's live connection (reused=True), or a fresh one that
+        joins the pool. Joining also sweeps connections whose owning thread
+        has exited — their thread-local slot is gone, so without the sweep
+        the sockets would stay open until close()."""
+        conn = getattr(self._local, "conn", None)
+        if conn is not None:
+            return conn, True
+        conn = self._connect()
+        self._local.conn = conn
+        with self._pool_lock:
+            for t in [t for t in self._pool if not t.is_alive()]:
+                self._pool.pop(t).close()
+            self._pool[threading.current_thread()] = conn
+        return conn, False
+
+    def _discard(self) -> None:
+        conn = getattr(self._local, "conn", None)
+        if conn is None:
+            return
+        self._local.conn = None
+        with self._pool_lock:
+            me = threading.current_thread()
+            if self._pool.get(me) is conn:
+                self._pool.pop(me)
+        conn.close()
+
+    def _path(self, route: str, federation: str) -> str:
+        return (f"{self._prefix}/v1/"
+                f"{urllib.parse.quote(federation, safe='')}/{route}")
 
     def request(self, route: str, body: bytes = b"",
                 federation: str = "default") -> bytes:
-        conn = http.client.HTTPConnection(self._host, self._port,
-                                          timeout=self._timeout)
-        try:
-            path = (f"{self._prefix}/v1/"
-                    f"{urllib.parse.quote(federation, safe='')}/{route}")
-            conn.request("POST", path, body=body,
-                         headers={"Content-Type":
-                                  "application/octet-stream"})
-            return conn.getresponse().read()
-        finally:
-            conn.close()
+        path = self._path(route, federation)
+        headers = {"Content-Type": "application/octet-stream"}
+        if not self.keep_alive:
+            conn = self._connect()
+            try:
+                conn.request("POST", path, body=body, headers=headers)
+                return conn.getresponse().read()
+            finally:
+                conn.close()
+        replay_ok = route not in self._MUTATING_ROUTES
+        while True:
+            conn, reused = self._pooled()
+            sent = False
+            try:
+                conn.request("POST", path, body=body, headers=headers)
+                sent = True
+                resp = conn.getresponse()
+                data = resp.read()
+                if resp.will_close:
+                    self._discard()            # server opted out of reuse
+                return data
+            except (http.client.HTTPException, ConnectionError,
+                    OSError) as exc:
+                self._discard()
+                if not reused or isinstance(exc, TimeoutError) or (
+                        sent and not replay_ok):
+                    # fresh socket: a real failure. Timeout, or a mutating
+                    # request that was already fully sent: the server may
+                    # have applied it — replaying could double-apply, so
+                    # surface the error instead.
+                    raise
+                # stale kept-alive socket — retry once on a fresh one
 
     def close(self) -> None:
-        pass
+        with self._pool_lock:
+            pool, self._pool = dict(self._pool), {}
+        for conn in pool.values():
+            conn.close()
+        self._local = threading.local()
 
 
 class _HttpHandler(http.server.BaseHTTPRequestHandler):

@@ -11,6 +11,7 @@ import jax
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import gram as _gram
+from repro.kernels import solve as _solve
 
 _ON_TPU = jax.default_backend() == "tpu"
 
@@ -19,6 +20,25 @@ def gram_update(x: jax.Array, y: jax.Array, **kw) -> tuple[jax.Array, jax.Array]
     """Fused (XᵀX, XᵀY). Interpreted off-TPU, Mosaic-compiled on TPU."""
     kw.setdefault("interpret", not _ON_TPU)
     return _gram.gram_update(x, y, **kw)
+
+
+def blocked_cholesky(a: jax.Array, **kw) -> jax.Array:
+    """Batched blocked lower-Cholesky of SPD systems (m, d, d) → L."""
+    kw.setdefault("interpret", not _ON_TPU)
+    return _solve.blocked_cholesky(a, **kw)
+
+
+def cholesky_solve(l: jax.Array, b: jax.Array, **kw) -> jax.Array:
+    """Batched L·Lᵀ·x = b substitution against blocked_cholesky factors."""
+    kw.setdefault("interpret", not _ON_TPU)
+    return _solve.cholesky_solve(l, b, **kw)
+
+
+def multi_gamma_solve(c: jax.Array, q: jax.Array, gammas: jax.Array,
+                      **kw) -> jax.Array:
+    """Fused γ-sweep: (C + γ_j I) W_j = Q for the whole grid in one call."""
+    kw.setdefault("interpret", not _ON_TPU)
+    return _solve.multi_gamma_solve(c, q, gammas, **kw)
 
 
 def flash_attention(q, k, v, **kw) -> jax.Array:

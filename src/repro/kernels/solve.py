@@ -1,0 +1,389 @@
+"""Pallas TPU kernels for the AFL aggregate solve: blocked Cholesky,
+batched triangular solves, and the fused multi-γ sweep.
+
+AFL's single round ends in ONE linear solve, ``(C_agg + γI) W = Q_agg``, plus
+the RI-ablation γ-sweep that repeats it over a ridge grid — at d=2048 the
+PR-3 sweep spent ~40% of wall time in the per-γ host loop (interpreter +
+per-call BLAS dispatch + a fresh ``C + γI`` materialization each iteration).
+These kernels move the whole factor→sweep pipeline into ``pallas_call``s:
+
+  * :func:`blocked_cholesky` — a right-looking blocked Cholesky over a batch
+    of SPD systems. Panels are unrolled at trace time so every trsm/syrk
+    tile update is a static-shape MXU matmul at the true d³/3 flop count;
+    only the ``block``-column micro-factorizations run as ``fori_loop``
+    column sweeps (O(d) cheap sequential steps total, each touching one
+    ``block``² tile batched over the whole system batch).
+  * :func:`cholesky_solve` — the batched forward/backward substitution
+    against those factors, blocked the same way (per-panel inverse diagonal
+    blocks turn the substitution recurrences into matmuls).
+  * :func:`multi_gamma_solve` — the fused sweep: ONE ``pallas_call`` whose
+    grid walks γ-blocks; each step materializes ``C + γ_j I`` for its block
+    of γs in registers/VMEM, factors all of them batched, and solves for
+    ``W(γ_j)`` — no host loop, no per-γ dispatch, one ``C`` fetch per block.
+
+Precision variants (the ``precision`` argument):
+
+  * ``"native"`` — compute in the input dtype: f32 by default, or **native
+    f64** end-to-end under ``jax_enable_x64`` (the 1e-10-vs-numpy parity
+    configuration locked down by ``tests/test_solve_kernels.py``).
+  * ``"f32_x2"`` — f32 storage with **emulated-f64 products**: every
+    trsm/syrk/substitution matmul splits its operands into exact high/low
+    12-bit-mantissa halves (Dekker splitting) and accumulates the three
+    significant cross products, so the MXU contractions carry ~2× the f32
+    mantissa. Remaining error is f32 accumulation + the scalar
+    sqrt/reciprocal path — measured ~1 decade better than plain f32 on the
+    d=2048 sweep (see ``benchmarks/solve_kernels_bench.py``).
+
+On TPU the calls compile through Mosaic with the whole batched system
+resident in VMEM — which bounds native occupancy to roughly d ≤ 1024 at f32
+per core (d² · batch · 4 bytes against ~16 MB); past that, run one system
+per grid step or shard the γ-grid across cores. HBM-tiled panels (the
+``gram.py`` treatment) are the open next rung for d=6144 *single-system*
+factorization; the serving path at that scale instead shards the Gram
+itself (``repro.fl.api.ShardedCoordinator(tiled_gram=True)``). Off-TPU the
+kernels execute in interpret mode (``repro.kernels.ops`` defaults) — which
+is how this repo's CI exercises them, and fast enough to beat the host
+per-γ loop ~3× at d=2048 (measured, ``results/bench/solve_kernels_bench.json``).
+
+Rank-deficient systems (the γ=0 ablations) are NOT special-cased here: a
+singular system yields NaNs, which callers (``AnalyticEngine``) detect and
+route to the eigendecomposition/pinv host path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+__all__ = [
+    "blocked_cholesky",
+    "cholesky_solve",
+    "multi_gamma_solve",
+    "DEFAULT_BLOCK",
+    "DEFAULT_GAMMA_BLOCK",
+]
+
+DEFAULT_BLOCK = 128        # panel width: MXU-lane multiple, 2·d fori steps
+DEFAULT_GAMMA_BLOCK = 8    # γs factored together per fused-sweep grid step
+DEFAULT_BATCH_BLOCK = 8    # systems per grid step for the batched kernels
+
+_SPLIT = 4097.0            # 2^12 + 1: Dekker split constant for f32
+
+
+# ---------------------------------------------------------------------------
+# In-kernel building blocks (trace-time helpers on (batch, ·, ·) values)
+# ---------------------------------------------------------------------------
+
+
+def _split(a):
+    """Dekker split: a == hi + lo with 12-bit-mantissa halves (exact in f32,
+    so every pairwise product of halves is exact in f32)."""
+    t = a * _SPLIT
+    hi = t - (t - a)
+    return hi, (a - hi)
+
+
+def _make_mm(precision: str):
+    """Batched tile matmul ``(b, n, k) @ (b, k, m)`` at the requested
+    precision: native dtype, or the 3-product emulated-f64 split."""
+    dims = (((2,), (1,)), ((0,), (0,)))
+
+    def mm(a, b):
+        return lax.dot_general(a, b, dims, preferred_element_type=a.dtype)
+
+    if precision != "f32_x2":
+        return mm
+
+    def mm_x2(a, b):
+        ah, al = _split(a)
+        bh, bl = _split(b)
+        hi = lax.dot_general(ah, bh, dims, preferred_element_type=a.dtype)
+        mid = (lax.dot_general(ah, bl, dims, preferred_element_type=a.dtype)
+               + lax.dot_general(al, bh, dims,
+                                 preferred_element_type=a.dtype))
+        return hi + mid
+
+    return mm_x2
+
+
+def _factor_tile(tile):
+    """Unblocked Cholesky of a batch of SPD tiles ``(b, m, m)`` → lower L.
+
+    A ``fori_loop`` column sweep with masked full-width updates, so every
+    iteration has static shapes (VPU work on one tile, batched); the upper
+    triangle is written as zeros. A non-PD tile yields NaNs (sqrt of a
+    non-positive pivot) that propagate to the caller's fallback check.
+    """
+    m = tile.shape[-1]
+    rows = jnp.arange(m)
+
+    def body(j, s):
+        pv = jnp.sqrt(s[:, j, j])
+        col = s[:, :, j] / pv[:, None]
+        below = rows[None, :] > j
+        colm = jnp.where(below, col, jnp.zeros_like(col))
+        s = s - colm[:, :, None] * colm[:, None, :]
+        cj = jnp.where(rows[None, :] == j, pv[:, None], colm)
+        return s.at[:, :, j].set(cj)
+
+    return lax.fori_loop(0, m, body, tile)
+
+
+def _tri_inv_tile(l):
+    """Inverse of a batch of lower-triangular tiles ``(b, m, m)`` by forward
+    substitution on the identity — turns panel trsm into one matmul."""
+    m = l.shape[-1]
+    rows = jnp.arange(m)
+    eye = jnp.eye(m, dtype=l.dtype)
+
+    def body(i, z):
+        li = l[:, i, :]
+        strict = jnp.where(rows[None, :] < i, li, jnp.zeros_like(li))
+        acc = lax.dot_general(strict, z, (((1,), (1,)), ((0,), (0,))),
+                              preferred_element_type=l.dtype)
+        zi = (eye[i][None, :] - acc) / l[:, i, i][:, None]
+        return z.at[:, i, :].set(zi)
+
+    return lax.fori_loop(0, m, body, jnp.zeros_like(l))
+
+
+def _t(a):
+    return jnp.swapaxes(a, -1, -2)
+
+
+def _factor_panels(a, block, mm):
+    """Right-looking blocked Cholesky on a batch ``(b, d, d)``; panels are
+    unrolled at trace time (static tile shapes, true d³/3 flops). Returns the
+    lower factor and the per-panel inverse diagonal blocks (reused by the
+    solve phase so substitution needs no extra column sweeps)."""
+    d = a.shape[-1]
+    if block >= d:
+        # single panel: no trailing updates (a whole-array .at[].set would
+        # also lower to a scatter Pallas refuses to capture)
+        l = _factor_tile(a)
+        return l, [_tri_inv_tile(l)]
+    inv_blocks = []
+    for o in range(0, d, block):
+        l11 = _factor_tile(a[:, o:o + block, o:o + block])
+        zinv = _tri_inv_tile(l11)
+        inv_blocks.append(zinv)
+        a = a.at[:, o:o + block, o:o + block].set(l11)
+        if o + block < d:
+            l21 = mm(a[:, o + block:, o:o + block], _t(zinv))
+            a = a.at[:, o + block:, o:o + block].set(l21)
+            a = a.at[:, o + block:, o + block:].add(-mm(l21, _t(l21)))
+    # zero the (garbage) strict upper triangle so the output is a clean L
+    d_idx = jnp.arange(d)
+    lower = d_idx[:, None] >= d_idx[None, :]
+    return jnp.where(lower[None], a, jnp.zeros_like(a)), inv_blocks
+
+
+def _solve_panels(l, b, block, mm, inv_blocks=None):
+    """Batched ``L Lᵀ x = b`` by blocked forward + backward substitution."""
+    d = l.shape[-1]
+    if inv_blocks is None:
+        inv_blocks = [_tri_inv_tile(l[:, o:o + block, o:o + block])
+                      for o in range(0, d, block)]
+    if block >= d:
+        inv = inv_blocks[0]
+        return mm(_t(inv), mm(inv, b))
+    panels = list(enumerate(range(0, d, block)))
+    y = jnp.zeros_like(b)
+    for k, o in panels:
+        rhs = b[:, o:o + block]
+        if o:
+            rhs = rhs - mm(l[:, o:o + block, :o], y[:, :o])
+        y = y.at[:, o:o + block].set(mm(inv_blocks[k], rhs))
+    x = jnp.zeros_like(b)
+    for k, o in reversed(panels):
+        rhs = y[:, o:o + block]
+        if o + block < d:
+            rhs = rhs - mm(_t(l[:, o + block:, o:o + block]), x[:, o + block:])
+        x = x.at[:, o:o + block].set(mm(_t(inv_blocks[k]), rhs))
+    return x
+
+
+def _ceil_mult(v: int, m: int) -> int:
+    return ((v + m - 1) // m) * m
+
+
+def _pad_spd(a, d_p):
+    """Pad a batch of (d, d) systems to (d_p, d_p) with an identity tail —
+    the padded block factors to I and never couples back (block diagonal)."""
+    d = a.shape[-1]
+    if d_p == d:
+        return a
+    pad = d_p - d
+    a = jnp.pad(a, ((0, 0), (0, pad), (0, pad)))
+    tail = jnp.arange(d_p) >= d
+    eye_tail = jnp.where(tail[:, None] & tail[None, :] &
+                         (jnp.arange(d_p)[:, None] == jnp.arange(d_p)[None, :]),
+                         jnp.ones((d_p, d_p), a.dtype),
+                         jnp.zeros((d_p, d_p), a.dtype))
+    return a + eye_tail[None]
+
+
+# ---------------------------------------------------------------------------
+# pallas_call entry points
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block", "precision", "interpret",
+                                    "batch_block"))
+def blocked_cholesky(a: jax.Array, *, block: int = DEFAULT_BLOCK,
+                     precision: str = "native", interpret: bool = False,
+                     batch_block: int = DEFAULT_BATCH_BLOCK) -> jax.Array:
+    """Batched lower-Cholesky ``a (m, d, d) SPD → L`` via the blocked kernel.
+
+    The grid walks batch blocks; each step factors ``batch_block`` systems
+    together (one trace of the unrolled panel pipeline serves the whole
+    batch). Returns clean lower factors; non-PD inputs yield NaNs.
+    """
+    m, d, _ = a.shape
+    if m == 0:
+        return jnp.zeros((0, d, d), a.dtype)
+    mm = _make_mm(precision)
+    bs = min(block, _ceil_mult(d, 8))
+    d_p = _ceil_mult(d, bs)
+    bb = min(batch_block, m)
+    m_p = _ceil_mult(m, bb)
+    a = _pad_spd(a, d_p)
+    if m_p != m:
+        # pad the batch with identity systems (factor = I, discarded)
+        pad = jnp.broadcast_to(jnp.eye(d_p, dtype=a.dtype)[None],
+                               (m_p - m, d_p, d_p))
+        a = jnp.concatenate([a, pad], 0)
+
+    def kernel(a_ref, l_ref):
+        l, _ = _factor_panels(a_ref[...], bs, mm)
+        l_ref[...] = l
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(m_p // bb,),
+        in_specs=[pl.BlockSpec((bb, d_p, d_p), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((bb, d_p, d_p), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_p, d_p, d_p), a.dtype),
+        interpret=interpret,
+    )(a)
+    return out[:m, :d, :d]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block", "precision", "interpret",
+                                    "batch_block"))
+def cholesky_solve(l: jax.Array, b: jax.Array, *, block: int = DEFAULT_BLOCK,
+                   precision: str = "native", interpret: bool = False,
+                   batch_block: int = DEFAULT_BATCH_BLOCK) -> jax.Array:
+    """Batched triangular solve ``L Lᵀ x = b`` for lower factors from
+    :func:`blocked_cholesky` — ``l (m, d, d)``, ``b (m, d, c)`` → ``x``.
+
+    Blocked forward/backward substitution: the per-panel diagonal blocks are
+    inverted once (``fori`` column sweeps), after which both sweeps are pure
+    tile matmuls — the repeated-solve hot path costs d²·c, not d³.
+    """
+    m, d, _ = l.shape
+    c = b.shape[-1]
+    if m == 0:
+        return jnp.zeros((0, d, c), b.dtype)
+    mm = _make_mm(precision)
+    bs = min(block, _ceil_mult(d, 8))
+    d_p = _ceil_mult(d, bs)
+    c_p = _ceil_mult(c, 8)
+    bb = min(batch_block, m)
+    m_p = _ceil_mult(m, bb)
+    if d_p != d:
+        l = _pad_spd(l, d_p)       # identity tail: triangular and invertible
+    if (d_p, c_p) != (d, c):
+        b = jnp.pad(b, ((0, 0), (0, d_p - d), (0, c_p - c)))
+    if m_p != m:
+        pad_l = jnp.broadcast_to(jnp.eye(d_p, dtype=l.dtype)[None],
+                                 (m_p - m, d_p, d_p))
+        l = jnp.concatenate([l, pad_l], 0)
+        b = jnp.concatenate(
+            [b, jnp.zeros((m_p - m, d_p, c_p), b.dtype)], 0)
+
+    def kernel(l_ref, b_ref, x_ref):
+        x_ref[...] = _solve_panels(l_ref[...], b_ref[...], bs, mm)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(m_p // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, d_p, d_p), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bb, d_p, c_p), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, d_p, c_p), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_p, d_p, c_p), b.dtype),
+        interpret=interpret,
+    )(l, b)
+    return out[:m, :d, :c]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block", "gamma_block", "precision",
+                                    "interpret"))
+def multi_gamma_solve(c: jax.Array, q: jax.Array, gammas: jax.Array, *,
+                      block: int = DEFAULT_BLOCK,
+                      gamma_block: int = DEFAULT_GAMMA_BLOCK,
+                      precision: str = "native",
+                      interpret: bool = False) -> jax.Array:
+    """The fused γ-sweep: solve ``(C + γ_j I) W_j = Q`` for a whole γ grid.
+
+    One ``pallas_call`` whose grid walks γ-blocks: each step broadcasts C
+    once, shifts the diagonal by its block of γs, factors all of them as one
+    batched blocked Cholesky, and runs the batched substitution — replacing
+    the per-γ host loop (allocate ``C + γI`` → LAPACK → dispatch, per γ)
+    with a single device program. Returns ``(n_gammas, d, c)``; γs whose
+    system is singular come back as NaNs (caller falls back to the
+    eigendecomposition path).
+    """
+    d = c.shape[-1]
+    n_cls = q.shape[-1]
+    n_g = gammas.shape[0]
+    if n_g == 0:
+        return jnp.zeros((0, d, n_cls), c.dtype)
+    mm = _make_mm(precision)
+    bs = min(block, _ceil_mult(d, 8))
+    d_p = _ceil_mult(d, bs)
+    c_p = _ceil_mult(n_cls, 8)
+    bg = min(gamma_block, n_g)
+    n_gp = _ceil_mult(n_g, bg)
+    if d_p != d:
+        c = _pad_spd(c[None], d_p)[0]
+    if (d_p, c_p) != (d, n_cls):
+        q = jnp.pad(q, ((0, d_p - d), (0, c_p - n_cls)))
+    if n_gp != n_g:
+        gammas = jnp.concatenate(
+            [gammas, jnp.broadcast_to(gammas[-1], (n_gp - n_g,))])
+    gammas = gammas.astype(c.dtype).reshape(n_gp // bg, bg)
+
+    def kernel(c_ref, q_ref, g_ref, w_ref):
+        cc = c_ref[...]
+        g = g_ref[...][0]                                   # (bg,)
+        diag = jnp.arange(d_p)
+        eye = (diag[:, None] == diag[None, :]).astype(cc.dtype)
+        a = cc[None] + g[:, None, None] * eye[None]
+        l, inv_blocks = _factor_panels(a, bs, mm)
+        qb = jnp.broadcast_to(q_ref[...][None], (bg, d_p, c_p))
+        w_ref[...] = _solve_panels(l, qb, bs, mm,
+                                   inv_blocks=inv_blocks)[None]
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_gp // bg,),
+        in_specs=[
+            pl.BlockSpec((d_p, d_p), lambda i: (0, 0)),
+            pl.BlockSpec((d_p, c_p), lambda i: (0, 0)),
+            pl.BlockSpec((1, bg), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bg, d_p, c_p), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_gp // bg, bg, d_p, c_p), c.dtype),
+        interpret=interpret,
+    )(c, q, gammas)
+    return out.reshape(n_gp, d_p, c_p)[:n_g, :d, :n_cls]

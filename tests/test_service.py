@@ -311,16 +311,16 @@ class TestTransports:
 # ---------------------------------------------------------------------------
 
 
-def _sharded(n_shards=4):
+def _sharded(n_shards=4, **kw):
     """A ShardedCoordinator widened to ``n_shards`` host accumulators.
 
-    Placement (round-robin, occupancy, rebalance) is pure host-side list
-    manipulation — independent of the device mesh — so padding the shard
-    list lets a 1-device CI host exercise multi-shard placement. (The
-    device-mesh solve path is covered by the x64 subprocess test in
-    test_coordinator_conformance.py.)
+    Placement (load-aware/round-robin, occupancy, rebalance) is pure
+    host-side list manipulation — independent of the device mesh — so
+    padding the shard list lets a 1-device CI host exercise multi-shard
+    placement. (The device-mesh solve path is covered by the x64 subprocess
+    test in test_coordinator_conformance.py.)
     """
-    coord = ShardedCoordinator(DIM, C, gamma=GAMMA)
+    coord = ShardedCoordinator(DIM, C, gamma=GAMMA, **kw)
     while len(coord._shards) < n_shards:
         coord._shards.append(coord.engine.init(DIM, C))
     return coord
@@ -340,7 +340,9 @@ class TestShardedPlacementOps:
         assert srv.num_clients == 7
 
     def test_rebalance_moves_fullest_into_emptiest_invariantly(self):
-        coord = _sharded(4)
+        # round-robin placement so the cursor trick below can force a skew
+        # (load-aware placement would route the pile-up away by itself)
+        coord = _sharded(4, placement="round_robin")
         reps = _reports(9)
         # skew placement: everything lands in shard 0
         for r in reps:
@@ -370,3 +372,134 @@ class TestShardedPlacementOps:
         coord.submit_many(_reports(3))                 # one client per shard
         assert coord.rebalance() is None
         assert _sharded(1).rebalance() is None         # nothing to move to
+
+
+class TestLoadAwarePlacement:
+    """`submit` routes to the emptiest shard so rebalance() is rarely
+    needed; ties fall back to the round-robin cursor."""
+
+    def test_uniform_traffic_degenerates_to_round_robin(self):
+        la, rr = _sharded(4), _sharded(4, placement="round_robin")
+        reps = _reports(10)
+        la.submit_many(reps)
+        rr.submit_many(reps)
+        assert la.occupancy() == rr.occupancy()
+
+    def test_skewed_restore_fills_empty_shards_first(self):
+        """After a restore (everything in shard 0), load-aware placement
+        sends new arrivals to the empty shards — no rebalance() needed."""
+        seed_coord = _sharded(4)
+        seed_coord.submit_many(_reports(4))
+        coord = ShardedCoordinator.from_state(seed_coord.state())
+        while len(coord._shards) < 4:
+            coord._shards.append(coord.engine.init(DIM, C))
+        assert coord.occupancy() == [4, 0, 0, 0]
+        coord.submit_many(_reports(3, seed=5, start_id=100))
+        assert coord.occupancy() == [4, 1, 1, 1]
+        assert coord.rebalance() is not None           # still available…
+        # …but the placement itself kept the max-min gap from growing
+
+    def test_aggregate_invariant_vs_round_robin(self):
+        """Placement policy must never change the math: same reports, same
+        aggregate, same solution (to f64 summation-order roundoff — which
+        list slot holds a report differs, so the adds reassociate)."""
+        la, rr = _sharded(4), _sharded(4, placement="round_robin")
+        reps = _reports(9, seed=11)
+        # interleave with a skew so the two policies actually diverge
+        for i, r in enumerate(reps):
+            la.submit(r)
+            rr.submit(r)
+            if i % 3 == 0:
+                la._order = 0
+                rr._order = 0
+        assert la.occupancy() != rr.occupancy()        # policies did diverge
+        sa, sr = la.state(), rr.state()
+        np.testing.assert_allclose(sa["gram"], sr["gram"],
+                                   rtol=1e-12, atol=1e-12)
+        np.testing.assert_allclose(sa["moment"], sr["moment"],
+                                   rtol=1e-12, atol=1e-12)
+        np.testing.assert_array_equal(sa["seen"], sr["seen"])
+
+    def test_unknown_policy_rejected(self):
+        with pytest.raises(ValueError):
+            ShardedCoordinator(DIM, C, gamma=GAMMA, placement="hash")
+
+
+class TestHttpKeepAlive:
+    """`HttpTransport` reuses its connection (PR-4 ROADMAP rung): one TCP
+    handshake per thread, not per request — with a transparent one-retry
+    reconnect when a pooled socket has gone stale."""
+
+    def test_connection_is_reused_and_answers_match_fresh(self):
+        svc = _service()
+        svc.coordinator().submit_many(_reports())
+        with serve_http(svc) as http:
+            reuse = HttpTransport(http.url)
+            fresh = HttpTransport(http.url, keep_alive=False)
+            try:
+                first = reuse.request("describe")
+                conn = reuse._local.conn
+                assert conn is not None                # pooled…
+                for _ in range(4):
+                    assert reuse.request("describe") == first
+                assert reuse._local.conn is conn       # …and actually reused
+                assert len(reuse._pool) == 1
+                # same bytes as the one-shot transport
+                body = pack_message({"target_gamma": 0.25})
+                assert reuse.request("solve", body) == \
+                    fresh.request("solve", body)
+            finally:
+                reuse.close()
+                fresh.close()
+            assert not reuse._pool
+
+    def test_dead_thread_connections_are_swept(self):
+        """Thread churn must not leak sockets: a connection pooled by a
+        thread that has exited is closed on the next pool access."""
+        import threading
+
+        svc = _service()
+        with serve_http(svc) as http:
+            t = HttpTransport(http.url)
+            try:
+                worker = threading.Thread(
+                    target=lambda: t.request("describe"))
+                worker.start()
+                worker.join()
+                assert len(t._pool) == 1           # dead thread's conn…
+                t.request("describe")              # …swept on next access
+                assert list(t._pool) == [threading.current_thread()]
+            finally:
+                t.close()
+
+    def test_stale_pooled_socket_reconnects_transparently(self):
+        svc = _service()
+        with serve_http(svc) as http:
+            t = HttpTransport(http.url)
+            try:
+                t.request("describe")
+                # simulate a server-side idle close of the kept-alive socket
+                t._local.conn.sock.close()
+                header, _, _ = unpack_message(t.request("describe"))
+                assert header["ok"]                    # retried on a fresh conn
+            finally:
+                t.close()
+
+    def test_reuse_vs_fresh_timing_smoke(self):
+        """Assert-free timing smoke: exercise both modes back-to-back so a
+        perf regression shows up in logs without flaking CI."""
+        import time
+
+        svc = _service()
+        svc.coordinator().submit_many(_reports(2))
+        with serve_http(svc) as http:
+            for label, transport in [
+                    ("keep-alive", HttpTransport(http.url)),
+                    ("fresh-conn", HttpTransport(http.url,
+                                                 keep_alive=False))]:
+                t0 = time.perf_counter()
+                for _ in range(20):
+                    transport.request("describe")
+                dt = time.perf_counter() - t0
+                transport.close()
+                print(f"{label}: 20 describes in {1e3 * dt:.1f}ms")

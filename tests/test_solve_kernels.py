@@ -1,0 +1,481 @@
+"""Parity suite for the Pallas solve kernels + the paths that consume them.
+
+The acceptance bar for the fused solve path: the blocked Cholesky, the
+batched triangular solve, and the fused multi-γ sweep agree with the
+``numpy_f64`` oracle — at f32 tolerances in-process (interpret-mode Pallas on
+CPU, so tier-1 exercises the kernels without a TPU) and at **1e-10 under
+``jax_enable_x64``** in a subprocess (x64 is process-global), including the
+rank-deficient γ=0 ablation (kernel NaNs → eigendecomposition/pinv fallback)
+and masked-cohort statistics. Also here: the rank-updated eigendecomposition
+sweep handle (Woodbury ≡ fresh eigh; AFLServer cache lifecycle) and the
+tiled-Gram ShardedCoordinator (row tiles ≡ whole-leaf sharding ≡ sync).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.engine import (AnalyticEngine, SweepRefreshNeeded)
+from repro.fl import AFLServer, ShardedCoordinator, make_report, masked_reports
+from repro.kernels import ops
+
+
+def _spd(d, n_mult=4, seed=0, batch=None):
+    rng = np.random.default_rng(seed)
+    mats = []
+    for i in range(batch or 1):
+        x = rng.standard_normal((n_mult * d, d))
+        mats.append(x.T @ x + (0.5 + i) * np.eye(d))
+    return np.stack(mats) if batch else mats[0]
+
+
+class TestKernelParityF32:
+    """Interpret-mode kernels vs numpy at f32 tolerances (CPU tier-1)."""
+
+    @pytest.mark.parametrize("d,batch", [(32, 1), (48, 3), (130, 2)])
+    def test_blocked_cholesky(self, d, batch):
+        a = _spd(d, batch=batch)
+        l = np.asarray(ops.blocked_cholesky(jnp.asarray(a, jnp.float32)))
+        ref = np.stack([np.linalg.cholesky(a[i]) for i in range(batch)])
+        np.testing.assert_allclose(l, ref, rtol=5e-5,
+                                   atol=5e-5 * np.abs(ref).max())
+        # clean lower factors: the strict upper triangle is exactly zero
+        assert np.array_equal(np.triu(l, 1), np.zeros_like(l))
+
+    @pytest.mark.parametrize("d,c,batch", [(48, 7, 3), (96, 5, 1)])
+    def test_cholesky_solve(self, d, c, batch):
+        rng = np.random.default_rng(1)
+        a = _spd(d, batch=batch, seed=2)
+        b = rng.standard_normal((batch, d, c))
+        l = ops.blocked_cholesky(jnp.asarray(a, jnp.float32))
+        x = np.asarray(ops.cholesky_solve(l, jnp.asarray(b, jnp.float32)))
+        ref = np.stack([np.linalg.solve(a[i], b[i]) for i in range(batch)])
+        np.testing.assert_allclose(x, ref, rtol=2e-4,
+                                   atol=2e-4 * np.abs(ref).max())
+
+    @pytest.mark.parametrize("n_gammas", [1, 3, 11])
+    def test_multi_gamma_solve(self, n_gammas):
+        d, c = 64, 6
+        rng = np.random.default_rng(3)
+        a = _spd(d, seed=3)
+        q = rng.standard_normal((d, c))
+        gammas = np.logspace(-2, 1, n_gammas)
+        w = np.asarray(ops.multi_gamma_solve(
+            jnp.asarray(a, jnp.float32), jnp.asarray(q, jnp.float32),
+            jnp.asarray(gammas, jnp.float32)))
+        assert w.shape == (n_gammas, d, c)
+        for i, g in enumerate(gammas):
+            ref = np.linalg.solve(a + g * np.eye(d), q)
+            np.testing.assert_allclose(w[i], ref, rtol=2e-3,
+                                       atol=2e-4 * np.abs(ref).max())
+
+    def test_singular_system_yields_nans_not_garbage(self):
+        """γ=0 on a rank-deficient Gram must be *loud* (NaNs trip the
+        engine's eigendecomposition fallback), never silently wrong."""
+        rng = np.random.default_rng(4)
+        d = 32
+        x = rng.standard_normal((5, d))                # rank 5 < d
+        w = np.asarray(ops.multi_gamma_solve(
+            jnp.asarray(x.T @ x, jnp.float32),
+            jnp.asarray(rng.standard_normal((d, 3)), jnp.float32),
+            jnp.asarray([0.0, 1.0], jnp.float32)))
+        assert not np.isfinite(w[0]).all()             # singular γ
+        assert np.isfinite(w[1]).all()                 # PD γ unaffected
+
+    def test_f32_x2_precision_variant_stays_within_f32(self):
+        """The emulated-f64 product split guards MXUs that run f32 matmuls
+        as bf16 passes; on exact-f32 hardware (CPU interpret) it must be
+        ~neutral — same answer, no worse than plain f32."""
+        d, c = 96, 5
+        rng = np.random.default_rng(5)
+        a = _spd(d, n_mult=8, seed=5)
+        q = rng.standard_normal((d, c))
+        ref = np.linalg.solve(a + 0.5 * np.eye(d), q)
+        errs = {}
+        for prec in ("native", "f32_x2"):
+            w = np.asarray(ops.multi_gamma_solve(
+                jnp.asarray(a, jnp.float32), jnp.asarray(q, jnp.float32),
+                jnp.asarray([0.5], jnp.float32), precision=prec))
+            errs[prec] = np.abs(w[0] - ref).max() / np.abs(ref).max()
+        assert errs["f32_x2"] <= 4 * errs["native"] + 1e-9
+        assert errs["f32_x2"] < 1e-4
+
+
+class TestEngineKernelPath:
+    """AnalyticEngine('jax', use_kernel=True): solve / factor_solve /
+    solve_multi_gamma all route through the new kernels."""
+
+    @staticmethod
+    def _engines():
+        return (AnalyticEngine("jax", gamma=1.0, use_kernel=True),
+                AnalyticEngine("numpy_f64", gamma=1.0))
+
+    def test_solve_and_factor_solve_match_oracle(self):
+        ek, eh = self._engines()
+        rng = np.random.default_rng(6)
+        d, c = 40, 5
+        x = rng.standard_normal((300, d))
+        y = np.eye(c)[rng.integers(0, c, 300)]
+        sk = ek.client_stats(jnp.asarray(x, jnp.float32),
+                             jnp.asarray(y, jnp.float32))
+        sh = eh.client_stats(x, y)
+        w_ref = eh.solve(sh, target_gamma=0.1)
+        np.testing.assert_allclose(
+            np.asarray(ek.solve(sk, target_gamma=0.1)), w_ref, atol=3e-3)
+        f = ek.factor(sk, target_gamma=0.1)
+        np.testing.assert_allclose(
+            np.asarray(ek.factor_solve(f, sk.moment)), w_ref, atol=3e-3)
+
+    def test_factor_update_composes_with_kernel_factor(self):
+        """rank_update on a kernel-produced handle keeps tracking the
+        refactor (the async-serving seam with use_kernel on)."""
+        ek, eh = self._engines()
+        rng = np.random.default_rng(7)
+        d, c = 32, 4
+        x = rng.standard_normal((200, d))
+        y = np.eye(c)[rng.integers(0, c, 200)]
+        sk = ek.client_stats(jnp.asarray(x, jnp.float32),
+                             jnp.asarray(y, jnp.float32))
+        f = ek.factor(sk, target_gamma=0.1)
+        xk = rng.standard_normal((4, d)).astype(np.float32)
+        yk = np.eye(c)[rng.integers(0, c, 4)].astype(np.float32)
+        s1 = ek.merge(sk, ek.client_stats(jnp.asarray(xk), jnp.asarray(yk)))
+        f1 = ek.factor_update(f, s1, xk, target_gamma=0.1, max_rank=8)
+        f_ref = ek.factor(s1, target_gamma=0.1)
+        np.testing.assert_allclose(
+            np.asarray(ek.factor_solve(f1, s1.moment)),
+            np.asarray(ek.factor_solve(f_ref, s1.moment)), atol=3e-3)
+
+    def test_multi_gamma_fused_matches_oracle(self):
+        ek, eh = self._engines()
+        rng = np.random.default_rng(8)
+        d, c = 48, 5
+        x = rng.standard_normal((400, d))
+        y = np.eye(c)[rng.integers(0, c, 400)]
+        sk = ek.client_stats(jnp.asarray(x, jnp.float32),
+                             jnp.asarray(y, jnp.float32))
+        sh = eh.client_stats(x, y)
+        gammas = [0.01, 0.1, 1.0, 10.0]
+        ws = ek.solve_multi_gamma(sk, gammas)
+        ws_ref = eh.solve_multi_gamma(sh, gammas)
+        for w, w_ref in zip(ws, ws_ref):
+            np.testing.assert_allclose(np.asarray(w, np.float64), w_ref,
+                                       rtol=2e-2,
+                                       atol=2e-3 * np.abs(w_ref).max())
+
+    def test_rank_deficient_gamma_zero_falls_back_to_eigh_path(self):
+        """A singular γ in the grid reroutes the WHOLE sweep to the
+        eigendecomposition path — the kernel engine must answer exactly
+        what the non-kernel jax backend answers (the f64/pinv parity claim
+        lives in the x64 subprocess, where the spectrum is clean)."""
+        ek, _ = self._engines()
+        ej = AnalyticEngine("jax", gamma=1.0)
+        rng = np.random.default_rng(9)
+        d, c = 24, 3
+        x = rng.standard_normal((6, d))                # N < d: singular γ=0
+        y = np.eye(c)[rng.integers(0, c, 6)]
+        sj = ej.client_stats(jnp.asarray(x, jnp.float32),
+                             jnp.asarray(y, jnp.float32))
+        # identical stats into both engines: the fallback then runs the
+        # same eigendecomposition on the same matrix
+        ws = ek.solve_multi_gamma(sj, [0.0, 1.0])
+        ws_ref = ej.solve_multi_gamma(sj, [0.0, 1.0])
+        assert all(np.isfinite(np.asarray(w)).all() for w in ws)
+        for w, w_ref in zip(ws, ws_ref):
+            np.testing.assert_array_equal(np.asarray(w), np.asarray(w_ref))
+
+
+class TestSweepHandle:
+    """The rank-updated eigendecomposition handle behind repeated sweeps."""
+
+    def test_woodbury_updates_equal_fresh_eigh(self):
+        eng = AnalyticEngine("numpy_f64", gamma=1.0)
+        rng = np.random.default_rng(10)
+        d, c = 36, 4
+        stats = eng.client_stats(rng.standard_normal((250, d)),
+                                 np.eye(c)[rng.integers(0, c, 250)])
+        handle = eng.sweep_factor(stats)
+        gammas = [0.01, 0.1, 1.0]
+        for _ in range(4):
+            xk = rng.standard_normal((3, d))
+            yk = np.eye(c)[rng.integers(0, c, 3)]
+            stats = eng.merge(stats, eng.client_stats(xk, yk))
+            handle = handle.rank_update(xk)
+        ws = eng.sweep_solve(handle, stats.moment, gammas)
+        ws_ref = eng.solve_multi_gamma(stats, gammas)
+        for w, w_ref in zip(ws, ws_ref):
+            np.testing.assert_allclose(w, w_ref, rtol=1e-9, atol=1e-11)
+
+    def test_rank_zero_is_bit_identical_to_direct_sweep(self):
+        eng = AnalyticEngine("numpy_f64", gamma=1.0)
+        rng = np.random.default_rng(11)
+        d, c = 20, 3
+        stats = eng.client_stats(rng.standard_normal((100, d)),
+                                 np.eye(c)[rng.integers(0, c, 100)])
+        handle = eng.sweep_factor(stats)
+        for w, w_ref in zip(
+                eng.sweep_solve(handle, stats.moment, [0.0, 0.5]),
+                eng.solve_multi_gamma(stats, [0.0, 0.5])):
+            np.testing.assert_array_equal(w, w_ref)
+
+    def test_truncated_spectrum_with_updates_demands_refresh(self):
+        """pinv truncation + pending updates cannot be answered exactly by
+        Woodbury — the handle must refuse rather than drift."""
+        eng = AnalyticEngine("numpy_f64", gamma=1.0)
+        rng = np.random.default_rng(12)
+        d, c = 16, 3
+        x = rng.standard_normal((5, d))                # rank-deficient base
+        stats = eng.client_stats(x, np.eye(c)[rng.integers(0, c, 5)])
+        handle = eng.sweep_factor(stats).rank_update(
+            rng.standard_normal((2, d)))
+        with pytest.raises(SweepRefreshNeeded):
+            eng.sweep_solve(handle, stats.moment, [0.0])
+
+    def test_server_cache_lifecycle_and_results(self):
+        rng = np.random.default_rng(13)
+        DIM, C = 16, 4
+        reps = [make_report(k, rng.standard_normal((5, DIM)),
+                            np.eye(C)[rng.integers(0, C, 5)], 1.0)
+                for k in range(8)]
+        srv = AFLServer(DIM, C, gamma=1.0, sweep_rank_budget=64)
+        srv.submit_many(reps[:5])
+        gammas = [0.0, 0.1, 1.0]
+        srv.solve_multi_gamma(gammas)
+        assert srv._sweep_cache is not None and srv._sweep_cache.rank == 0
+        srv.submit(reps[5])                            # low-rank root arrival
+        assert srv._sweep_cache is not None and srv._sweep_cache.rank == 5
+        ws = srv.solve_multi_gamma(gammas)
+        fresh = AFLServer(DIM, C, gamma=1.0)
+        fresh.submit_many(reps[:6])
+        for w, w_ref in zip(ws, fresh.solve_multi_gamma(gammas)):
+            np.testing.assert_allclose(w, w_ref, rtol=1e-9, atol=1e-11)
+        # a rootless (masked) arrival kills the handle…
+        srv.submit(masked_reports(reps[6:8], seed=3)[0])
+        assert srv._sweep_cache is None
+        # …and the rank budget caps accumulation
+        tight = AFLServer(DIM, C, gamma=1.0, sweep_rank_budget=4)
+        tight.submit_many(reps[:4])
+        tight.solve_multi_gamma(gammas)
+        tight.submit(reps[4])                          # 5 rows > budget 4
+        assert tight._sweep_cache is None
+
+    def test_masked_cohort_sweep_still_matches(self):
+        """Masked uploads (no roots) force fresh handles every time — the
+        sweep answers must still match the unmasked federation."""
+        rng = np.random.default_rng(14)
+        DIM, C = 12, 3
+        reps = [make_report(k, rng.standard_normal((20, DIM)),
+                            np.eye(C)[rng.integers(0, C, 20)], 1.0)
+                for k in range(4)]
+        plain, masked = AFLServer(DIM, C, 1.0), AFLServer(DIM, C, 1.0)
+        plain.submit_many(reps)
+        masked.submit_many(masked_reports(reps, seed=5))
+        for w, w_ref in zip(masked.solve_multi_gamma([0.0, 1.0]),
+                            plain.solve_multi_gamma([0.0, 1.0])):
+            np.testing.assert_allclose(w, w_ref, rtol=1e-6, atol=1e-7)
+
+
+class TestTiledGramCoordinator:
+    """Host-side tiled-Gram semantics (the 8-way device path runs in the
+    x64 subprocess below)."""
+
+    def _reports(self, n=6, dim=16, c=4, seed=0):
+        rng = np.random.default_rng(seed)
+        return [make_report(k, rng.standard_normal((5, dim)),
+                            np.eye(c)[rng.integers(0, c, 5)], 1.0)
+                for k in range(n)]
+
+    def test_tiles_assemble_to_the_sync_aggregate(self):
+        reps = self._reports()
+        tiled = ShardedCoordinator(16, 4, gamma=1.0, tiled_gram=True)
+        sync = AFLServer(16, 4, gamma=1.0)
+        tiled.submit_many(reps)
+        sync.submit_many(reps)
+        st, ss = tiled.state(), sync.state()
+        np.testing.assert_allclose(st["gram"], ss["gram"],
+                                   rtol=1e-12, atol=1e-12)
+        np.testing.assert_allclose(st["moment"], ss["moment"],
+                                   rtol=1e-12, atol=1e-12)
+        assert float(st["count"]) == float(ss["count"])
+        np.testing.assert_allclose(tiled.solve(0.5), sync.solve(0.5),
+                                   rtol=1e-3, atol=2e-3)
+        for w, w_ref in zip(tiled.solve_multi_gamma([0.1, 1.0]),
+                            sync.solve_multi_gamma([0.1, 1.0])):
+            np.testing.assert_allclose(w, w_ref, rtol=1e-9, atol=1e-12)
+
+    def test_state_roundtrip_and_cross_kind(self):
+        reps = self._reports(seed=1)
+        tiled = ShardedCoordinator(16, 4, gamma=1.0, tiled_gram=True)
+        tiled.submit_many(reps[:4])
+        state = tiled.state()
+        back = ShardedCoordinator.from_state(state, tiled_gram=True)
+        assert back.num_clients == 4
+        back.submit_many(reps[4:])
+        ref = AFLServer.from_state(state)
+        ref.submit_many(reps[4:])
+        np.testing.assert_allclose(back.solve(0.2), ref.solve(0.2),
+                                   rtol=1e-3, atol=2e-3)
+
+    def test_rebalance_is_noop_and_occupancy_reports_rows(self):
+        tiled = ShardedCoordinator(16, 4, gamma=1.0, tiled_gram=True)
+        tiled.submit_many(self._reports(3, seed=2))
+        assert tiled.rebalance() is None
+        assert tiled.occupancy() == [16]               # 1 shard → whole d
+
+    def test_indivisible_dim_rejected(self):
+        """dim % shards != 0 must fail loudly at construction (tile shapes
+        would silently drop rows otherwise). A duck-typed mesh stands in
+        for a 4-device one — the device program is only built at solve."""
+
+        class FakeMesh:
+            axis_names = ("data",)
+            shape = {"data": 4}
+
+        with pytest.raises(ValueError):
+            ShardedCoordinator(18, 4, gamma=1.0, tiled_gram=True,
+                               mesh=FakeMesh())
+        coord = ShardedCoordinator(16, 4, gamma=1.0, tiled_gram=True,
+                                   mesh=FakeMesh())
+        assert coord.num_shards == 4
+        assert coord.occupancy() == [4, 4, 4, 4]       # 16 rows over 4 tiles
+
+
+# ---------------------------------------------------------------------------
+# x64 subprocess: the 1e-10 bit-parity bar + the d%8==0 tiled device solve
+# ---------------------------------------------------------------------------
+
+_X64_KERNEL_PARITY = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ["JAX_ENABLE_X64"] = "1"
+    import numpy as np
+    import jax.numpy as jnp
+    from scipy.linalg import solve_triangular
+    from repro.core.engine import AnalyticEngine
+    from repro.fl import AFLServer, ShardedCoordinator, make_report, \\
+        masked_reports
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    TOL = 1e-10
+
+    def rel(a, b):
+        return np.abs(np.asarray(a, np.float64) - b).max() / \\
+            max(np.abs(b).max(), 1.0)
+
+    # 1) blocked Cholesky vs numpy_f64, batched, padded shapes
+    for d, batch in [(64, 2), (150, 3)]:
+        mats = []
+        for i in range(batch):
+            x = rng.standard_normal((4 * d, d))
+            mats.append(x.T @ x + (0.5 + i) * np.eye(d))
+        a = np.stack(mats)
+        l = ops.blocked_cholesky(jnp.asarray(a))
+        ref = np.stack([np.linalg.cholesky(a[i]) for i in range(batch)])
+        assert rel(l, ref) < TOL, ("cholesky", d, rel(l, ref))
+        # 2) batched triangular solve vs scipy
+        b = rng.standard_normal((batch, d, 7))
+        xk = ops.cholesky_solve(l, jnp.asarray(b))
+        refx = np.stack([
+            solve_triangular(ref[i], solve_triangular(
+                ref[i], b[i], lower=True), lower=True, trans="T")
+            for i in range(batch)])
+        assert rel(xk, refx) < TOL, ("cho_solve", d, rel(xk, refx))
+
+    # 3) fused multi-gamma sweep vs the numpy_f64 oracle engine,
+    #    including rank-deficient gamma=0 (kernel NaN -> eigh fallback)
+    #    and masked-cohort statistics
+    from repro.core.engine import SuffStats
+    eng_k = AnalyticEngine("jax", gamma=1.0, use_kernel=True,
+                           dtype=jnp.float64)
+    eng_h = AnalyticEngine("numpy_f64", gamma=1.0)
+    d, c = 72, 5
+    gammas = [0.0, 0.01, 0.1, 1.0, 10.0]
+
+    def to_dev(stats):
+        # identical f64 statistics into both engines: the 1e-10 bar is on
+        # the SOLVE kernels, not the (f32-accumulating) gram kernel
+        return SuffStats(jnp.asarray(stats.gram), jnp.asarray(stats.moment),
+                         jnp.asarray(stats.count),
+                         jnp.asarray(stats.clients))
+
+    x = rng.standard_normal((6 * d, d))
+    y = np.eye(c)[rng.integers(0, c, 6 * d)]
+    sh = eng_h.client_stats(x, y)
+    sk = to_dev(sh)
+    for w, w_ref in zip(eng_k.solve_multi_gamma(sk, gammas),
+                        eng_h.solve_multi_gamma(sh, gammas)):
+        assert rel(w, w_ref) < TOL, ("sweep", rel(w, w_ref))
+    # direct solve + cached-factor path
+    assert rel(eng_k.solve(sk, target_gamma=0.5),
+               eng_h.solve(sh, target_gamma=0.5)) < TOL
+    f = eng_k.factor(sk, target_gamma=0.5)
+    assert rel(eng_k.factor_solve(f, sk.moment),
+               eng_h.solve(sh, target_gamma=0.5)) < TOL
+
+    # rank-deficient gamma=0: N < d
+    xs = rng.standard_normal((10, d))
+    ys = np.eye(c)[rng.integers(0, c, 10)]
+    sh0 = eng_h.client_stats(xs, ys)
+    sk0 = to_dev(sh0)
+    for w, w_ref in zip(eng_k.solve_multi_gamma(sk0, gammas),
+                        eng_h.solve_multi_gamma(sh0, gammas)):
+        assert np.isfinite(np.asarray(w)).all()
+        assert rel(w, w_ref) < TOL, ("rankdef", rel(w, w_ref))
+
+    # masked-cohort statistics through an AFLServer (the serving sweep)
+    DIM, C = 24, 4
+    reps = [make_report(k, rng.standard_normal((8, DIM)),
+                        np.eye(C)[rng.integers(0, C, 8)], 1.0)
+            for k in range(6)]
+    plain, masked = AFLServer(DIM, C, 1.0), AFLServer(DIM, C, 1.0)
+    plain.submit_many(reps)
+    masked.submit_many(masked_reports(reps, seed=9))
+    for w, w_ref in zip(masked.solve_multi_gamma([0.0, 1.0]),
+                        plain.solve_multi_gamma([0.0, 1.0])):
+        assert rel(w, w_ref) < 1e-8
+
+    # 4) tiled-Gram ShardedCoordinator on the 8-way mesh vs the sync path
+    d8, c8 = 64, 5           # d % 8 == 0
+    reps8 = [make_report(k, rng.standard_normal((16, d8)),
+                         np.eye(c8)[rng.integers(0, c8, 16)], 1.0)
+             for k in range(24)]
+    tiled = ShardedCoordinator(d8, c8, gamma=1.0, tiled_gram=True)
+    assert tiled.num_shards == 8
+    assert all(t.shape == (8, d8) for t in tiled._gram_tiles)
+    sync = AFLServer(d8, c8, gamma=1.0)
+    for r in reps8:
+        tiled.submit(r)
+        sync.submit(r)
+    for tg in (0.0, 0.5):
+        err = np.abs(tiled.solve(tg) - sync.solve(tg)).max()
+        assert err < 1e-6, ("tiled-vs-sync", tg, err)
+    # whole-leaf sharded path agrees too (tile psum == leaf psum)
+    leaf = ShardedCoordinator(d8, c8, gamma=1.0)
+    leaf.submit_many(reps8)
+    assert np.abs(tiled.solve(0.0) - leaf.solve(0.0)).max() < 1e-6
+    print("OK")
+    """
+)
+
+
+def test_x64_kernel_parity_and_tiled_sharding():
+    """1e-10 kernel parity under x64 (interpret-mode Pallas) + the tiled
+    8-way device solve ≤1e-6 vs sync — in a subprocess so the process-global
+    x64 flag cannot leak into the rest of tier-1."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    res = subprocess.run(
+        [sys.executable, "-c", _X64_KERNEL_PARITY], capture_output=True,
+        text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert res.returncode == 0, res.stderr
+    assert "OK" in res.stdout
