@@ -1,0 +1,76 @@
+"""Environment truth for recorded benchmark numbers (SNIPPETS.md).
+
+A benchmark number is only comparable run-over-run if the process
+environment that produced it is pinned. This module bakes the flag set the
+reference JAX-on-CPU setups use:
+
+  * ``JAX_ENABLE_X64=1`` + ``JAX_DEFAULT_DTYPE_BITS=32`` — the double
+    config: f64 is *allowed* (host-f64 statistics stay f64 on device, the
+    1e-10 parity configuration) but nothing is *forced* to it (python
+    scalars / fresh arrays still default to 32-bit).
+  * ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` — a fixed fake
+    device count so mesh-shaped benches see the same topology everywhere
+    (subprocess benches that need a specific count still override their own
+    environment before importing jax).
+  * ``--xla_step_marker_location=STEP_MARK_AT_TOP_LEVEL_WHILE_LOOP`` —
+    step markers at the outer while loop, so profiles/cost analyses cut at
+    the same boundary (the reference setups spell this ``=1``, the TPU
+    runtime's numeric form; CPU jaxlib only parses the enum name).
+  * ``TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD`` — silence the large-alloc
+    warnings that would interleave with the printed tables. The tcmalloc
+    ``LD_PRELOAD`` itself cannot be applied after process start — shell
+    entry points (``tools/check.sh``) export it; here it is only recorded.
+
+``apply()`` must run before the first ``import jax`` anywhere in the
+process (env vars are read at import). Existing values are respected (a
+caller that exports its own flags is presumed to mean them) and the
+*effective* set is returned so the run can be recorded next to its numbers
+in ``results/bench/BENCH_solve.json`` — that record is what makes an entry
+auditable when a later run disagrees with it.
+"""
+
+from __future__ import annotations
+
+import os
+import platform
+from typing import Dict
+
+DEVICE_COUNT = 8        # the mesh width every sharded bench/test assumes
+
+_ENV_TRUTH = {
+    "JAX_ENABLE_X64": "1",
+    "JAX_DEFAULT_DTYPE_BITS": "32",
+    "TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD": "60000000000",
+}
+
+_XLA_FLAGS = (
+    f"--xla_force_host_platform_device_count={DEVICE_COUNT}",
+    "--xla_step_marker_location=STEP_MARK_AT_TOP_LEVEL_WHILE_LOOP",
+)
+
+
+def apply(device_count: int | None = None) -> Dict[str, str]:
+    """Set the env-truth flags (respecting existing values) and return the
+    effective set. Call before the first jax import."""
+    for key, val in _ENV_TRUTH.items():
+        os.environ.setdefault(key, val)
+    flags = list(_XLA_FLAGS)
+    if device_count is not None:
+        flags[0] = f"--xla_force_host_platform_device_count={device_count}"
+    existing = os.environ.get("XLA_FLAGS", "")
+    missing = [f for f in flags
+               if f.split("=")[0] not in existing]
+    if missing:
+        os.environ["XLA_FLAGS"] = " ".join(
+            ([existing] if existing else []) + missing)
+    return snapshot()
+
+
+def snapshot() -> Dict[str, str]:
+    """The effective env-truth set of THIS process, for the bench record."""
+    out = {k: os.environ.get(k, "") for k in _ENV_TRUTH}
+    out["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "")
+    out["LD_PRELOAD"] = os.environ.get("LD_PRELOAD", "")
+    out["platform"] = platform.platform()
+    out["cpu_count"] = str(os.cpu_count())
+    return out

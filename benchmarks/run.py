@@ -49,13 +49,39 @@ def _git_sha() -> str:
         return "unknown"
 
 
+def _bench_metrics(name: str, rows) -> dict:
+    """Flatten a module's result rows into gate-comparable wall metrics:
+    every ``*_s`` field of every row that self-identifies with a ``bench``
+    key, keyed ``module.bench[.d]`` (min wins on collisions — repeated
+    cases of one bench compare at their best)."""
+    metrics: dict = {}
+    if not isinstance(rows, list):
+        return metrics
+    for row in rows:
+        if not (isinstance(row, dict) and "bench" in row):
+            continue
+        key = f"{name}.{row['bench']}"
+        if "d" in row:
+            key += f".d{row['d']}"
+        for field, val in row.items():
+            if field.endswith("_s") and isinstance(val, (int, float)):
+                mkey = f"{key}.{field}"
+                metrics[mkey] = min(metrics.get(mkey, float("inf")),
+                                    round(float(val), 4))
+    return metrics
+
+
 def record_trajectory(outdir: pathlib.Path, suite: str,
-                      module_seconds: dict, failures: list) -> None:
+                      module_seconds: dict, failures: list,
+                      metrics: dict | None = None,
+                      env: dict | None = None) -> None:
     """Append this run to the BENCH_solve.json perf trajectory.
 
     Keyed by (git sha, suite): re-running the same commit replaces its
     entry, so the file stays one line of history per measured state instead
-    of growing with every retry.
+    of growing with every retry. Each entry carries the env-truth flag set
+    and machine fingerprint that produced it (``benchmarks/env_truth.py``)
+    plus the per-bench wall metrics ``tools/bench_gate.py`` compares.
     """
     path = outdir / "BENCH_solve.json"
     try:
@@ -70,7 +96,9 @@ def record_trajectory(outdir: pathlib.Path, suite: str,
         "sha": sha,
         "suite": suite,
         "recorded_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "env": env or {},
         "modules": {k: round(v, 3) for k, v in module_seconds.items()},
+        "metrics": metrics or {},
         "failures": sorted(failures),
     })
     path.write_text(json.dumps(trajectory, indent=1))
@@ -84,11 +112,17 @@ def main() -> None:
                     help="comma-separated module names")
     args = ap.parse_args()
 
+    # env truth BEFORE any bench module (and therefore jax) is imported:
+    # recorded numbers are only comparable under a pinned flag set
+    from benchmarks import env_truth
+    env = env_truth.apply()
+
     outdir = pathlib.Path("results/bench")
     outdir.mkdir(parents=True, exist_ok=True)
     only = {m for m in args.only.split(",") if m}
     failures = []
     module_seconds = {}
+    metrics = {}
     t_start = time.perf_counter()
     for name, desc in MODULES:
         if only and name not in only:
@@ -100,13 +134,15 @@ def main() -> None:
             rows = mod.run(quick=args.quick)
             (outdir / f"{name}.json").write_text(json.dumps(rows, indent=1))
             module_seconds[name] = time.perf_counter() - t0
+            metrics.update(_bench_metrics(name, rows))
             print(f"[{name}: {module_seconds[name]:.1f}s]")
         except Exception:
             failures.append(name)
             traceback.print_exc()
     suite = ("quick" if args.quick else "full") + (
         f":{','.join(sorted(only))}" if only else "")
-    record_trajectory(outdir, suite, module_seconds, failures)
+    record_trajectory(outdir, suite, module_seconds, failures,
+                      metrics=metrics, env=env)
     print(f"\ntotal: {time.perf_counter()-t_start:.1f}s")
     if failures:
         raise SystemExit(f"benchmark failures: {failures}")

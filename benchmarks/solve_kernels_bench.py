@@ -17,10 +17,20 @@ The headline numbers behind ISSUE 5's acceptance bar, recorded in
     d=6144 head on an 8-way (host-platform) mesh under x64, with per-shard
     parity vs the sync host path and resident-memory accounting. Runs in a
     subprocess because both x64 and the device count are process-global.
+  * ``distributed_factor`` — ISSUE 6's tile-parallel distributed Cholesky
+    vs gather-then-factor on an 8-way mesh at d∈{2048, 4096, 6144, 8192}
+    (x64 subprocess per d). Records wall time, the peak per-device
+    transient from the jaxpr (``peak_aval_bytes``) and the 1e-10 parity
+    bar. The gather baseline only runs where its (d, d) per-device
+    transient fits ``DEVICE_TRANSIENT_BUDGET`` (256 MiB) — at d=6144
+    (302 MiB) and d=8192 (512 MiB) it is recorded as infeasible, which is
+    the point: the distributed factor tops out at the (d/8, d) row tile
+    and keeps going.
 
 ``--smoke`` shrinks every case (CI scale); ``python -m benchmarks.run``
 registers this module and folds its wall times into the
-``results/bench/BENCH_solve.json`` trajectory.
+``results/bench/BENCH_solve.json`` trajectory (gated run-over-run by
+``tools/bench_gate.py``).
 """
 
 from __future__ import annotations
@@ -179,6 +189,122 @@ def bench_sweep_handle(d, c, n_gammas, ranks, repeat=3):
 
 
 _TILED_SUBPROC_FLAG = "--tiled-subprocess"
+_DIST_SUBPROC_FLAG = "--dist-subprocess"
+
+# Per-device transient budget for the gather-then-factor baseline: a shard
+# whose solve transiently materializes the full (d, d) f64 system must fit
+# it next to the resident tile, the model weights, and XLA's workspace.
+# 256 MiB is the d≈5792 line — d=6144 (302 MiB) and d=8192 (512 MiB) are
+# where gather-then-factor stops being runnable per device and only the
+# tile-parallel factor (peak d²/shards) proceeds.
+DEVICE_TRANSIENT_BUDGET = 256 * 2**20
+
+
+def _dist_subprocess_main(d: int, run_baseline: bool) -> None:
+    """x64 / 8-device child: tile-parallel distributed factor vs the
+    gather-then-factor baseline at dimension d, with static peak-transient
+    accounting (the no-(d,d)-anywhere acceptance invariant)."""
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ["JAX_ENABLE_X64"] = "1"
+    os.environ["JAX_DEFAULT_DTYPE_BITS"] = "32"
+    import numpy as np
+
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh
+
+    from repro.core.distributed import make_tiled_federated_solve
+    from repro.launch.hlo_analysis import peak_aval_bytes
+
+    n, c = 8, 16
+    r = d // n
+    rng = np.random.default_rng(0)
+    # full-rank SPD aggregate built tile-by-tile (diagonal + rank-32), so
+    # the STAGE never allocates a (d, d) either — only the host parity
+    # reference below does, and only because numpy is the oracle
+    u = rng.standard_normal((d, 32))
+    diag = 1.0 + rng.random(d) * d
+    q = rng.standard_normal((d, c))
+    tiles = []
+    for i in range(n):
+        t = u[i * r:(i + 1) * r] @ u.T
+        t[np.arange(r), i * r + np.arange(r)] += diag[i * r:(i + 1) * r]
+        tiles.append(t)
+    gt = jnp.asarray(np.stack(tiles))
+    mt = jnp.asarray(np.stack([q[i * r:(i + 1) * r] for i in range(n)]))
+    mesh = Mesh(np.array(jax.devices()), ("data",))
+
+    fn_dist = make_tiled_federated_solve(
+        mesh, target_gamma=0.5, distributed_factor=True, dim=d)
+    peak_dist, peak_dist_shape = peak_aval_bytes(fn_dist, gt, mt)
+    full_bytes = d * d * 8
+    # the acceptance invariant, asserted where the numbers are recorded
+    assert peak_dist < full_bytes, (
+        f"distributed factor materialized a full-system transient: "
+        f"{peak_dist_shape}")
+    assert peak_dist <= r * d * 8, peak_dist_shape
+
+    t0 = time.perf_counter()
+    w_dist = np.asarray(fn_dist(gt, mt))
+    t_first = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    w_dist = np.asarray(fn_dist(gt, mt))
+    t_dist = time.perf_counter() - t0
+
+    g_full = np.concatenate(tiles, 0)
+    g_full[np.arange(d), np.arange(d)] += 0.5
+    ref = np.linalg.solve(g_full, q)
+    err = float(np.abs(w_dist - ref).max() / np.abs(ref).max())
+
+    row = dict(
+        bench="distributed_factor", d=d, shards=n,
+        dist_first_s=t_first, dist_s=t_dist,
+        peak_transient_bytes_dist=int(peak_dist),
+        peak_transient_shape_dist=peak_dist_shape,
+        tile_resident_bytes=int(r * d * 8),
+        full_system_bytes=int(full_bytes),
+        budget_bytes=int(DEVICE_TRANSIENT_BUDGET),
+        baseline_feasible=bool(run_baseline),
+        rel_err_vs_numpy_f64=err, parity_1e10=bool(err < 1e-10),
+        # whole-resident Mosaic kernel needs the f32 system in VMEM (~16 MB)
+        vmem_native_monolithic_ok=bool(d * d * 4 <= 16 * 2**20),
+        base_s=None, base_first_s=None, peak_transient_bytes_base=None,
+        speedup_vs_gather=None,
+    )
+    if run_baseline:
+        fn_base = make_tiled_federated_solve(mesh, target_gamma=0.5, dim=d)
+        peak_base, _ = peak_aval_bytes(fn_base, gt, mt)
+        t0 = time.perf_counter()
+        w_base = np.asarray(fn_base(gt, mt))
+        row["base_first_s"] = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        w_base = np.asarray(fn_base(gt, mt))
+        row["base_s"] = time.perf_counter() - t0
+        row["peak_transient_bytes_base"] = int(peak_base)
+        row["speedup_vs_gather"] = row["base_s"] / row["dist_s"]
+        assert peak_base >= full_bytes      # the baseline DOES gather
+        err_b = float(np.abs(w_base - ref).max() / np.abs(ref).max())
+        row["base_rel_err_vs_numpy_f64"] = err_b
+    print(json.dumps(row))
+
+
+def bench_distributed_factor(d: int):
+    """Run one distributed-factor measurement in a fresh 8-device x64 child
+    (both knobs are process-global); the gather-then-factor baseline runs
+    only where its (d, d) per-device transient fits the budget."""
+    run_baseline = d * d * 8 <= DEVICE_TRANSIENT_BUDGET
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src"), root] +
+        ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    res = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), _DIST_SUBPROC_FLAG,
+         str(d), str(int(run_baseline))],
+        capture_output=True, text=True, env=env, cwd=root)
+    if res.returncode != 0:
+        raise RuntimeError(f"dist subprocess failed:\n{res.stderr}")
+    return json.loads(res.stdout.strip().splitlines()[-1])
 
 
 def _tiled_subprocess_main(d: int) -> None:
@@ -298,12 +424,37 @@ def run(quick: bool = False) -> list[dict]:
     if not row["parity_1e6"]:
         raise AssertionError(
             f"tiled-vs-sync parity exceeded 1e-6: {row['max_abs_err_vs_sync']}")
+
+    ds = [256, 512] if quick else [2048, 4096, 6144, 8192]
+    dist_rows = [bench_distributed_factor(d) for d in ds]
+    out.extend(dist_rows)
+    print_table(
+        "Tile-parallel distributed factor vs gather-then-factor, 8-way "
+        "mesh, x64 subprocess per d",
+        ["d", "dist s", "gather s", "speedup", "peak MB dist",
+         "peak MB gather", "budget MB", "rel err"],
+        [[r["d"], f"{r['dist_s']:.2f}",
+          "infeasible" if r["base_s"] is None else f"{r['base_s']:.2f}",
+          "—" if r["speedup_vs_gather"] is None
+          else f"{r['speedup_vs_gather']:.2f}x",
+          f"{r['peak_transient_bytes_dist'] / 2**20:.0f}",
+          "—" if r["peak_transient_bytes_base"] is None
+          else f"{r['peak_transient_bytes_base'] / 2**20:.0f}",
+          f"{r['budget_bytes'] / 2**20:.0f}",
+          f"{r['rel_err_vs_numpy_f64']:.1e}"] for r in dist_rows])
+    bad = [r["d"] for r in dist_rows if not r["parity_1e10"]]
+    if bad:
+        raise AssertionError(
+            f"distributed-factor parity exceeded 1e-10 at d={bad}")
     return out
 
 
 if __name__ == "__main__":
     if len(sys.argv) >= 3 and sys.argv[1] == _TILED_SUBPROC_FLAG:
         _tiled_subprocess_main(int(sys.argv[2]))
+        sys.exit(0)
+    if len(sys.argv) >= 4 and sys.argv[1] == _DIST_SUBPROC_FLAG:
+        _dist_subprocess_main(int(sys.argv[2]), bool(int(sys.argv[3])))
         sys.exit(0)
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",

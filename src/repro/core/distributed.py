@@ -135,6 +135,9 @@ def make_tiled_federated_solve(
     axis_names: Sequence[str] = ("data",),
     target_gamma: float = 0.0,
     use_kernel: bool = False,
+    distributed_factor: bool = False,
+    dim: int | None = None,
+    block: int | None = None,
 ):
     """Build a jitted aggregation over a row-TILED Gram: tiles-per-shard → W.
 
@@ -160,12 +163,72 @@ def make_tiled_federated_solve(
          factored and solved in-graph (``use_kernel=True`` routes this
          through the blocked Pallas Cholesky of ``repro.kernels.solve``).
 
+    With ``distributed_factor=True`` step 2 never happens: instead of
+    gathering the system, the factorization itself runs tile-parallel
+    (:func:`repro.kernels.solve.tile_cholesky_factor`): each panel's owner
+    shard is static, one all-gather-of-a-panel replicates its (b, b)
+    diagonal block and its (d, b) L-column, and every shard applies
+    trsm/syrk to its own rows through the streamed Pallas panel kernels —
+    peak per-device live bytes stay at the (r, d) tile plus one panel
+    column, never the (d, d) transient. ``dim`` gives the TRUE head width
+    when the tiles are padded (``ShardedCoordinator`` pads indivisible dims
+    with zero rows); pad rows get a unit diagonal so the padded block
+    factors to I and decouples, and the returned weight is sliced back to
+    ``dim`` rows.
+
     Device arithmetic follows jax's global precision; under
-    ``jax_enable_x64`` the result matches the sync host path ≤1e-6 at
-    d=6144 on an 8-way mesh (``benchmarks/solve_kernels_bench.py``).
+    ``jax_enable_x64`` the result matches the sync host path ≤1e-10 at
+    d=2048 on an 8-way mesh (``tests/test_distributed_cholesky.py``).
     """
     ax = tuple(axis_names)
     engine = AnalyticEngine("jax", use_kernel=use_kernel)
+    n_shards = 1
+    for a in ax:
+        n_shards *= mesh.shape[a]
+    interpret = jax.default_backend() != "tpu"
+
+    if distributed_factor:
+        from repro.kernels.solve import (
+            DEFAULT_STREAM_BLOCK, panel_width,
+            tile_cholesky_factor, tile_cholesky_solve)
+
+        @functools.partial(
+            shard_map, mesh=mesh, in_specs=(P(ax), P(ax)), out_specs=P(),
+            check_rep=False,   # gathers + dynamic slices defeat rep inference
+        )
+        def _agg_dist(gram_tiles: jax.Array,
+                      moment_tiles: jax.Array) -> jax.Array:
+            idx = jnp.asarray(0)
+            for a in ax:
+                idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+            gt = gram_tiles[0]                 # (rows, d_p) — this shard's tile
+            mt = moment_tiles[0]               # (rows, C)
+            rows, d_p = gt.shape
+            d_true = d_p if dim is None else dim
+            # RI restore on the true diagonal (lazy-γ: raw tiles + γ·I) and a
+            # unit diagonal on pad rows so the pad block factors to I and
+            # never couples back. Selects, not adds, so off-diagonal entries
+            # pass through bit-identically.
+            cols = jnp.arange(d_p)
+            gr = idx * rows + jnp.arange(rows)
+            on_diag = gr[:, None] == cols[None, :]
+            a_tile = jnp.where(
+                on_diag & (gr[:, None] < d_true),
+                gt + jnp.asarray(target_gamma, gt.dtype), gt)
+            a_tile = jnp.where(on_diag & (gr[:, None] >= d_true),
+                               jnp.ones((), gt.dtype), a_tile)
+            b = panel_width(rows, block or DEFAULT_STREAM_BLOCK)
+            gather = lambda v: jax.lax.all_gather(v, ax)
+            tile_l, zs = tile_cholesky_factor(
+                a_tile, shard=idx, n_shards=n_shards, gather=gather,
+                block=b, interpret=interpret)
+            w = tile_cholesky_solve(
+                tile_l, mt, zs, shard=idx, n_shards=n_shards, gather=gather,
+                psum=lambda v: jax.lax.psum(v, ax), block=b,
+                interpret=interpret)
+            return w[:d_true]
+
+        return jax.jit(_agg_dist)
 
     @functools.partial(
         shard_map, mesh=mesh, in_specs=(P(ax), P(ax)), out_specs=P()
@@ -186,8 +249,16 @@ def make_tiled_federated_solve(
             jnp.zeros((d, mt.shape[1]), mt.dtype), mt, (offset, zero))
         full_g = jax.lax.psum(full_g, ax)
         full_m = jax.lax.psum(full_m, ax)
+        d_true = d if dim is None else dim
         a_sys = full_g + jnp.asarray(target_gamma, gt.dtype) * jnp.eye(
             d, dtype=gt.dtype)
+        if d_true != d:
+            # padded system: unit diagonal on the pad block, then slice back
+            tail = jnp.arange(d) >= d_true
+            a_sys = jnp.where(
+                (jnp.arange(d)[:, None] == jnp.arange(d)[None, :])
+                & tail[:, None], jnp.ones((), gt.dtype), a_sys)
+            return engine.backend.solve_sym(a_sys, full_m)[:d_true]
         return engine.backend.solve_sym(a_sys, full_m)
 
     return jax.jit(_agg)

@@ -312,7 +312,12 @@ class JaxBackend:
             from repro.kernels import ops as _kops
 
             # blocked Pallas Cholesky; handle shape matches cho_factor's
-            # (tri, lower) convention so rank_update works unchanged
+            # (tri, lower) convention so rank_update works unchanged. Wide
+            # single systems go through the HBM-streamed panel path — the
+            # whole-resident batch kernel exceeds VMEM past d≈1024 f32.
+            if a.shape[-1] >= _kops.STREAM_MIN_DIM:
+                return Factorization(
+                    (_kops.streamed_cholesky(a), True), backend=self)
             return Factorization(
                 (_kops.blocked_cholesky(a[None])[0], True), backend=self)
         import jax.scipy.linalg as jsl
@@ -338,6 +343,8 @@ class JaxBackend:
 
             tri, lower = f.handle
             l = tri if lower else tri.T
+            if l.shape[-1] >= _kops.STREAM_MIN_DIM:
+                return _kops.streamed_cholesky_solve(l, b)
             return _kops.cholesky_solve(l[None], b[None])[0]
         import jax.scipy.linalg as jsl
 

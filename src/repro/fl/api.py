@@ -712,13 +712,24 @@ class ShardedCoordinator:
     global Gram** — every arrival's statistics are scattered across all
     tiles, so placement is the aggregation and per-shard resident memory
     scales as d²/shards. ``solve()`` then runs
-    :func:`repro.core.distributed.make_tiled_federated_solve`: each device
-    contributes its tile to the psum'd full matrix exactly once, and the
-    replicated system is factored in-graph. This is the d=6144-head
-    configuration (a whole-leaf psum at that size keeps 8 × 302 MB of f64
-    partials resident; tiles keep 38 MB per shard) — verified ≤1e-6 against
-    the sync path on an 8-way mesh in ``benchmarks/solve_kernels_bench.py``.
-    Tiled mode requires ``dim % num_shards == 0``.
+    :func:`repro.core.distributed.make_tiled_federated_solve` with
+    ``distributed_factor=True`` (the default here): the factorization runs
+    tile-parallel on the shards where the Gram lives — panel owners
+    broadcast one (d, b) L-column per panel and every shard applies
+    trsm/syrk to its own rows through the streamed Pallas panel kernels —
+    so no device ever materializes the full (d, d) system.
+    ``distributed_factor=False`` restores the PR-5 gather-then-factor
+    collective (one psum'd (d, d) transient per device). This is the
+    d=6144-head configuration (a whole-leaf psum at that size keeps
+    8 × 302 MB of f64 partials resident; tiles keep 38 MB per shard) —
+    verified ≤1e-6 against the sync path on an 8-way mesh in
+    ``benchmarks/solve_kernels_bench.py``. Dims that don't divide the shard
+    count are padded up to the next tile multiple (zero pad rows, unit
+    diagonal inside the solve, sliced away from the result — d=6144 on 7
+    shards just works); the explicit error remains only when padding would
+    exceed one extra tile (e.g. dim=10 on 8 shards). A solve that comes
+    back non-finite (rank-deficient γ=0 ablations) falls back to the host
+    engine's pinv path on the merged statistics.
 
     Device arithmetic follows jax's global precision: f32 by default,
     f64 end-to-end under ``jax_enable_x64`` (the 1e-6-vs-sync conformance
@@ -731,7 +742,8 @@ class ShardedCoordinator:
 
     def __init__(self, dim: int, num_classes: int, gamma: float = 1.0,
                  *, mesh=None, axis_names: Optional[Sequence[str]] = None,
-                 placement: str = "load_aware", tiled_gram: bool = False):
+                 placement: str = "load_aware", tiled_gram: bool = False,
+                 distributed_factor: bool = True):
         import jax
 
         self.dim = dim
@@ -751,17 +763,27 @@ class ShardedCoordinator:
                              "(load_aware | round_robin)")
         self.placement = placement
         self.tiled_gram = bool(tiled_gram)
+        self.distributed_factor = bool(distributed_factor)
         if self.tiled_gram:
-            if dim % n_shards:
+            # indivisible dims pad up to the next tile multiple; prefer
+            # 8-row-aligned tiles (Pallas panel widths divide the tile) when
+            # alignment keeps the pad under one tile
+            rows = -(-dim // n_shards)
+            if rows >= 16:
+                r8 = ((rows + 7) // 8) * 8
+                if n_shards * r8 - dim < r8:
+                    rows = r8
+            if n_shards * rows - dim >= rows:
                 raise ValueError(
-                    f"tiled_gram requires dim divisible by the shard count "
-                    f"(dim={dim}, shards={n_shards})")
-            self._tile_rows = dim // n_shards
+                    f"tiled_gram would pad dim={dim} by a full tile on "
+                    f"{n_shards} shards (tile_rows={rows}) — use fewer "
+                    f"shards or a wider head")
+            self._tile_rows = rows
+            self._dim_padded = n_shards * rows
             self._gram_tiles: List[np.ndarray] = [
-                np.zeros((self._tile_rows, dim)) for _ in range(n_shards)]
+                np.zeros((rows, self._dim_padded)) for _ in range(n_shards)]
             self._moment_tiles: List[np.ndarray] = [
-                np.zeros((self._tile_rows, num_classes))
-                for _ in range(n_shards)]
+                np.zeros((rows, num_classes)) for _ in range(n_shards)]
             self._count = 0.0
             self._shards: List[SuffStats] = []
         else:
@@ -819,8 +841,10 @@ class ShardedCoordinator:
             moment = np.asarray(upload.moment, np.float64)
             r = self._tile_rows
             for i in range(self.num_shards):
-                self._gram_tiles[i] += gram[i * r:(i + 1) * r]
-                self._moment_tiles[i] += moment[i * r:(i + 1) * r]
+                lo, hi = i * r, min(i * r + r, self.dim)
+                if hi > lo:
+                    self._gram_tiles[i][:hi - lo, :self.dim] += gram[lo:hi]
+                    self._moment_tiles[i][:hi - lo] += moment[lo:hi]
             self._count += float(upload.count)
         else:
             i = self._place()
@@ -882,10 +906,11 @@ class ShardedCoordinator:
 
     def _merged(self) -> SuffStats:
         if self.tiled_gram:
-            # the tiles ARE the aggregate, partitioned by rows
+            # the tiles ARE the aggregate, partitioned by (padded) rows
+            d = self.dim
             return SuffStats(
-                gram=np.concatenate(self._gram_tiles, 0),
-                moment=np.concatenate(self._moment_tiles, 0),
+                gram=np.concatenate(self._gram_tiles, 0)[:d, :d],
+                moment=np.concatenate(self._moment_tiles, 0)[:d],
                 count=float(self._count),
                 clients=float(len(self._seen)),
             )
@@ -925,17 +950,28 @@ class ShardedCoordinator:
         if fn is None:
             if self.tiled_gram:
                 fn = make_tiled_federated_solve(
-                    self.mesh, axis_names=self.axis_names, target_gamma=key)
+                    self.mesh, axis_names=self.axis_names, target_gamma=key,
+                    distributed_factor=self.distributed_factor,
+                    dim=self.dim)
             else:
                 fn = make_federated_solve(
                     self.mesh, axis_names=self.axis_names, gamma=self.gamma,
                     target_gamma=key)
             self._solve_fns[key] = fn
         if self.tiled_gram:
-            return np.asarray(
+            w = np.asarray(
                 fn(jnp.asarray(np.stack(self._gram_tiles)),
                    jnp.asarray(np.stack(self._moment_tiles))), np.float64)
-        return np.asarray(fn(self._stacked()), np.float64)
+        else:
+            w = np.asarray(fn(self._stacked()), np.float64)
+        if not np.isfinite(w).all():
+            # singular system (rank-deficient γ=0 ablation): the device
+            # Cholesky surfaces NaNs by design — reroute to the host
+            # engine's pinv fallback on the merged statistics
+            return np.asarray(
+                self.engine.solve(self._merged(), use_ri=True,
+                                  target_gamma=key), np.float64)
+        return w
 
     def solve_multi_gamma(self, gammas: Sequence[float]) -> list[np.ndarray]:
         """γ model sweep on the merged statistics (host engine, one eigh) —
@@ -981,11 +1017,13 @@ class ShardedCoordinator:
                    num_classes: Optional[int] = None, *,
                    mesh=None, axis_names: Optional[Sequence[str]] = None,
                    placement: str = "load_aware", tiled_gram: bool = False,
+                   distributed_factor: bool = True,
                    ) -> "ShardedCoordinator":
         dim = state["gram"].shape[0]
         coord = cls(dim, num_classes or state["moment"].shape[1],
                     float(state["gamma"]), mesh=mesh, axis_names=axis_names,
-                    placement=placement, tiled_gram=tiled_gram)
+                    placement=placement, tiled_gram=tiled_gram,
+                    distributed_factor=distributed_factor)
         stats, seen = _restore_stats(state, coord.gamma, dim)
         coord._seen = seen
         if tiled_gram:
@@ -993,8 +1031,10 @@ class ShardedCoordinator:
             gram = np.asarray(stats.gram, np.float64)
             moment = np.asarray(stats.moment, np.float64)
             for i in range(coord.num_shards):
-                coord._gram_tiles[i] = gram[i * r:(i + 1) * r].copy()
-                coord._moment_tiles[i] = moment[i * r:(i + 1) * r].copy()
+                lo, hi = i * r, min(i * r + r, dim)
+                if hi > lo:
+                    coord._gram_tiles[i][:hi - lo, :dim] = gram[lo:hi]
+                    coord._moment_tiles[i][:hi - lo] = moment[lo:hi]
             coord._count = float(stats.count)
         else:
             # statistics are additive, so placement is free: restore into

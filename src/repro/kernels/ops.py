@@ -41,6 +41,26 @@ def multi_gamma_solve(c: jax.Array, q: jax.Array, gammas: jax.Array,
     return _solve.multi_gamma_solve(c, q, gammas, **kw)
 
 
+STREAM_MIN_DIM = _solve.STREAM_MIN_DIM
+
+
+def interpret_default() -> bool:
+    """Whether Pallas calls should run interpreted on this backend."""
+    return not _ON_TPU
+
+
+def streamed_cholesky(a: jax.Array, **kw) -> jax.Array:
+    """Single-system (d, d) lower Cholesky via HBM→VMEM panel streaming."""
+    kw.setdefault("interpret", not _ON_TPU)
+    return _solve.streamed_cholesky(a, **kw)
+
+
+def streamed_cholesky_solve(l: jax.Array, b: jax.Array, **kw) -> jax.Array:
+    """L·Lᵀ·x = b substitution against a streamed_cholesky factor."""
+    kw.setdefault("interpret", not _ON_TPU)
+    return _solve.streamed_cholesky_solve(l, b, **kw)
+
+
 def flash_attention(q, k, v, **kw) -> jax.Array:
     """Causal/GQA/sliding-window flash attention."""
     kw.setdefault("interpret", not _ON_TPU)

@@ -63,13 +63,27 @@ __all__ = [
     "blocked_cholesky",
     "cholesky_solve",
     "multi_gamma_solve",
+    "panel_factor",
+    "panel_tri_inv",
+    "panel_trsm",
+    "panel_update",
+    "tile_cholesky_factor",
+    "tile_cholesky_solve",
+    "streamed_cholesky",
+    "streamed_cholesky_solve",
+    "panel_width",
     "DEFAULT_BLOCK",
     "DEFAULT_GAMMA_BLOCK",
+    "DEFAULT_STREAM_BLOCK",
+    "STREAM_MIN_DIM",
 ]
 
 DEFAULT_BLOCK = 128        # panel width: MXU-lane multiple, 2·d fori steps
 DEFAULT_GAMMA_BLOCK = 8    # γs factored together per fused-sweep grid step
 DEFAULT_BATCH_BLOCK = 8    # systems per grid step for the batched kernels
+DEFAULT_STREAM_BLOCK = 256   # panel width for the HBM-streamed single-system path
+DEFAULT_UPDATE_BLOCK = 256   # row/col tile edge for the streamed syrk grid
+STREAM_MIN_DIM = 2048      # engine routes single systems this wide to streaming
 
 _SPLIT = 4097.0            # 2^12 + 1: Dekker split constant for f32
 
@@ -387,3 +401,326 @@ def multi_gamma_solve(c: jax.Array, q: jax.Array, gammas: jax.Array, *,
         interpret=interpret,
     )(c, q, gammas)
     return out.reshape(n_gp, d_p, c_p)[:n_g, :d, :n_cls]
+
+
+# ---------------------------------------------------------------------------
+# Tile-parallel / HBM-streamed single-system path
+#
+# The kernels above keep the whole batched system resident in VMEM, which
+# caps Mosaic-native occupancy near d≈1024 at f32. The path below factors a
+# SINGLE wide system as a sequence of panel-sized pallas_calls: the (b, b)
+# diagonal micro-factorization, the (r, b) panel trsm, and the streamed
+# trailing syrk whose 2-D grid walks (row, col) tiles of the trailing
+# submatrix — each grid step touches one VMEM-sized tile, so pallas's
+# automatic grid pipelining double-buffers the HBM→VMEM panel traffic and a
+# d≥2048 system factors Mosaic-native.
+#
+# The same trace-time routine also runs tile-PARALLEL: each mesh shard holds
+# one (r, d) row tile of the global Gram, and the per-panel communication is
+# abstracted behind two callbacks (``gather`` and ``psum``). The panel owner
+# is a *static* shard index (panel width divides the tile rows), so the
+# schedule per panel is: every shard offers its candidate diagonal block,
+# one all-gather-of-a-panel replicates the true block, every shard factors
+# it redundantly (b³ — cheap) and applies trsm/syrk to its own rows. No
+# device ever materializes the full (d, d) system — peak per-device live
+# bytes stay at the (r, d) tile plus one (d, b) panel column. With ONE shard
+# and identity callbacks the very same trace is the local streamed kernel,
+# which is what makes the distributed path bit-for-bit testable against
+# :func:`streamed_cholesky`.
+# ---------------------------------------------------------------------------
+
+_DIMS_NN = (((1,), (0,)), ((), ()))    # a @ b
+_DIMS_NT = (((1,), (1,)), ((), ()))    # a @ bᵀ
+_DIMS_TN = (((0,), (0,)), ((), ()))    # aᵀ @ b
+
+
+def _make_mm2(precision: str, dims):
+    """Unbatched 2-D tile matmul at the requested precision (see _make_mm)."""
+
+    def mm(a, b):
+        return lax.dot_general(a, b, dims, preferred_element_type=a.dtype)
+
+    if precision != "f32_x2":
+        return mm
+
+    def mm_x2(a, b):
+        ah, al = _split(a)
+        bh, bl = _split(b)
+        hi = lax.dot_general(ah, bh, dims, preferred_element_type=a.dtype)
+        mid = (lax.dot_general(ah, bl, dims, preferred_element_type=a.dtype)
+               + lax.dot_general(al, bh, dims,
+                                 preferred_element_type=a.dtype))
+        return hi + mid
+
+    return mm_x2
+
+
+def panel_width(rows: int, cap: int = DEFAULT_STREAM_BLOCK) -> int:
+    """Largest panel width ≤ ``cap`` that divides ``rows`` — panels must tile
+    the shard rows exactly so every panel has a single static owner shard."""
+    b = min(cap, rows)
+    while rows % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def panel_factor(diag: jax.Array, *, interpret: bool = False):
+    """Factor one (b, b) SPD diagonal block → ``(L, inv(L))`` in VMEM.
+
+    Both outputs come from one pallas_call so the trsm-ready inverse rides
+    along with the factor; a non-PD block yields NaNs (caller fallback).
+    """
+    b = diag.shape[-1]
+
+    def kernel(d_ref, l_ref, z_ref):
+        l = _factor_tile(d_ref[...][None])
+        l_ref[...] = l[0]
+        z_ref[...] = _tri_inv_tile(l)[0]
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=(jax.ShapeDtypeStruct((b, b), diag.dtype),
+                   jax.ShapeDtypeStruct((b, b), diag.dtype)),
+        interpret=interpret,
+    )(diag)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def panel_tri_inv(l: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """inv(L) of one (b, b) lower-triangular block (solve-only callers that
+    hold a factor but not the inverses from :func:`panel_factor`)."""
+    b = l.shape[-1]
+
+    def kernel(l_ref, z_ref):
+        z_ref[...] = _tri_inv_tile(l_ref[...][None])[0]
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((b, b), l.dtype),
+        interpret=interpret,
+    )(l)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("precision", "interpret", "row_block"))
+def panel_trsm(raw: jax.Array, zinv: jax.Array, *, precision: str = "native",
+               interpret: bool = False,
+               row_block: int = DEFAULT_UPDATE_BLOCK) -> jax.Array:
+    """Panel trsm ``raw (r, b) @ inv(L_D)ᵀ`` — the grid streams row blocks of
+    the local column slab through VMEM against the replicated (b, b) inverse."""
+    r, b = raw.shape
+    rb = panel_width(r, row_block)
+    mm = _make_mm2(precision, _DIMS_NT)
+
+    def kernel(a_ref, z_ref, o_ref):
+        o_ref[...] = mm(a_ref[...], z_ref[...])
+
+    return pl.pallas_call(
+        kernel,
+        grid=(r // rb,),
+        in_specs=[
+            pl.BlockSpec((rb, b), lambda i: (i, 0)),
+            pl.BlockSpec((b, b), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rb, b), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, b), raw.dtype),
+        interpret=interpret,
+    )(raw, zinv)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("precision", "interpret", "row_block",
+                                    "col_block"))
+def panel_update(trail: jax.Array, lp: jax.Array, pt: jax.Array, *,
+                 precision: str = "native", interpret: bool = False,
+                 row_block: int = DEFAULT_UPDATE_BLOCK,
+                 col_block: int = DEFAULT_UPDATE_BLOCK) -> jax.Array:
+    """Streamed trailing syrk ``trail (r, w) − lp (r, b) @ pt (w, b)ᵀ``.
+
+    The 2-D grid walks (row, col) VMEM tiles of the trailing submatrix, so
+    per-step residency is rb·cb + (rb + cb)·b elements regardless of d —
+    this is the kernel that keeps the right-looking update HBM-streamed.
+    """
+    r, w = trail.shape
+    b = lp.shape[-1]
+    rb = panel_width(r, row_block)
+    cb = panel_width(w, col_block)
+    mm = _make_mm2(precision, _DIMS_NT)
+
+    def kernel(t_ref, l_ref, p_ref, o_ref):
+        o_ref[...] = t_ref[...] - mm(l_ref[...], p_ref[...])
+
+    return pl.pallas_call(
+        kernel,
+        grid=(r // rb, w // cb),
+        in_specs=[
+            pl.BlockSpec((rb, cb), lambda i, j: (i, j)),
+            pl.BlockSpec((rb, b), lambda i, j: (i, 0)),
+            pl.BlockSpec((cb, b), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((rb, cb), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, w), trail.dtype),
+        interpret=interpret,
+    )(trail, lp, pt)
+
+
+def tile_cholesky_factor(tile, *, shard, n_shards: int, gather, block: int,
+                         precision: str = "native", interpret: bool = False,
+                         use_kernel: bool = True):
+    """Blocked right-looking Cholesky of a row-tiled global system.
+
+    ``tile`` is this shard's ``(r, d)`` row slab of the global SPD system
+    (``d = n_shards · r``); ``shard`` is the shard's linear index (a traced
+    ``axis_index`` under shard_map, or a plain 0 for the local streamed
+    path) and ``gather(x) → (n_shards, …)`` stacks a per-shard value in
+    shard order (``lax.all_gather`` on the mesh; ``x[None]`` locally).
+    ``block`` must divide ``r`` (see :func:`panel_width`) so each panel has
+    one static owner shard. Returns this shard's rows of the clean lower
+    factor plus the replicated per-panel inverse diagonal blocks.
+
+    Per panel: every shard offers its candidate (b, b) diagonal slice, the
+    gather replicates the owner's true one, every shard factors it
+    redundantly (b³ flops — far below the gather latency it would trade
+    against) and applies trsm to its local column slab; one more panel
+    gather assembles the (d, b) L-column every shard needs for its streamed
+    trailing syrk. Peak live bytes per shard: the (r, d) tile + one (d, b)
+    panel — never the (d, d) system.
+    """
+    r, d_p = tile.shape
+    b = block
+    mm_nt = _make_mm2(precision, _DIMS_NT)
+    rows_g = shard * r + jnp.arange(r)          # global row ids of this tile
+    work = tile
+    zs = []
+    for p in range(d_p // b):
+        o = p * b
+        own = o // r                    # static: panel lives on one shard
+        lo = o - own * r                # static owner-local row offset
+        diag = gather(work[lo:lo + b, o:o + b])[own]
+        if use_kernel:
+            l_d, z = panel_factor(diag, interpret=interpret)
+        else:
+            l_d = _factor_tile(diag[None])[0]
+            z = _tri_inv_tile(l_d[None])[0]
+        zs.append(z)
+        if use_kernel:
+            colv = panel_trsm(work[:, o:o + b], z, precision=precision,
+                              interpret=interpret)
+        else:
+            colv = mm_nt(work[:, o:o + b], z)
+        below = rows_g >= o + b
+        in_diag = (rows_g >= o) & (rows_g < o + b)
+        ld_full = jnp.zeros((r, b), work.dtype).at[lo:lo + b].set(l_d)
+        col = jnp.where(below[:, None], colv,
+                        jnp.where(in_diag[:, None], ld_full,
+                                  jnp.zeros_like(colv)))
+        work = work.at[:, o:o + b].set(col)
+        w_tr = d_p - o - b
+        if w_tr:
+            lcol = gather(col).reshape(n_shards * r, b)
+            pt = lcol[o + b:]
+            lp = jnp.where(below[:, None], col, jnp.zeros_like(col))
+            if use_kernel:
+                trail = panel_update(work[:, o + b:], lp, pt,
+                                     precision=precision, interpret=interpret)
+            else:
+                trail = work[:, o + b:] - mm_nt(lp, pt)
+            work = work.at[:, o + b:].set(trail)
+    return work, zs
+
+
+def tile_cholesky_solve(tile_l, q_tile, zs=None, *, shard, n_shards: int,
+                        gather, psum, block: int, precision: str = "native",
+                        interpret: bool = False, use_kernel: bool = True):
+    """``L Lᵀ x = q`` against a row-tiled factor from
+    :func:`tile_cholesky_factor`; returns the replicated ``(d, C)`` solution.
+
+    ``q_tile`` is this shard's rows of the right-hand side; ``psum`` reduces
+    a per-shard value over the mesh (identity locally). Forward sweep: the
+    panel owner forms its (b, C) block from its own L rows and the psum
+    broadcasts it; backward sweep: every shard contributes its local rows'
+    partial product and the psum assembles the replicated update. Per-panel
+    traffic is (b, C) — never the system.
+    """
+    r, d_p = tile_l.shape
+    cdim = q_tile.shape[-1]
+    b = block
+    mm_nn = _make_mm2(precision, _DIMS_NN)
+    mm_tn = _make_mm2(precision, _DIMS_TN)
+    rows_g = shard * r + jnp.arange(r)
+    panels = list(range(d_p // b))
+    if zs is None:
+        zs = []
+        for p in panels:
+            o = p * b
+            own, lo = o // r, o - (o // r) * r
+            diagl = gather(tile_l[lo:lo + b, o:o + b])[own]
+            if use_kernel:
+                zs.append(panel_tri_inv(diagl, interpret=interpret))
+            else:
+                zs.append(_tri_inv_tile(diagl[None])[0])
+    y = jnp.zeros((d_p, cdim), q_tile.dtype)
+    for p in panels:
+        o = p * b
+        own, lo = o // r, o - (o // r) * r
+        rhs = q_tile[lo:lo + b]
+        if o:
+            rhs = rhs - mm_nn(tile_l[lo:lo + b, :o], y[:o])
+        y_p = mm_nn(zs[p], rhs)
+        y_p = jnp.where(jnp.asarray(shard == own), y_p, jnp.zeros_like(y_p))
+        y = y.at[o:o + b].set(psum(y_p))
+    x = jnp.zeros((d_p, cdim), q_tile.dtype)
+    for p in reversed(panels):
+        o = p * b
+        below = rows_g >= o + b
+        lp = jnp.where(below[:, None], tile_l[:, o:o + b],
+                       jnp.zeros((r, b), tile_l.dtype))
+        start = jnp.asarray(shard * r)
+        xs_local = lax.dynamic_slice(
+            x, (start, jnp.zeros_like(start)), (r, cdim))
+        total = psum(mm_tn(lp, xs_local))
+        x = x.at[o:o + b].set(mm_tn(zs[p], y[o:o + b] - total))
+    return x
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block", "precision", "interpret"))
+def streamed_cholesky(a: jax.Array, *, block: int = DEFAULT_STREAM_BLOCK,
+                      precision: str = "native",
+                      interpret: bool = False) -> jax.Array:
+    """Single-system lower Cholesky ``a (d, d) SPD → L`` via panel streaming.
+
+    The degenerate one-shard instance of :func:`tile_cholesky_factor`: the
+    whole system stays in HBM and only panel-sized tiles transit VMEM, so a
+    d≥2048 system factors Mosaic-native where :func:`blocked_cholesky`'s
+    whole-resident batch kernel cannot. Non-divisible d is padded with an
+    identity tail and sliced back.
+    """
+    d = a.shape[-1]
+    bs = min(block, _ceil_mult(d, 8))
+    d_p = _ceil_mult(d, bs)
+    ap = _pad_spd(a[None], d_p)[0]
+    l, _ = tile_cholesky_factor(
+        ap, shard=0, n_shards=1, gather=lambda v: v[None], block=bs,
+        precision=precision, interpret=interpret)
+    return l[:d, :d]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block", "precision", "interpret"))
+def streamed_cholesky_solve(l: jax.Array, b: jax.Array, *,
+                            block: int = DEFAULT_STREAM_BLOCK,
+                            precision: str = "native",
+                            interpret: bool = False) -> jax.Array:
+    """``L Lᵀ x = b`` against a :func:`streamed_cholesky` factor —
+    ``l (d, d)`` lower, ``b (d, c)`` → ``x (d, c)``."""
+    d = l.shape[-1]
+    bs = min(block, _ceil_mult(d, 8))
+    d_p = _ceil_mult(d, bs)
+    lp = _pad_spd(l[None], d_p)[0]
+    bp = jnp.pad(b, ((0, d_p - d), (0, 0))) if d_p != d else b
+    x = tile_cholesky_solve(
+        lp, bp, None, shard=0, n_shards=1, gather=lambda v: v[None],
+        psum=lambda v: v, block=bs, precision=precision, interpret=interpret)
+    return x[:d]

@@ -373,3 +373,50 @@ def analyze(text: str, collective_width_cap: int = 0) -> Cost:
                 else:
                     cost.bytes_accessed += b
     return cost
+
+
+def peak_aval_bytes(fn, *args, **kwargs) -> Tuple[int, str]:
+    """Largest single intermediate array (bytes) anywhere in ``fn``'s jaxpr.
+
+    Recurses through every sub-jaxpr an equation carries (pjit bodies,
+    shard_map bodies, scan/while/cond branches, pallas grids), so values
+    inside a ``shard_map`` are counted at their PER-DEVICE shapes — which is
+    exactly what the distributed-factor bench needs to assert that no shard
+    ever materializes the full (d, d) system: the gather-then-factor
+    collective shows a (d, d) transient here, the tile-parallel path tops
+    out at its (d/shards, d) row tile. A static upper bound on per-device
+    live bytes, not a simulation of XLA's buffer assignment (rematerialization
+    can only shrink it). Returns ``(bytes, shape_str)`` for the peak value.
+    """
+    import jax
+    import numpy as np
+
+    core = jax.core
+
+    def aval_bytes(v):
+        aval = getattr(v, "aval", None)
+        if aval is None or not hasattr(aval, "shape"):
+            return 0, ""
+        n = int(np.prod(aval.shape)) if aval.shape else 1
+        return n * np.dtype(aval.dtype).itemsize, str(aval)
+
+    def is_jaxpr(x):
+        return isinstance(x, (core.Jaxpr, core.ClosedJaxpr))
+
+    def walk(jaxpr):
+        if isinstance(jaxpr, core.ClosedJaxpr):
+            jaxpr = jaxpr.jaxpr
+        # equation outputs only: the caller's (sharded, resident) inputs are
+        # not transients of the solve
+        best = (0, "")
+        for eqn in jaxpr.eqns:
+            for v in eqn.outvars:
+                best = max(best, aval_bytes(v))
+            for sub in jax.tree_util.tree_leaves(
+                    eqn.params, is_leaf=is_jaxpr):
+                if is_jaxpr(sub):
+                    best = max(best, walk(sub))
+        return best
+
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    return walk(closed)

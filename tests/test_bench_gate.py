@@ -1,0 +1,121 @@
+"""tools/bench_gate.py: baseline pass, regression fail, smoke tolerance,
+failure propagation, suite isolation, and the metrics/modules fallback."""
+
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+_GATE = pathlib.Path(__file__).resolve().parents[1] / "tools" / "bench_gate.py"
+spec = importlib.util.spec_from_file_location("bench_gate", _GATE)
+bench_gate = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(bench_gate)
+
+
+def _entry(sha, suite="quick", metrics=None, modules=None, failures=(),
+           env=None):
+    return {
+        "sha": sha, "suite": suite, "recorded_at": "2026-08-08T00:00:00",
+        "env": env or {"JAX_ENABLE_X64": "1"},
+        "modules": modules or {"solve_kernels_bench": 10.0},
+        "metrics": metrics if metrics is not None else {},
+        "failures": list(failures),
+    }
+
+
+def _write(tmp_path, entries):
+    path = tmp_path / "BENCH_solve.json"
+    path.write_text(json.dumps(entries))
+    return str(path)
+
+
+def test_first_entry_is_baseline(tmp_path, capsys):
+    path = _write(tmp_path, [_entry("aaa", metrics={"m.bench.dist_s": 1.0})])
+    assert bench_gate.main(["--path", path]) == 0
+    assert "baseline" in capsys.readouterr().out
+
+
+def test_same_sha_reruns_do_not_self_compare(tmp_path):
+    path = _write(tmp_path, [
+        _entry("aaa", metrics={"m.b.dist_s": 1.0}),
+        _entry("aaa", metrics={"m.b.dist_s": 9.0}),
+    ])
+    assert bench_gate.main(["--path", path]) == 0
+
+
+def test_regression_beyond_threshold_fails(tmp_path, capsys):
+    path = _write(tmp_path, [
+        _entry("aaa", metrics={"m.b.dist_s": 1.0}),
+        _entry("bbb", metrics={"m.b.dist_s": 1.4}),
+    ])
+    assert bench_gate.main(["--path", path]) == 1
+    assert "REGRESSED" in capsys.readouterr().out
+
+
+def test_within_threshold_passes(tmp_path):
+    path = _write(tmp_path, [
+        _entry("aaa", metrics={"m.b.dist_s": 1.0}),
+        _entry("bbb", metrics={"m.b.dist_s": 1.2}),
+    ])
+    assert bench_gate.main(["--path", path]) == 0
+
+
+def test_smoke_tolerance_is_loose(tmp_path):
+    entries = [
+        _entry("aaa", metrics={"m.b.dist_s": 1.0}),
+        _entry("bbb", metrics={"m.b.dist_s": 2.5}),
+    ]
+    path = _write(tmp_path, entries)
+    assert bench_gate.main(["--path", path]) == 1          # 150% > 25%
+    assert bench_gate.main(["--path", path, "--smoke"]) == 0   # < 200%
+    entries[-1]["metrics"]["m.b.dist_s"] = 3.5
+    path = _write(tmp_path, entries)
+    assert bench_gate.main(["--path", path, "--smoke"]) == 1   # > 3x
+
+
+def test_tiny_metrics_never_gate(tmp_path):
+    """Sub-50ms walls are dispatch jitter, not kernel regressions."""
+    path = _write(tmp_path, [
+        _entry("aaa", metrics={"m.b.tiny_s": 0.004}),
+        _entry("bbb", metrics={"m.b.tiny_s": 0.02}),
+    ])
+    assert bench_gate.main(["--path", path]) == 0
+
+
+def test_recorded_failures_fail_the_gate(tmp_path):
+    path = _write(tmp_path, [_entry("aaa", failures=["solve_kernels_bench"])])
+    assert bench_gate.main(["--path", path]) == 1
+
+
+def test_suites_are_isolated(tmp_path):
+    """A full-suite entry never gates against a quick-suite ancestor."""
+    path = _write(tmp_path, [
+        _entry("aaa", suite="quick", metrics={"m.b.dist_s": 1.0}),
+        _entry("bbb", suite="full", metrics={"m.b.dist_s": 50.0}),
+    ])
+    assert bench_gate.main(["--path", path]) == 0
+    assert bench_gate.main(["--path", path, "--suite", "quick"]) == 0
+
+
+def test_added_and_removed_metrics_do_not_gate(tmp_path, capsys):
+    path = _write(tmp_path, [
+        _entry("aaa", metrics={"m.b.gone_s": 1.0, "m.b.kept_s": 1.0}),
+        _entry("bbb", metrics={"m.b.kept_s": 1.1, "m.b.new_s": 9.0}),
+    ])
+    assert bench_gate.main(["--path", path]) == 0
+    out = capsys.readouterr().out
+    assert "new" in out and "gone" in out
+
+
+def test_modules_fallback_when_no_metrics(tmp_path):
+    path = _write(tmp_path, [
+        _entry("aaa", modules={"solve_kernels_bench": 10.0}),
+        _entry("bbb", modules={"solve_kernels_bench": 20.0}),
+    ])
+    assert bench_gate.main(["--path", path]) == 1
+
+
+def test_missing_file_raises(tmp_path):
+    with pytest.raises(SystemExit):
+        bench_gate.main(["--path", str(tmp_path / "nope.json")])

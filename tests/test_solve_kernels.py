@@ -328,18 +328,29 @@ class TestTiledGramCoordinator:
         assert tiled.rebalance() is None
         assert tiled.occupancy() == [16]               # 1 shard → whole d
 
-    def test_indivisible_dim_rejected(self):
-        """dim % shards != 0 must fail loudly at construction (tile shapes
-        would silently drop rows otherwise). A duck-typed mesh stands in
-        for a 4-device one — the device program is only built at solve."""
+    def test_indivisible_dim_pads_to_tile_multiple(self):
+        """dim % shards != 0 pads up to the next tile multiple (zero pad
+        rows, masked out of the solve); the loud construction error remains
+        only when padding would cost a full extra tile. A duck-typed mesh
+        stands in for the device mesh — the program is only built at solve."""
 
         class FakeMesh:
             axis_names = ("data",)
             shape = {"data": 4}
 
+        coord = ShardedCoordinator(18, 4, gamma=1.0, tiled_gram=True,
+                                   mesh=FakeMesh())
+        assert coord.num_shards == 4
+        assert coord._tile_rows == 5                   # ceil(18 / 4)
+        assert coord._gram_tiles[0].shape == (5, 20)   # padded width
+        # pad ≥ one whole tile is still rejected (dim=10 on 8 shards)
+        class FakeMesh8:
+            axis_names = ("data",)
+            shape = {"data": 8}
+
         with pytest.raises(ValueError):
-            ShardedCoordinator(18, 4, gamma=1.0, tiled_gram=True,
-                               mesh=FakeMesh())
+            ShardedCoordinator(10, 4, gamma=1.0, tiled_gram=True,
+                               mesh=FakeMesh8())
         coord = ShardedCoordinator(16, 4, gamma=1.0, tiled_gram=True,
                                    mesh=FakeMesh())
         assert coord.num_shards == 4

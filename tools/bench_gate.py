@@ -1,0 +1,152 @@
+#!/usr/bin/env python
+"""CI perf-regression gate over the BENCH_solve.json trajectory.
+
+``benchmarks/run.py`` appends one entry per (git sha, suite) with per-bench
+wall metrics and the env fingerprint that produced them. This gate compares
+the latest entry against the most recent entry of the SAME suite from a
+DIFFERENT sha and fails when any shared wall metric regressed by more than
+the threshold:
+
+  python tools/bench_gate.py                 # 25% tolerance (tracked perf box)
+  python tools/bench_gate.py --smoke         # 200% tolerance (CI runner noise:
+                                             #  fail only when >3x slower)
+  python tools/bench_gate.py --suite quick:solve_kernels_bench
+
+No prior entry for the suite → pass (first recorded run IS the baseline).
+An entry recorded with module failures always fails, regardless of timing.
+Metrics present on only one side are reported but never gate — benches come
+and go with the code; only like-for-like numbers are comparable. Entries
+whose env fingerprints differ are compared with a warning: the numbers are
+suspect, but silently passing would hide a real regression.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+DEFAULT_PATH = "results/bench/BENCH_solve.json"
+DEFAULT_THRESHOLD = 0.25
+SMOKE_THRESHOLD = 2.0
+# wall metrics below this are dominated by dispatch jitter, not kernel work
+MIN_GATED_SECONDS = 0.05
+
+_ENV_COMPARE = ("JAX_ENABLE_X64", "JAX_DEFAULT_DTYPE_BITS", "XLA_FLAGS",
+                "platform", "cpu_count")
+
+
+def load_trajectory(path: pathlib.Path) -> list:
+    try:
+        trajectory = json.loads(path.read_text())
+    except OSError as exc:
+        raise SystemExit(f"bench_gate: cannot read {path}: {exc}")
+    except ValueError as exc:
+        raise SystemExit(f"bench_gate: {path} is not valid JSON: {exc}")
+    if not isinstance(trajectory, list) or not trajectory:
+        raise SystemExit(f"bench_gate: {path} holds no recorded runs")
+    return trajectory
+
+
+def pick_entries(trajectory: list, suite: str | None):
+    """(current, previous-or-None) for the suite — current is the newest
+    matching entry, previous the newest older entry with a different sha."""
+    if suite is None:
+        suite = trajectory[-1].get("suite")
+    matching = [e for e in trajectory if e.get("suite") == suite]
+    if not matching:
+        raise SystemExit(f"bench_gate: no entries for suite {suite!r}")
+    current = matching[-1]
+    prev = next((e for e in reversed(matching[:-1])
+                 if e.get("sha") != current.get("sha")), None)
+    return current, prev
+
+
+def compare(current: dict, prev: dict, threshold: float):
+    """Rows of (key, prev_s, cur_s, ratio, gated_regression) over the wall
+    metrics; falls back to per-module seconds when a side has no metrics."""
+    cur_m, prev_m = current.get("metrics") or {}, prev.get("metrics") or {}
+    if not cur_m or not prev_m:
+        cur_m = current.get("modules") or {}
+        prev_m = prev.get("modules") or {}
+    rows = []
+    for key in sorted(set(cur_m) | set(prev_m)):
+        c, p = cur_m.get(key), prev_m.get(key)
+        if not (isinstance(c, (int, float)) and isinstance(p, (int, float))):
+            rows.append((key, p, c, None, False))
+            continue
+        ratio = c / p if p > 0 else float("inf")
+        gated = (ratio > 1.0 + threshold
+                 and max(c, p) >= MIN_GATED_SECONDS)
+        rows.append((key, p, c, ratio, gated))
+    return rows
+
+
+def _fmt(val) -> str:
+    if val is None:
+        return "-"
+    return f"{val:.3f}" if isinstance(val, float) else str(val)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--path", default=DEFAULT_PATH)
+    ap.add_argument("--suite", default=None,
+                    help="gate this suite (default: suite of the last entry)")
+    ap.add_argument("--threshold", type=float, default=None,
+                    help=f"fractional regression tolerance "
+                         f"(default {DEFAULT_THRESHOLD})")
+    ap.add_argument("--smoke", action="store_true",
+                    help=f"loose tolerance ({SMOKE_THRESHOLD:.0%}) for noisy "
+                         f"shared CI runners")
+    args = ap.parse_args(argv)
+    threshold = args.threshold if args.threshold is not None else (
+        SMOKE_THRESHOLD if args.smoke else DEFAULT_THRESHOLD)
+
+    trajectory = load_trajectory(pathlib.Path(args.path))
+    current, prev = pick_entries(trajectory, args.suite)
+    sha, suite = current.get("sha"), current.get("suite")
+    print(f"bench_gate: suite={suite!r} current sha={sha} "
+          f"recorded={current.get('recorded_at')}")
+
+    if current.get("failures"):
+        print(f"bench_gate: FAIL — current entry recorded module failures: "
+              f"{current['failures']}")
+        return 1
+    if prev is None:
+        print("bench_gate: PASS — no prior entry for this suite; "
+              "this run is the baseline")
+        return 0
+
+    print(f"bench_gate: comparing against sha={prev.get('sha')} "
+          f"recorded={prev.get('recorded_at')} "
+          f"(tolerance {threshold:.0%})")
+    env_c, env_p = current.get("env") or {}, prev.get("env") or {}
+    drift = [k for k in _ENV_COMPARE if env_c.get(k) != env_p.get(k)]
+    if drift:
+        print(f"bench_gate: WARNING — env fingerprint drift on {drift}; "
+              f"numbers may not be comparable")
+
+    rows = compare(current, prev, threshold)
+    regressions = [r for r in rows if r[4]]
+    width = max([len(r[0]) for r in rows] + [6])
+    print(f"  {'metric':<{width}}  {'prev_s':>9}  {'cur_s':>9}  "
+          f"{'ratio':>6}  flag")
+    for key, p, c, ratio, gated in rows:
+        flag = ("REGRESSED" if gated else
+                "new" if p is None else
+                "gone" if c is None else "")
+        print(f"  {key:<{width}}  {_fmt(p):>9}  {_fmt(c):>9}  "
+              f"{_fmt(ratio):>6}  {flag}")
+
+    if regressions:
+        print(f"bench_gate: FAIL — {len(regressions)} metric(s) regressed "
+              f"more than {threshold:.0%}")
+        return 1
+    print("bench_gate: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

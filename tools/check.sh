@@ -1,25 +1,49 @@
 #!/usr/bin/env bash
 # CI-style smoke check: tier-1 test suite + one reduced end-to-end analytic
 # training run through the engine (backbone forward → streaming Gram stats →
-# solve). Run from anywhere; ~2-4 min on CPU.
+# solve) + the quick solve-kernel bench behind the perf-regression gate.
+# Run from anywhere; ~3-5 min on CPU.
 #
-#   tools/check.sh            # full tier-1 pytest + reduced train run
-#   tools/check.sh --fast     # -x (stop at first failure) variant
+#   tools/check.sh            # full tier-1 pytest + reduced train run + bench
+#   tools/check.sh --fast     # -x (stop at first failure) variant, no bench
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# Environment truth (SNIPPETS.md): tcmalloc when present, and silence its
+# large-alloc reports. Harmless for pytest, required for comparable bench
+# numbers (benchmarks/env_truth.py records the effective set per entry).
+TCMALLOC_SO=/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4
+if [[ -z "${LD_PRELOAD:-}" && -e "$TCMALLOC_SO" ]]; then
+  export LD_PRELOAD="$TCMALLOC_SO"
+fi
+export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD=60000000000
+
 PYTEST_ARGS=(-q)
+RUN_BENCH=1
 if [[ "${1:-}" == "--fast" ]]; then
   PYTEST_ARGS=(-x -q)
+  RUN_BENCH=0
 fi
 
+# Tier-1 runs under the default dtype config on purpose: the x64 double
+# config below is bench truth, but globally forcing JAX_ENABLE_X64 changes
+# index/scalar dtypes that several tier-1 suites pin to 32-bit.
 echo "== tier-1: pytest ${PYTEST_ARGS[*]}"
 python -m pytest "${PYTEST_ARGS[@]}"
 
 echo "== smoke: reduced analytic training run (launch/train.py)"
 python -m repro.launch.train --arch minicpm_2b --mode analytic --reduced \
     --samples 512 --seq 16 --classes 8 --batch 64
+
+if [[ "$RUN_BENCH" == "1" ]]; then
+  # The double config (f64 allowed, f32 default) scoped to the bench step:
+  # recorded numbers must match the env fingerprint in BENCH_solve.json.
+  echo "== bench: quick solve-kernel suite + perf-regression gate"
+  JAX_ENABLE_X64=1 JAX_DEFAULT_DTYPE_BITS=32 \
+    python -m benchmarks.run --quick --only solve_kernels_bench
+  python tools/bench_gate.py --smoke --suite quick:solve_kernels_bench
+fi
 
 echo "== check.sh OK"
