@@ -1,0 +1,116 @@
+"""Elastic federation benchmark: what a migration actually costs.
+
+Three operational moves introduced by the elastic rung, each timed wall-clock
+so the runbook in README §"Operate it" can quote real numbers:
+
+  * **reshard restore** — ``ShardedCoordinator.from_state(state,
+    num_shards=n)``: cold-start a checkpoint onto a different shard count.
+    The AA law makes this exact (merge = migration), so the only cost is the
+    disjoint row-block split + device placement, O(d²) per shard.
+  * **live grow/shrink** — ``coord.grow(n)`` / ``coord.shrink(n)`` on a
+    serving coordinator: merge/fold of per-shard statistics plus solve-cache
+    invalidation, no checkpoint round-trip.
+  * **snapshot cycle** — ``SnapshotDaemon.snapshot_once`` (state pull +
+    versioned directory write) and the matching ``restore`` back into a
+    coordinator: the failover path's RPO tick and its recovery wall.
+
+Each row reports the post-move solve parity against a single-server oracle
+(``dw``) alongside the wall — the benchmark doubles as an exactness audit at
+benchmark scale (d here ≫ the unit-test d=24).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.checkpoint import SnapshotDaemon
+from repro.fl import AFLServer, ShardedCoordinator, make_report
+
+from benchmarks.common import print_table
+
+GAMMA = 1.0
+
+
+def _population(d, c, n_clients, rows_each, seed=0):
+    rng = np.random.default_rng(seed)
+    n = n_clients * rows_each
+    x = rng.standard_normal((n, d))
+    y = np.eye(c)[rng.integers(0, c, n)]
+    return [make_report(k, x[k * rows_each:(k + 1) * rows_each],
+                        y[k * rows_each:(k + 1) * rows_each], GAMMA)
+            for k in range(n_clients)]
+
+
+def _dw(coord, oracle_w) -> float:
+    return float(np.abs(np.asarray(coord.solve(), np.float64)
+                        - oracle_w).max())
+
+
+def run(quick: bool = False):
+    d, c = (256, 20) if quick else (1024, 50)
+    n_clients, rows_each = (16, 32) if quick else (64, 64)
+    reps = _population(d, c, n_clients, rows_each)
+
+    oracle = AFLServer(d, c, gamma=GAMMA)
+    oracle.submit_many(reps)
+    oracle_w = np.asarray(oracle.solve(), np.float64)
+    state = oracle.state()
+
+    rows = []
+
+    # -- reshard restore: checkpoint → n shards, n sweeping the mesh sizes
+    for n in (1, 2, 4, 8):
+        t0 = time.perf_counter()
+        coord = ShardedCoordinator.from_state(state, num_shards=n)
+        restore_s = time.perf_counter() - t0
+        rows.append({"bench": "reshard_restore", "d": d, "shards": n,
+                     "restore_s": round(restore_s, 4),
+                     "dw": _dw(coord, oracle_w)})
+
+    # -- live resize on a serving coordinator (no checkpoint round-trip)
+    coord = ShardedCoordinator(d, c, gamma=GAMMA, num_shards=2)
+    coord.submit_many(reps)
+    coord.solve()
+    t0 = time.perf_counter()
+    coord.grow(6)                       # 2 → 8
+    grow_s = time.perf_counter() - t0
+    dw_grow = _dw(coord, oracle_w)
+    t0 = time.perf_counter()
+    coord.shrink(6)                     # 8 → 2
+    shrink_s = time.perf_counter() - t0
+    rows.append({"bench": "live_resize", "d": d, "shards": 8,
+                 "grow_s": round(grow_s, 4),
+                 "shrink_s": round(shrink_s, 4),
+                 "dw": max(dw_grow, _dw(coord, oracle_w))})
+
+    # -- snapshot cycle: daemon pull+write, then cold-start restore
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as tmp:
+        daemon = SnapshotDaemon(oracle, directory=tmp, interval=3600)
+        t0 = time.perf_counter()
+        daemon.snapshot_once()
+        snap_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        restored = daemon.restore(cls=ShardedCoordinator, num_shards=4)
+        restore_s = time.perf_counter() - t0
+        rows.append({"bench": "snapshot_cycle", "d": d, "shards": 4,
+                     "snapshot_s": round(snap_s, 4),
+                     "restore_s": round(restore_s, 4),
+                     "dw": _dw(restored, oracle_w)})
+
+    print_table(
+        f"Elastic federation — migration cost (d={d}, C={c}, "
+        f"{n_clients} clients)",
+        ["bench", "shards", "wall", "max|ΔW| vs oracle"],
+        [[r["bench"], r["shards"],
+          " ".join(f"{k[:-2]}={r[k]*1e3:.1f}ms"
+                   for k in r if k.endswith("_s")),
+          f"{r['dw']:.2e}"] for r in rows])
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=True)

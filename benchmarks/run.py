@@ -36,6 +36,8 @@ MODULES = [
     ("kahan_f32_bench", "Kahan-compensated f32 vs f64-on-device (AFLClient)"),
     ("solve_kernels_bench",
      "Solve kernels — fused γ-sweep, batched factor, tiled d=6144"),
+    ("elastic_bench",
+     "Elastic federation — reshard/resize/snapshot migration cost"),
     ("roofline", "§Roofline — dry-run derived"),
 ]
 

@@ -29,7 +29,8 @@ from typing import Any, Dict, Optional
 import jax
 import numpy as np
 
-__all__ = ["save", "restore", "save_server", "load_server"]
+__all__ = ["save", "restore", "save_server", "load_server",
+           "SnapshotDaemon"]
 
 _SEP = "/"
 
@@ -108,12 +109,18 @@ def save_server(path, server, metadata: Optional[dict] = None) -> None:
     save(path, state, metadata=meta)
 
 
-def load_server(path, cls=None):
+def load_server(path, cls=None, **kwargs):
     """Restore a coordinator: :class:`repro.fl.api.AFLServer` by default, or
     any ``cls`` with the protocol's ``from_state`` (e.g. ShardedCoordinator,
-    AsyncAFLServer)."""
+    AsyncAFLServer). Extra kwargs pass through to ``from_state`` — e.g.
+    ``num_shards=8`` to reshard an elastic restore, ``tiled_gram=True`` for
+    the row-tiled layout."""
     if cls is None:
         from repro.fl.api import AFLServer as cls
 
     state = restore(path)
-    return cls.from_state(state)
+    return cls.from_state(state, **kwargs)
+
+
+# at the bottom: snapshot.py imports this module for save/load_server
+from repro.checkpoint.snapshot import SnapshotDaemon  # noqa: E402

@@ -1,0 +1,172 @@
+"""The snapshot daemon: checkpoint-over-wire pulls for failover.
+
+AFL's one-state-schema property (every coordinator kind writes and restores
+the same ``state()`` dict) means a *single* periodic puller gives any
+federation durable failover: snapshot the live service over the wire, and a
+replacement coordinator — of ANY kind, on ANY shard count — cold-starts from
+the latest snapshot with zero aggregation loss for everything the snapshot
+saw. The AA law does the rest: clients that reported after the snapshot
+simply resubmit (the service's idempotent ingest and duplicate-client guard
+make that safe), and the restored aggregate is exact, not approximate.
+
+:class:`SnapshotDaemon` is deliberately dumb: pull ``state``, write a
+versioned checkpoint directory, prune old ones, repeat — and *survive*
+outages (a dead service is the exact moment the existing snapshots matter,
+so a failed pull is recorded and retried, never fatal). ``tools/snapshotd.py``
+is the CLI wrapper; the failover drill in ``tests/test_elastic.py`` and
+``examples/failover_drill.py`` exercise kill → restore end-to-end.
+
+Snapshot naming: ``snap-{version:012d}`` where version is the federation's
+submission version at pull time — monotone under ingest, so lexicographic
+order IS recency order and ``latest()`` is a directory listing.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import threading
+import time
+from typing import Any, List, Optional, Tuple
+
+import repro.checkpoint as ckpt
+
+__all__ = ["SnapshotDaemon"]
+
+
+class SnapshotDaemon:
+    """Periodically snapshot a live federation to versioned checkpoints.
+
+    ``source`` may be a service URL string, a
+    :class:`~repro.fl.service.FederationService`, any transport object, or
+    a local coordinator — anything a
+    :class:`~repro.fl.service.RemoteCoordinator` can speak to, or anything
+    with a ``state()`` method. The connection is made lazily per pull, so
+    the daemon can be constructed (and keeps running) while the service is
+    down.
+
+    >>> d = SnapshotDaemon(srv.url, directory=tmp, interval=0.5, keep=3)
+    >>> d.start()                      # background thread
+    >>> ...                            # coordinator dies
+    >>> coord = d.restore(ShardedCoordinator, num_shards=8)
+    >>> d.stop()
+    """
+
+    def __init__(self, source: Any, *, directory, interval: float = 30.0,
+                 keep: int = 5, federation: str = "default"):
+        self.source = source
+        self.directory = pathlib.Path(directory)
+        self.interval = float(interval)
+        self.keep = int(keep)
+        self.federation = str(federation)
+        self.errors: List[Tuple[float, str]] = []   # (monotonic time, msg)
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # -- one pull -----------------------------------------------------------
+
+    def _pull_state(self):
+        if hasattr(self.source, "state") and not hasattr(
+                self.source, "handle"):
+            return self.source.state(), type(self.source).__name__
+        from repro.fl.service import RemoteCoordinator
+
+        # per-pull client: a stale connection to a restarted service must
+        # never wedge the daemon
+        remote = RemoteCoordinator(self.source, federation=self.federation)
+        try:
+            return remote.state(), remote.kind
+        finally:
+            remote.close()
+
+    def snapshot_once(self) -> Optional[pathlib.Path]:
+        """Pull and persist one snapshot; returns its directory, or ``None``
+        when this version is already on disk (an idempotent no-op)."""
+        state, kind = self._pull_state()
+        version = int(len(state["seen"]))
+        path = self.directory / f"snap-{version:012d}"
+        if (path / "manifest.json").exists():
+            return None
+        ckpt.save(path, dict(state),
+                  metadata={"federation": self.federation,
+                            "source_kind": kind, "version": version})
+        self.prune()
+        return path
+
+    def prune(self) -> None:
+        """Drop all but the newest ``keep`` snapshots."""
+        for path in self.snapshots()[:-self.keep] if self.keep > 0 else []:
+            for f in sorted(path.iterdir(), reverse=True):
+                f.unlink()
+            path.rmdir()
+
+    # -- the archive --------------------------------------------------------
+
+    def snapshots(self) -> List[pathlib.Path]:
+        """Complete snapshot directories, oldest → newest."""
+        if not self.directory.is_dir():
+            return []
+        return sorted(p for p in self.directory.glob("snap-*")
+                      if (p / "manifest.json").exists())
+
+    def latest(self) -> Optional[pathlib.Path]:
+        snaps = self.snapshots()
+        return snaps[-1] if snaps else None
+
+    @property
+    def latest_version(self) -> Optional[int]:
+        latest = self.latest()
+        return None if latest is None else int(latest.name.split("-")[-1])
+
+    def restore(self, cls=None, **kwargs):
+        """Cold-start a replacement coordinator from the latest snapshot —
+        any kind, any shard count (``cls``/kwargs go to ``from_state``)."""
+        latest = self.latest()
+        if latest is None:
+            raise FileNotFoundError(
+                f"no snapshots under {self.directory} — nothing to restore")
+        return ckpt.load_server(latest, cls, **kwargs)
+
+    # -- the daemon loop ----------------------------------------------------
+
+    def start(self) -> "SnapshotDaemon":
+        if self._thread is None:
+            self._stop.clear()
+            self._thread = threading.Thread(
+                target=self._run, daemon=True, name="afl-snapshotd")
+            self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=max(5.0, 2 * self.interval))
+            self._thread = None
+
+    def wait_for_version(self, version: int,
+                         timeout: float = 30.0) -> bool:
+        """Block until a snapshot at ≥ ``version`` exists (the drill's
+        deterministic cut point), or the timeout expires."""
+        deadline = time.monotonic() + float(timeout)
+        while time.monotonic() < deadline:
+            v = self.latest_version
+            if v is not None and v >= int(version):
+                return True
+            time.sleep(min(0.02, max(self.interval / 4, 0.002)))
+        return False
+
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            try:
+                self.snapshot_once()
+            except Exception as exc:                   # noqa: BLE001
+                # an unreachable service is the daemon's reason to exist:
+                # record, keep the existing snapshots, try again next tick
+                self.errors.append((time.monotonic(),
+                                    f"{type(exc).__name__}: {exc}"))
+            self._stop.wait(self.interval)
+
+    def __enter__(self) -> "SnapshotDaemon":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()

@@ -21,6 +21,7 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
@@ -30,6 +31,7 @@ from repro.core.streaming import AnalyticState, to_stats
 __all__ = [
     "psum_stats",
     "psum_state",
+    "federation_mesh",
     "federated_solve",
     "federated_solve_no_ri",
     "make_federated_solve",
@@ -37,6 +39,29 @@ __all__ = [
 ]
 
 _ENGINE = AnalyticEngine("jax")
+
+
+def federation_mesh(n_shards: int, axis_names: Sequence[str] = ("data",),
+                    *, devices=None) -> Mesh:
+    """A 1-axis federation mesh over the first ``n_shards`` devices.
+
+    The elastic coordinator (``ShardedCoordinator.grow/shrink`` and the
+    shard-count-changing ``from_state``) admits and retires mesh devices
+    through this single constructor, so "which devices back n shards" has
+    one answer everywhere. More shards than devices is a caller error —
+    the tiled-Gram layout is one row tile per device.
+    """
+    devices = list(jax.devices() if devices is None else devices)
+    n = int(n_shards)
+    if n < 1:
+        raise ValueError(f"a federation mesh needs ≥1 shard, got {n}")
+    if n > len(devices):
+        raise ValueError(
+            f"{n} shards need {n} devices, only {len(devices)} available")
+    if len(tuple(axis_names)) != 1:
+        raise ValueError(
+            f"federation_mesh builds 1-axis meshes, got {tuple(axis_names)}")
+    return Mesh(np.array(devices[:n]), tuple(axis_names))
 
 
 def psum_stats(stats: SuffStats, axis_names: Sequence[str]) -> SuffStats:

@@ -45,7 +45,8 @@ import numpy as np
 
 from repro.core.engine import (AnalyticEngine, Factorization, SuffStats,
                                SweepFactorization, SweepRefreshNeeded)
-from repro.fl.errors import (DuplicateClient, EmptyFederation, GammaMismatch)
+from repro.fl.errors import (BadRequest, Backpressure, DuplicateClient,
+                             EmptyFederation, GammaMismatch)
 
 __all__ = [
     "SCHEMA_VERSION",
@@ -430,14 +431,50 @@ def _restore_stats(state: Dict[str, np.ndarray], gamma: float, dim: int):
     schema every coordinator writes (regularized aggregate → raw + k)."""
     seen = set(int(i) for i in state["seen"])
     k = len(seen)
+    gram = np.array(state["gram"], np.float64) - k * gamma * np.eye(dim)
+    diag = state.get("gram_diag_raw")
+    if diag is not None:
+        # The regularized form loses last-ulp diagonal bits to the
+        # +kγ − kγ round trip; checkpoints also carry the raw diagonal
+        # (d scalars — negligible next to the d² gram) so a restore is
+        # bit-for-bit lossless. Off-diagonal entries are untouched by
+        # regularization and were exact already.
+        np.fill_diagonal(gram, np.asarray(diag, np.float64))
     stats = SuffStats(
-        gram=np.array(state["gram"], np.float64) - k * gamma * np.eye(dim),
+        gram=gram,
         moment=np.array(state["moment"], np.float64),
         # older checkpoints predate the count field — restore as 0
         count=float(state.get("count", 0.0)),
         clients=float(k),
     )
     return stats, seen
+
+
+def _validate_state(state: Dict[str, np.ndarray],
+                    num_classes: Optional[int] = None) -> Tuple[int, int]:
+    """Up-front checkpoint validation shared by every ``from_state``:
+    returns ``(dim, num_classes)`` or raises the typed ``bad_request``.
+
+    Without this, a caller-supplied ``num_classes`` that contradicts the
+    checkpointed moment shape used to construct a coordinator whose solves
+    crashed much later with an opaque broadcasting error."""
+    try:
+        gram = np.asarray(state["gram"])
+        moment = np.asarray(state["moment"])
+    except KeyError as exc:
+        raise BadRequest(f"checkpoint missing key {exc}") from None
+    if gram.ndim != 2 or gram.shape[0] != gram.shape[1]:
+        raise BadRequest(f"checkpoint gram must be square, got {gram.shape}")
+    if moment.ndim != 2 or moment.shape[0] != gram.shape[0]:
+        raise BadRequest(
+            f"checkpoint moment shape {moment.shape} does not match "
+            f"gram dim {gram.shape[0]}")
+    classes = int(moment.shape[1])
+    if num_classes is not None and int(num_classes) != classes:
+        raise BadRequest(
+            f"num_classes={num_classes} contradicts the checkpoint moment "
+            f"shape {tuple(moment.shape)} ({classes} classes)")
+    return int(gram.shape[0]), classes
 
 
 @runtime_checkable
@@ -669,14 +706,16 @@ class AFLServer:
             "seen": np.array(sorted(self._seen), np.int64),
             "gamma": np.float64(self.gamma),
             "count": np.float64(self._stats.count),
+            # raw diagonal rider: restores undo +kγ on the diagonal, which
+            # rounds — carrying the d raw entries makes restore bit-lossless
+            "gram_diag_raw": np.array(np.diag(self._stats.gram), np.float64),
         }
 
     @classmethod
     def from_state(cls, state: Dict[str, np.ndarray],
                    num_classes: Optional[int] = None) -> "AFLServer":
-        dim = state["gram"].shape[0]
-        srv = cls(dim, num_classes or state["moment"].shape[1],
-                  float(state["gamma"]))
+        dim, classes = _validate_state(state, num_classes)
+        srv = cls(dim, classes, float(state["gamma"]))
         srv._stats, srv._seen = _restore_stats(state, srv.gamma, dim)
         srv._version = len(srv._seen)
         return srv
@@ -743,48 +782,46 @@ class ShardedCoordinator:
     def __init__(self, dim: int, num_classes: int, gamma: float = 1.0,
                  *, mesh=None, axis_names: Optional[Sequence[str]] = None,
                  placement: str = "load_aware", tiled_gram: bool = False,
-                 distributed_factor: bool = True):
+                 distributed_factor: bool = True,
+                 num_shards: Optional[int] = None):
         import jax
 
         self.dim = dim
         self.num_classes = num_classes
         self.gamma = gamma
         self.engine = AnalyticEngine("numpy_f64", gamma=gamma)
+        self.tiled_gram = bool(tiled_gram)
+        if num_shards is not None and int(num_shards) < 1:
+            raise BadRequest(f"num_shards must be ≥1, got {num_shards}")
         if mesh is None:
-            mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+            if num_shards is None:
+                mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+            else:
+                # tiled mode keeps one row tile per device, so the mesh IS
+                # the shard count; non-tiled shards are host accumulators —
+                # logical, grouped onto however many devices exist
+                mesh = self._make_mesh(
+                    int(num_shards), axis_names or ("data",))
         self.mesh = mesh
         self.axis_names = tuple(axis_names) if axis_names is not None \
             else tuple(mesh.axis_names)
-        n_shards = 1
-        for a in self.axis_names:
-            n_shards *= mesh.shape[a]
+        n_shards = (self._mesh_size() if num_shards is None
+                    else int(num_shards))
+        if self.tiled_gram and n_shards != self._mesh_size():
+            raise BadRequest(
+                f"tiled_gram keeps one row tile per mesh device: "
+                f"num_shards={n_shards} != mesh size {self._mesh_size()}")
+        if not self.tiled_gram and n_shards < self._mesh_size():
+            raise BadRequest(
+                f"num_shards={n_shards} < mesh size {self._mesh_size()} — "
+                "logical shards group onto devices, never the reverse")
         if placement not in ("load_aware", "round_robin"):
             raise ValueError(f"unknown placement policy {placement!r} "
                              "(load_aware | round_robin)")
         self.placement = placement
-        self.tiled_gram = bool(tiled_gram)
         self.distributed_factor = bool(distributed_factor)
         if self.tiled_gram:
-            # indivisible dims pad up to the next tile multiple; prefer
-            # 8-row-aligned tiles (Pallas panel widths divide the tile) when
-            # alignment keeps the pad under one tile
-            rows = -(-dim // n_shards)
-            if rows >= 16:
-                r8 = ((rows + 7) // 8) * 8
-                if n_shards * r8 - dim < r8:
-                    rows = r8
-            if n_shards * rows - dim >= rows:
-                raise ValueError(
-                    f"tiled_gram would pad dim={dim} by a full tile on "
-                    f"{n_shards} shards (tile_rows={rows}) — use fewer "
-                    f"shards or a wider head")
-            self._tile_rows = rows
-            self._dim_padded = n_shards * rows
-            self._gram_tiles: List[np.ndarray] = [
-                np.zeros((rows, self._dim_padded)) for _ in range(n_shards)]
-            self._moment_tiles: List[np.ndarray] = [
-                np.zeros((rows, num_classes)) for _ in range(n_shards)]
-            self._count = 0.0
+            self._init_tiles(n_shards)
             self._shards: List[SuffStats] = []
         else:
             self._shards = [
@@ -793,8 +830,83 @@ class ShardedCoordinator:
         self._order = 0
         self._solve_fns: Dict[float, Any] = {}
         self._version = 0
+        self._mesh_epoch = 0
+        self._resizing = False
         self._etag_salt = uuid.uuid4().hex[:8]
         self._last_rebalance: Optional[Tuple[int, int]] = None
+
+    # -- elastic-mesh plumbing ----------------------------------------------
+
+    def _make_mesh(self, n_shards: int, axis_names: Sequence[str]):
+        """A mesh backing ``n_shards``: exactly that many devices in tiled
+        mode, else as many as exist (logical shards group onto them)."""
+        import jax
+
+        from repro.core.distributed import federation_mesh
+
+        n_dev = (n_shards if self.tiled_gram
+                 else min(n_shards, len(jax.devices())))
+        try:
+            return federation_mesh(n_dev, axis_names)
+        except ValueError as exc:
+            raise BadRequest(str(exc)) from None
+
+    def _mesh_size(self) -> int:
+        n = 1
+        for a in self.axis_names:
+            n *= self.mesh.shape[a]
+        return n
+
+    @staticmethod
+    def _plan_tile_rows(dim: int, n_shards: int) -> int:
+        """Rows per tile for ``dim`` over ``n_shards`` — indivisible dims
+        pad up to the next tile multiple; prefer 8-row-aligned tiles
+        (Pallas panel widths divide the tile) when alignment keeps the pad
+        under one tile."""
+        rows = -(-dim // n_shards)
+        if rows >= 16:
+            r8 = ((rows + 7) // 8) * 8
+            if n_shards * r8 - dim < r8:
+                rows = r8
+        if n_shards * rows - dim >= rows:
+            raise BadRequest(
+                f"tiled_gram would pad dim={dim} by a full tile on "
+                f"{n_shards} shards (tile_rows={rows}) — use fewer "
+                f"shards or a wider head")
+        return rows
+
+    def _init_tiles(self, n_shards: int) -> None:
+        rows = self._plan_tile_rows(self.dim, n_shards)
+        self._tile_rows = rows
+        self._dim_padded = n_shards * rows
+        self._gram_tiles: List[np.ndarray] = [
+            np.zeros((rows, self._dim_padded)) for _ in range(n_shards)]
+        self._moment_tiles: List[np.ndarray] = [
+            np.zeros((rows, self.num_classes)) for _ in range(n_shards)]
+        self._count = 0.0
+
+    def _scatter_tiles(self, gram: np.ndarray, moment: np.ndarray) -> None:
+        """Place true-dim aggregate rows into the per-shard row tiles
+        (pad rows stay zero) — the tiled restore/retile primitive."""
+        r = self._tile_rows
+        for i in range(self.num_shards):
+            lo, hi = i * r, min(i * r + r, self.dim)
+            if hi > lo:
+                self._gram_tiles[i][:hi - lo, :self.dim] = gram[lo:hi]
+                self._moment_tiles[i][:hi - lo] = moment[lo:hi]
+
+    def _check_resizing(self) -> None:
+        if self._resizing:
+            raise Backpressure(
+                f"mesh resize in flight (epoch {self._mesh_epoch} → "
+                f"{self._mesh_epoch + 1}) — back off and retry")
+
+    @property
+    def mesh_epoch(self) -> int:
+        """Bumps on every completed :meth:`grow`/:meth:`shrink`. In-flight
+        requests that race a resize get a retryable backpressure error, so
+        an epoch observed around a call brackets which mesh answered it."""
+        return self._mesh_epoch
 
     @property
     def num_shards(self) -> int:
@@ -834,6 +946,7 @@ class ShardedCoordinator:
         Returns True — the sharded backend keeps no host factor cache to
         invalidate (the device program refactors per solve), so every
         arrival 'survives'."""
+        self._check_resizing()
         upload = _ingest_upload(report, dim=self.dim, gamma=self.gamma,
                                 seen=self._seen)
         if self.tiled_gram:
@@ -886,6 +999,7 @@ class ShardedCoordinator:
         between two shards forever — at most one migration is performed per
         submission epoch).
         """
+        self._check_resizing()
         if self.tiled_gram:
             return None
         occ = self.occupancy()
@@ -903,6 +1017,76 @@ class ShardedCoordinator:
         self._order = src                  # fill the vacated shard next
         self._last_rebalance = (self._version, dst)
         return src, dst
+
+    def grow(self, n: int = 1) -> int:
+        """Admit ``n`` fresh empty shards mid-federation.
+
+        Exact by the AA law: the aggregate is a sum over shards and the new
+        shards join empty, so every solve is invariant. Load-aware placement
+        then fills the admitted shards first. In tiled-Gram mode the global
+        Gram is re-tiled to the new row plan (one tile per device, so growth
+        needs that many devices). Returns the new :attr:`mesh_epoch`.
+        """
+        if int(n) < 1:
+            raise BadRequest(f"grow() admits ≥1 shard, got {n}")
+        return self._resize(self.num_shards + int(n))
+
+    def shrink(self, n: int = 1) -> int:
+        """Retire the ``n`` highest-numbered shards, folding their
+        statistics into the survivors (shard ``i`` → ``i % remaining`` —
+        merge = migration, so solves are invariant). At least one shard must
+        survive. Returns the new :attr:`mesh_epoch`."""
+        if int(n) < 1:
+            raise BadRequest(f"shrink() retires ≥1 shard, got {n}")
+        if int(n) >= self.num_shards:
+            raise BadRequest(
+                f"cannot retire {n} of {self.num_shards} shards — at least "
+                "one must survive")
+        return self._resize(self.num_shards - int(n))
+
+    def _resize(self, new_count: int) -> int:
+        """Re-shard to ``new_count`` under the epoch guard: validate the new
+        mesh and tile plan FIRST (a rejected resize must leave the
+        coordinator untouched), then migrate, then bump the epoch. Requests
+        racing the migration window get retryable :class:`Backpressure`."""
+        new_count = int(new_count)
+        if new_count == self.num_shards:
+            return self._mesh_epoch
+        if self.tiled_gram:
+            rows = self._plan_tile_rows(self.dim, new_count)
+        new_mesh = self._make_mesh(new_count, self.axis_names)
+        self._resizing = True
+        try:
+            if self.tiled_gram:
+                agg = self._merged()       # true-dim rows, old tile plan
+                self._tile_rows = rows
+                self._dim_padded = new_count * rows
+                self._gram_tiles = [
+                    np.zeros((rows, self._dim_padded))
+                    for _ in range(new_count)]
+                self._moment_tiles = [
+                    np.zeros((rows, self.num_classes))
+                    for _ in range(new_count)]
+                self._scatter_tiles(np.asarray(agg.gram, np.float64),
+                                    np.asarray(agg.moment, np.float64))
+            elif new_count > self.num_shards:
+                self._shards = self._shards + [
+                    self.engine.init(self.dim, self.num_classes)
+                    for _ in range(new_count - self.num_shards)]
+            else:
+                kept = list(self._shards[:new_count])
+                for i in range(new_count, self.num_shards):
+                    j = i % new_count
+                    kept[j] = self.engine.merge(kept[j], self._shards[i])
+                self._shards = kept
+            self.mesh = new_mesh
+            self._solve_fns.clear()        # compiled for the old mesh
+            self._last_rebalance = None
+            self._etag_salt = uuid.uuid4().hex[:8]
+            self._mesh_epoch += 1
+        finally:
+            self._resizing = False
+        return self._mesh_epoch
 
     def _merged(self) -> SuffStats:
         if self.tiled_gram:
@@ -922,16 +1106,31 @@ class ShardedCoordinator:
     def _stacked(self):
         """Per-shard statistics stacked on a leading federation dim, as the
         3-leaf :class:`~repro.core.streaming.AnalyticState` the collective
-        consumes (clients bookkeeping is irrelevant under RI)."""
+        consumes (clients bookkeeping is irrelevant under RI).
+
+        Logical shards may outnumber mesh devices (non-tiled shards are host
+        accumulators); device ``g`` then carries the host-f64 merge of
+        logical shards ``g, g+m, g+2m, …`` — additive, so the psummed
+        aggregate is unchanged."""
         import jax.numpy as jnp
 
         from repro.core.streaming import AnalyticState
 
+        m = self._mesh_size()
+        if m == self.num_shards:
+            groups: List[SuffStats] = self._shards
+        else:
+            groups = []
+            for g in range(m):
+                agg = self._shards[g]
+                for s in self._shards[g + m::m]:
+                    agg = self.engine.merge(agg, s)
+                groups.append(agg)
         return AnalyticState(
-            gram=jnp.asarray(np.stack([s.gram for s in self._shards])),
-            moment=jnp.asarray(np.stack([s.moment for s in self._shards])),
+            gram=jnp.asarray(np.stack([s.gram for s in groups])),
+            moment=jnp.asarray(np.stack([s.moment for s in groups])),
             count=jnp.asarray(np.stack(
-                [np.float64(s.count) for s in self._shards])),
+                [np.float64(s.count) for s in groups])),
         )
 
     def solve(self, target_gamma: float = 0.0) -> np.ndarray:
@@ -943,6 +1142,7 @@ class ShardedCoordinator:
 
         import jax.numpy as jnp
 
+        self._check_resizing()
         if not self._seen:
             raise EmptyFederation("no clients aggregated")
         key = float(target_gamma)
@@ -976,6 +1176,7 @@ class ShardedCoordinator:
     def solve_multi_gamma(self, gammas: Sequence[float]) -> list[np.ndarray]:
         """γ model sweep on the merged statistics (host engine, one eigh) —
         identical math to :meth:`AFLServer.solve_multi_gamma`."""
+        self._check_resizing()
         if not self._seen:
             raise EmptyFederation("no clients aggregated")
         return self.engine.solve_multi_gamma(self._merged(), gammas)
@@ -1002,15 +1203,59 @@ class ShardedCoordinator:
         kinds are interchangeable across a save/restore boundary — plus
         ``shard_clients``, the per-shard occupancy (extra keys are ignored
         by every ``from_state``, so interchange still holds)."""
+        self._check_resizing()
         agg = self._merged()
         return {
             "gram": self.engine.regularized_gram(agg).copy(),
             "moment": agg.moment.copy(),
+            "gram_diag_raw": np.array(np.diag(agg.gram), np.float64),
             "seen": np.array(sorted(self._seen), np.int64),
             "gamma": np.float64(self.gamma),
             "count": np.float64(agg.count),
             "shard_clients": np.array(self.occupancy(), np.int64),
         }
+
+    def _restore_split(self, stats: SuffStats,
+                       shard_clients=None) -> None:
+        """Split a restored aggregate across the shards as disjoint row
+        blocks: shard ``i`` holds rows ``[i·r, (i+1)·r)`` of the aggregate
+        Gram/moment and zeros elsewhere, so the shard sum reproduces the
+        aggregate *bitwise* (0 + x = x) on any shard count. The sample
+        count rides whole on shard 0 for the same reason.
+
+        Occupancy is reconstructed from the checkpointed ``shard_clients``
+        folded onto this shard count (old shard ``i`` → ``i % n``). Tiled
+        checkpoints record resident rows there, not clients — when the
+        folded counts don't account for every seen client, fall back to an
+        even client split."""
+        n = self.num_shards
+        dim = self.dim
+        gram = np.asarray(stats.gram, np.float64)
+        moment = np.asarray(stats.moment, np.float64)
+        clients = None
+        if shard_clients is not None:
+            folded = [0] * n
+            for i, c in enumerate(np.asarray(shard_clients, np.int64)):
+                folded[i % n] += int(c)
+            if sum(folded) == int(stats.clients):
+                clients = folded
+        if clients is None:
+            k, rem = divmod(int(stats.clients), n)
+            clients = [k + (1 if i < rem else 0) for i in range(n)]
+        r = -(-dim // n)
+        shards = []
+        for i in range(n):
+            g = np.zeros((dim, dim))
+            m = np.zeros((dim, moment.shape[1]))
+            lo, hi = i * r, min(i * r + r, dim)
+            if hi > lo:
+                g[lo:hi] = gram[lo:hi]
+                m[lo:hi] = moment[lo:hi]
+            shards.append(SuffStats(
+                gram=g, moment=m,
+                count=float(stats.count) if i == 0 else 0.0,
+                clients=float(clients[i])))
+        self._shards = shards
 
     @classmethod
     def from_state(cls, state: Dict[str, np.ndarray],
@@ -1018,28 +1263,25 @@ class ShardedCoordinator:
                    mesh=None, axis_names: Optional[Sequence[str]] = None,
                    placement: str = "load_aware", tiled_gram: bool = False,
                    distributed_factor: bool = True,
+                   num_shards: Optional[int] = None,
                    ) -> "ShardedCoordinator":
-        dim = state["gram"].shape[0]
-        coord = cls(dim, num_classes or state["moment"].shape[1],
-                    float(state["gamma"]), mesh=mesh, axis_names=axis_names,
-                    placement=placement, tiled_gram=tiled_gram,
-                    distributed_factor=distributed_factor)
+        """Cold-start from any coordinator kind's checkpoint, on ANY shard
+        count — resharding is exact because the statistics are additive
+        (merge = migration). ``num_shards`` defaults to one per device."""
+        dim, classes = _validate_state(state, num_classes)
+        coord = cls(dim, classes, float(state["gamma"]), mesh=mesh,
+                    axis_names=axis_names, placement=placement,
+                    tiled_gram=tiled_gram,
+                    distributed_factor=distributed_factor,
+                    num_shards=num_shards)
         stats, seen = _restore_stats(state, coord.gamma, dim)
         coord._seen = seen
         if tiled_gram:
-            r = coord._tile_rows
-            gram = np.asarray(stats.gram, np.float64)
-            moment = np.asarray(stats.moment, np.float64)
-            for i in range(coord.num_shards):
-                lo, hi = i * r, min(i * r + r, dim)
-                if hi > lo:
-                    coord._gram_tiles[i][:hi - lo, :dim] = gram[lo:hi]
-                    coord._moment_tiles[i][:hi - lo] = moment[lo:hi]
+            coord._scatter_tiles(np.asarray(stats.gram, np.float64),
+                                 np.asarray(stats.moment, np.float64))
             coord._count = float(stats.count)
         else:
-            # statistics are additive, so placement is free: restore into
-            # shard 0 (load-aware placement then fills the others first)
-            coord._shards[0] = stats
+            coord._restore_split(stats, state.get("shard_clients"))
         coord._order = len(coord._seen)
         coord._version = len(coord._seen)
         return coord

@@ -285,6 +285,13 @@ class AsyncAFLServer:
         async with self._lock:
             return self._server.state()
 
+    async def checkpoint(self) -> Dict[str, np.ndarray]:
+        """Drain-then-state: wait for every queued arrival to apply, then
+        snapshot — the consistent cut a failover daemon wants (a plain
+        :meth:`state` can miss reports still sitting in the ingest queue)."""
+        await self.join()
+        return await self.state()
+
     @classmethod
     def from_state(cls, state: Dict[str, np.ndarray],
                    num_classes: Optional[int] = None,

@@ -30,6 +30,7 @@ __all__ = [
     "GammaMismatch",
     "EmptyFederation",
     "Backpressure",
+    "Unavailable",
     "UnknownFederation",
     "ERROR_CODES",
     "from_code",
@@ -94,11 +95,23 @@ class EmptyFederation(ServiceError, ValueError):
 
 
 class Backpressure(ServiceError):
-    """The async ingest queue is at its high-watermark; the submission was
-    NOT aggregated. Retryable — back off and resubmit."""
+    """The async ingest queue is at its high-watermark — or a mesh resize
+    (grow/shrink) is migrating shards — and the submission was NOT
+    aggregated. Retryable — back off and resubmit."""
 
     code = "backpressure"
     http_status = 429
+    retryable = True
+
+
+class Unavailable(ServiceError):
+    """The federation exists but is temporarily not being served — its
+    coordinator died and a failover restore is in flight. Nothing was
+    applied. Retryable — back off until the replacement coordinator is
+    installed (``FederationService.restore_federation``)."""
+
+    code = "unavailable"
+    http_status = 503
     retryable = True
 
 
@@ -112,7 +125,7 @@ class UnknownFederation(ServiceError, KeyError):
 ERROR_CODES: Dict[str, Type[ServiceError]] = {
     cls.code: cls
     for cls in (BadRequest, CorruptReport, OversizedReport, DuplicateClient,
-                GammaMismatch, EmptyFederation, Backpressure,
+                GammaMismatch, EmptyFederation, Backpressure, Unavailable,
                 UnknownFederation)
 }
 

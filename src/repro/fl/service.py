@@ -216,6 +216,14 @@ class _Federation:
         self._lock = threading.RLock()
         self._loop: Optional[asyncio.AbstractEventLoop] = None
         self._thread: Optional[threading.Thread] = None
+        # idempotent-ingest ledger: client id → CRC-32 of the exact report
+        # payload the service accepted. A transport retry that re-delivers
+        # the identical bytes answers success instead of duplicate_client.
+        self.applied: Dict[int, int] = {}
+        # failover latch: while True the federation answers 503 unavailable
+        # (retryable) on every route — set when the coordinator dies,
+        # cleared by FederationService.restore_federation
+        self.suspended = False
 
     def start(self) -> "_Federation":
         if self.is_async and self._loop is None:
@@ -302,6 +310,30 @@ class FederationService:
         self._feds[str(federation_id)] = _Federation(coordinator).start()
         return self
 
+    def suspend_federation(self, federation_id: str = "default"):
+        """Take a federation out of service — the failover latch. Every
+        subsequent request answers the retryable ``unavailable`` 503 until
+        :meth:`restore_federation` installs a replacement coordinator.
+        Returns the (possibly dead) coordinator for post-mortems."""
+        fed = self._fed(federation_id)
+        fed.suspended = True
+        return fed.coordinator
+
+    def restore_federation(self, federation_id: str,
+                           coordinator) -> "FederationService":
+        """Install a replacement coordinator (e.g. cold-started from the
+        snapshot daemon's latest snapshot) and resume serving. The
+        idempotent-ingest ledger carries over, so a client retrying a
+        submit that straddled the outage still gets its idempotent
+        answer."""
+        old = self._fed(federation_id)
+        applied = dict(old.applied)
+        old.close()
+        fed = _Federation(coordinator).start()
+        fed.applied = applied
+        self._feds[str(federation_id)] = fed
+        return self
+
     def coordinator(self, federation_id: str = "default"):
         """The backing coordinator object (in-proc introspection/tests)."""
         return self._fed(federation_id).coordinator
@@ -338,6 +370,10 @@ class FederationService:
                 raise E.BadRequest(
                     f"unknown route {route!r} (one of {sorted(self._ROUTES)})")
             fed = self._fed(federation)
+            if fed.suspended:
+                raise E.Unavailable(
+                    f"federation {federation!r} is failing over — retry "
+                    "after the replacement coordinator is installed")
             return handler(self, fed, bytes(body)), 200
         except E.ServiceError as exc:
             return self._error(exc)
@@ -382,6 +418,16 @@ class FederationService:
                 f"{fed.pending} reports pending ≥ "
                 f"max_pending={self.max_pending}")
 
+    def _replayed(self, fed: _Federation, report: ClientReport,
+                  payload: bytes) -> Optional[int]:
+        """The idempotency check: the CRC of this exact payload if the
+        service already accepted it for this client id (a transport retry
+        whose first attempt landed — answer success, apply nothing), else
+        ``None``. A *different* payload under a known id falls through to
+        the coordinator's duplicate_client rejection."""
+        crc = zlib.crc32(payload)
+        return crc if fed.applied.get(report.client_id) == crc else None
+
     @staticmethod
     def _request_header(body: bytes) -> Tuple[dict, Dict[str, np.ndarray],
                                               bytes]:
@@ -393,7 +439,7 @@ class FederationService:
 
     def _r_describe(self, fed: _Federation, body: bytes) -> bytes:
         c = fed.coordinator
-        return self._ok({
+        info = {
             "kind": type(c).__name__,
             "dim": int(c.dim),
             "num_classes": int(c.num_classes),
@@ -402,15 +448,51 @@ class FederationService:
             "version": int(c.version),
             "pending": fed.pending,
             "max_report_bytes": self.max_report_bytes,
-        })
+        }
+        shards = getattr(c, "num_shards", None)
+        if shards is not None:
+            info["num_shards"] = int(shards)
+            info["mesh_epoch"] = int(getattr(c, "mesh_epoch", 0))
+        return self._ok(info)
+
+    def _r_grow(self, fed: _Federation, body: bytes) -> bytes:
+        return self._resize_route(fed, body, "grow")
+
+    def _r_shrink(self, fed: _Federation, body: bytes) -> bytes:
+        return self._resize_route(fed, body, "shrink")
+
+    def _resize_route(self, fed: _Federation, body: bytes,
+                      verb: str) -> bytes:
+        """``grow``/``shrink`` the hosted mesh by ``n`` shards (header key
+        ``n``, default 1). Only elastic coordinators support it; racing
+        requests surface the coordinator's retryable backpressure."""
+        header, _, _ = self._request_header(body)
+        n = int(header.get("n", 1))
+        c = fed.coordinator
+        if getattr(c, verb, None) is None:
+            raise E.BadRequest(
+                f"{type(c).__name__} is not elastic — no {verb}()")
+        epoch = fed.call(verb, n)
+        return self._ok({"mesh_epoch": int(epoch),
+                         "num_shards": int(c.num_shards),
+                         "version": int(c.version)})
 
     def _r_submit(self, fed: _Federation, body: bytes) -> bytes:
-        """Body = one raw :class:`ClientReport` payload → fold outcome."""
+        """Body = one raw :class:`ClientReport` payload → fold outcome.
+        Idempotent: re-delivery of the identical payload (client id + CRC)
+        answers success without touching the aggregate, so a transport may
+        safely replay a submit whose response was lost."""
         report = self._parse_report(body)
+        if self._replayed(fed, report, body) is not None:
+            c = fed.coordinator
+            return self._ok({"folded": True, "duplicate": True,
+                             "num_clients": int(c.num_clients),
+                             "version": int(c.version)})
         self._check_backpressure(fed)
         folded = fed.call("submit", report)
+        fed.applied[report.client_id] = zlib.crc32(body)
         c = fed.coordinator
-        return self._ok({"folded": bool(folded),
+        return self._ok({"folded": bool(folded), "duplicate": False,
                          "num_clients": int(c.num_clients),
                          "version": int(c.version)})
 
@@ -427,6 +509,10 @@ class FederationService:
         for frame in frames:
             try:
                 report = self._parse_report(frame)
+                if self._replayed(fed, report, frame) is not None:
+                    results.append({"ok": True, "duplicate": True})
+                    accepted += 1
+                    continue
                 if fed.is_async:
                     self._check_backpressure(fed)
                     fed.call("enqueue", report)
@@ -435,6 +521,7 @@ class FederationService:
                     folded = fed.call("submit", report)
                     results.append({"ok": True, "queued": False,
                                     "folded": bool(folded)})
+                fed.applied[report.client_id] = zlib.crc32(frame)
                 accepted += 1
             except E.ServiceError as exc:
                 results.append({"ok": False, "error": exc.code,
@@ -553,6 +640,8 @@ class FederationService:
         "weights": _r_weights,
         "state": _r_state,
         "personalized_solve": _r_personalized_solve,
+        "grow": _r_grow,
+        "shrink": _r_shrink,
     }
 
 
@@ -590,18 +679,17 @@ class HttpTransport:
     every submit/poll — the PR-4 ROADMAP rung. A pooled connection the
     server has since closed (idle timeout, restart) is detected on its next
     use and replaced with ONE transparent retry on a fresh connection —
-    with replay discipline: a failure while *sending* retries (the server
-    cannot have processed a request whose body never fully arrived), a
-    failure while *reading the response* retries only for read-only routes
-    (a mutating ``submit``/``submit_stream`` may already have been applied,
-    so replaying could double-apply — the error surfaces instead, and the
-    duplicate-client guard protects a caller who re-submits), and a
-    *timeout* is never retried. A failure on a *fresh* connection
-    propagates — that is a real transport error. ``keep_alive=False``
-    restores the one-shot connection-per-request behavior.
+    with replay discipline: a failure while *sending* or while *reading
+    the response* retries on the fresh socket — replaying a ``submit``
+    whose first attempt actually landed is safe because the service's
+    ingest is idempotent (a re-delivered identical payload, keyed on
+    client id + report CRC, answers success without double-applying,
+    instead of surfacing a spurious ``duplicate_client`` 409). A *timeout*
+    is never retried (the request may still be executing), and a failure
+    on a *fresh* connection propagates — that is a real transport error.
+    ``keep_alive=False`` restores the one-shot connection-per-request
+    behavior.
     """
-
-    _MUTATING_ROUTES = frozenset({"submit", "submit_stream"})
 
     def __init__(self, url: str, *, timeout: float = 60.0,
                  keep_alive: bool = True):
@@ -663,13 +751,10 @@ class HttpTransport:
                 return conn.getresponse().read()
             finally:
                 conn.close()
-        replay_ok = route not in self._MUTATING_ROUTES
         while True:
             conn, reused = self._pooled()
-            sent = False
             try:
                 conn.request("POST", path, body=body, headers=headers)
-                sent = True
                 resp = conn.getresponse()
                 data = resp.read()
                 if resp.will_close:
@@ -678,14 +763,14 @@ class HttpTransport:
             except (http.client.HTTPException, ConnectionError,
                     OSError) as exc:
                 self._discard()
-                if not reused or isinstance(exc, TimeoutError) or (
-                        sent and not replay_ok):
-                    # fresh socket: a real failure. Timeout, or a mutating
-                    # request that was already fully sent: the server may
-                    # have applied it — replaying could double-apply, so
+                if not reused or isinstance(exc, TimeoutError):
+                    # fresh socket: a real failure. Timeout: the request
+                    # may still be executing — replaying races it, so
                     # surface the error instead.
                     raise
-                # stale kept-alive socket — retry once on a fresh one
+                # stale kept-alive socket — retry once on a fresh one.
+                # Safe even for submit: the service's idempotent ingest
+                # (client id + CRC) makes a replayed landed request a no-op.
 
     def close(self) -> None:
         with self._pool_lock:
@@ -859,6 +944,26 @@ class RemoteCoordinator:
     @property
     def pending(self) -> int:
         return int(self.describe()["pending"])
+
+    @property
+    def num_shards(self) -> Optional[int]:
+        """Shard count of an elastic remote, ``None`` for fixed kinds."""
+        shards = self.describe().get("num_shards")
+        return None if shards is None else int(shards)
+
+    @property
+    def mesh_epoch(self) -> int:
+        return int(self.describe().get("mesh_epoch", 0))
+
+    def grow(self, n: int = 1) -> int:
+        """Admit ``n`` shards on the remote mesh → new mesh epoch."""
+        header, _, _ = self._request("grow", {"n": int(n)})
+        return int(header["mesh_epoch"])
+
+    def shrink(self, n: int = 1) -> int:
+        """Retire ``n`` shards on the remote mesh → new mesh epoch."""
+        header, _, _ = self._request("shrink", {"n": int(n)})
+        return int(header["mesh_epoch"])
 
     def submit(self, report: ClientReport) -> bool:
         return self.submit_bytes(report.to_bytes())

@@ -69,15 +69,29 @@ def serve_federation(args) -> None:
     from repro.fl import AFLServer, AsyncAFLServer, ShardedCoordinator
     from repro.fl.service import FederationService, serve_http
 
+    shard_kw = dict(num_shards=args.shards, tiled_gram=args.tiled)
     kinds = {
         "sync": lambda: AFLServer(args.dim, args.classes, gamma=args.gamma),
         "async": lambda: AsyncAFLServer(args.dim, args.classes,
                                         gamma=args.gamma,
                                         max_pending=args.max_pending),
         "sharded": lambda: ShardedCoordinator(args.dim, args.classes,
-                                              gamma=args.gamma),
+                                              gamma=args.gamma, **shard_kw),
     }
-    coordinator = kinds[args.coordinator]()
+    if args.restore_from:
+        import repro.checkpoint as ckpt
+
+        cls_kw = {
+            "sync": (AFLServer, {}),
+            "async": (AsyncAFLServer, {}),
+            "sharded": (ShardedCoordinator, shard_kw),
+        }[args.coordinator]
+        coordinator = ckpt.load_server(args.restore_from, cls_kw[0],
+                                       **cls_kw[1])
+        print(f"restored {args.coordinator} coordinator from "
+              f"{args.restore_from} ({coordinator.num_clients} clients)")
+    else:
+        coordinator = kinds[args.coordinator]()
     service = FederationService(coordinator, max_pending=args.max_pending)
     with service, serve_http(service, args.host, args.port) as srv:
         print(f"federation up: {srv.url}  "
@@ -86,6 +100,17 @@ def serve_federation(args) -> None:
         print(f"  submit:  POST {srv.url}/v1/default/submit  "
               "(ClientReport.to_bytes payload)")
         print(f"  weights: GET  {srv.url}/v1/default/weights")
+        daemon = None
+        if args.snapshot_dir:
+            from repro.checkpoint import SnapshotDaemon
+
+            daemon = SnapshotDaemon(
+                srv.url, directory=args.snapshot_dir,
+                interval=args.snapshot_every, keep=args.snapshot_keep)
+            daemon.start()
+            print(f"  snapshots: {args.snapshot_dir} "
+                  f"every {args.snapshot_every:g}s "
+                  f"(keep {args.snapshot_keep})")
         print("ctrl-c to stop")
         try:
             import threading
@@ -93,6 +118,9 @@ def serve_federation(args) -> None:
             threading.Event().wait()
         except KeyboardInterrupt:
             print("shutting down")
+        finally:
+            if daemon is not None:
+                daemon.stop()
 
 
 def main() -> None:
@@ -117,6 +145,22 @@ def main() -> None:
     fed.add_argument("--port", type=int, default=8790)
     fed.add_argument("--max-pending", type=int, default=None,
                      help="ingest high-watermark (HTTP 429 past it)")
+    fed.add_argument("--shards", type=int, default=None,
+                     help="sharded coordinator: shard count (default: one "
+                          "per device); grow/shrink at runtime via the "
+                          "grow/shrink routes")
+    fed.add_argument("--tiled", action="store_true",
+                     help="sharded coordinator: row-tiled global Gram "
+                          "(one tile per device)")
+    fed.add_argument("--restore-from", default=None,
+                     help="cold-start the coordinator from this checkpoint "
+                          "directory (e.g. a snapshotd snap-*)")
+    fed.add_argument("--snapshot-dir", default=None,
+                     help="run an in-process snapshot daemon writing here")
+    fed.add_argument("--snapshot-every", type=float, default=30.0,
+                     help="snapshot interval seconds (with --snapshot-dir)")
+    fed.add_argument("--snapshot-keep", type=int, default=5,
+                     help="snapshots retained (with --snapshot-dir)")
     args = ap.parse_args()
 
     if args.federation:

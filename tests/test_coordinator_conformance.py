@@ -151,13 +151,20 @@ class TestCoordinatorConformance:
                                    **TOL[kind])
 
     def test_duplicate_and_gamma_mismatch_raise(self, kind):
+        """A CONFLICTING duplicate (same client id, different statistics)
+        raises on every kind. Byte-identical resubmission is deliberately
+        NOT probed here: the remote kind answers it idempotently (a retried
+        delivery is success, not an error — see TestIdempotentIngest in
+        test_service.py), while in-process kinds still raise."""
         _, _, reps = _reports(n_clients=3)
+        conflict = make_report(reps[0].client_id, np.ones((4, DIM)),
+                               np.eye(C)[np.zeros(4, int)], GAMMA)
 
         async def body():
             async with _make(kind) as coord:
                 await _call(coord.submit(reps[0]))
                 with pytest.raises(ValueError):
-                    await _call(coord.submit(reps[0]))
+                    await _call(coord.submit(conflict))
                 bad = make_report(99, np.zeros((4, DIM)), np.zeros((4, C)),
                                   gamma=2.0)
                 with pytest.raises(ValueError):
@@ -170,13 +177,15 @@ class TestCoordinatorConformance:
         """Post-exception state is interchangeable across kinds: reports
         after the rejected one are NOT aggregated."""
         _, _, reps = _reports(n_clients=4)
+        conflict = make_report(reps[0].client_id, np.ones((4, DIM)),
+                               np.eye(C)[np.zeros(4, int)], GAMMA)
 
         async def body():
             async with _make(kind) as coord:
                 await _call(coord.submit(reps[0]))
                 with pytest.raises(ValueError):
                     await _call(coord.submit_many(
-                        [reps[1], reps[0], reps[2], reps[3]]))
+                        [reps[1], conflict, reps[2], reps[3]]))
                 assert coord.num_clients == 2      # reps[2:] never applied
                 await _call(coord.submit_many(reps[2:]))
                 assert coord.num_clients == 4

@@ -1,0 +1,438 @@
+"""Elastic federation: exact resharding, live grow/shrink, failover.
+
+The AA law makes sufficient statistics additive, so moving mass between
+shards — or changing the shard count entirely — is *exact*, not
+approximate. This file locks that down:
+
+  * shard-count-changing ``from_state`` round-trips (sync ↔ sharded ↔
+    tiled), bit-for-bit on the host paths thanks to the disjoint row-block
+    restore split and the ``gram_diag_raw`` checkpoint rider;
+  * live ``grow``/``shrink`` under the mesh-epoch guard (racing requests
+    get retryable backpressure, never a wrong answer);
+  * the snapshot daemon (versioned checkpoint-over-wire pulls, retention,
+    outage survival);
+  * the failover drill: kill the coordinator mid-stream, restore from the
+    latest snapshot, clients only ever observe typed retryable errors, and
+    the final head is bit-for-bit identical to an uninterrupted run at f64.
+
+The multi-device (8-way mesh, x64, ≤1e-10 vs the sync oracle) parity case
+runs in a subprocess, as everywhere else in this suite.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.fl import (AFLServer, AsyncAFLServer, FederationService,
+                      RemoteCoordinator, ShardedCoordinator, make_report,
+                      serve_http)
+from repro.fl import errors as E
+from repro.checkpoint import SnapshotDaemon
+
+DIM, C, GAMMA = 24, 5, 1.0
+
+
+def _reports(n=8, rows=10, seed=0, start_id=0):
+    rng = np.random.default_rng(seed)
+    return [make_report(start_id + k, rng.standard_normal((rows, DIM)),
+                        np.eye(C)[rng.integers(0, C, rows)], GAMMA)
+            for k in range(n)]
+
+
+def _oracle(reports):
+    srv = AFLServer(DIM, C, gamma=GAMMA)
+    srv.submit_many(reports)
+    return srv
+
+
+# ---------------------------------------------------------------------------
+# Shard-count-changing restore
+# ---------------------------------------------------------------------------
+
+
+class TestReshardingRestore:
+    def test_restore_is_bitwise_identical_across_shard_counts(self):
+        """The disjoint row-block split makes the shard sum reproduce the
+        aggregate bitwise (0 + x = x), so the restored *device* solve is
+        bit-for-bit the same on any shard count — even at f32 device
+        precision."""
+        base = ShardedCoordinator(DIM, C, gamma=GAMMA, num_shards=4)
+        base.submit_many(_reports(7))
+        state = base.state()
+        solves = []
+        for n in (1, 2, 3, 5, 7):
+            coord = ShardedCoordinator.from_state(state, num_shards=n)
+            assert coord.num_shards == n
+            assert sum(coord.occupancy()) == 7
+            solves.append(np.asarray(coord.solve(0.25), np.float64))
+        for w in solves[1:]:
+            np.testing.assert_array_equal(solves[0], w)
+
+    def test_restored_aggregate_matches_sync_oracle_bitwise(self):
+        """state() → from_state(num_shards=n) → state() reproduces the sync
+        server's aggregate bit-for-bit (host f64 path): the shard-0 dump
+        bug would instead have produced the right numbers with wrecked
+        occupancy, and without gram_diag_raw the diagonal would lose its
+        last ulp to the +kγ−kγ round trip."""
+        reports = _reports(6)
+        oracle = _oracle(reports)
+        ref_state = oracle.state()
+        for n in (2, 5):
+            coord = ShardedCoordinator.from_state(ref_state, num_shards=n)
+            back = coord.state()
+            np.testing.assert_array_equal(back["gram"], ref_state["gram"])
+            np.testing.assert_array_equal(back["moment"],
+                                          ref_state["moment"])
+            np.testing.assert_array_equal(back["seen"], ref_state["seen"])
+            # host-engine solve (the f64 path) is therefore bit-identical
+            np.testing.assert_array_equal(
+                coord.solve_multi_gamma([0.3])[0],
+                oracle.solve_multi_gamma([0.3])[0])
+
+    def test_cross_kind_roundtrip_sync_sharded_tiled_async(self):
+        reports = _reports(6)
+        oracle = _oracle(reports)
+        state = oracle.state()
+        sharded = ShardedCoordinator.from_state(state, num_shards=3)
+        tiled = ShardedCoordinator.from_state(sharded.state(),
+                                              tiled_gram=True)
+        back = AFLServer.from_state(tiled.state())
+        np.testing.assert_array_equal(back.solve(0.1), oracle.solve(0.1))
+        # async adopts the same schema (validation included)
+        asrv = AsyncAFLServer.from_state(back.state())
+        np.testing.assert_array_equal(asrv.server.solve(0.1),
+                                      oracle.solve(0.1))
+
+    def test_occupancy_folds_and_survives_roundtrip(self):
+        base = ShardedCoordinator(DIM, C, gamma=GAMMA, num_shards=4,
+                                  placement="round_robin")
+        base.submit_many(_reports(6))
+        assert base.occupancy() == [2, 2, 1, 1]
+        # same count: occupancy carries over verbatim
+        same = ShardedCoordinator.from_state(base.state(), num_shards=4)
+        assert same.occupancy() == [2, 2, 1, 1]
+        # shrink: old shard i folds onto i % n
+        two = ShardedCoordinator.from_state(base.state(), num_shards=2)
+        assert two.occupancy() == [3, 3]
+        # grow: folded counts keep every client accounted for
+        six = ShardedCoordinator.from_state(base.state(), num_shards=6)
+        assert sum(six.occupancy()) == 6
+
+    def test_tiled_checkpoint_occupancy_falls_back_to_even_split(self):
+        """Tiled checkpoints record resident Gram rows in shard_clients,
+        not client counts — the restore must not mistake rows for
+        occupancy."""
+        tiled = ShardedCoordinator(DIM, C, gamma=GAMMA, tiled_gram=True)
+        tiled.submit_many(_reports(5))
+        coord = ShardedCoordinator.from_state(tiled.state(), num_shards=2)
+        assert sum(coord.occupancy()) == 5
+        assert max(coord.occupancy()) - min(coord.occupancy()) <= 1
+
+    def test_padded_tile_plan(self):
+        """Indivisible dims pad up to the next tile multiple; a plan that
+        would pad by a full tile is rejected up front."""
+        assert ShardedCoordinator._plan_tile_rows(30, 4) == 8   # pad 2
+        assert ShardedCoordinator._plan_tile_rows(30, 8) == 4   # pad 2
+        with pytest.raises(E.BadRequest):
+            ShardedCoordinator._plan_tile_rows(8, 7)            # pad ≥ tile
+
+
+class TestStateValidation:
+    @pytest.mark.parametrize("cls", [AFLServer, ShardedCoordinator,
+                                     AsyncAFLServer])
+    def test_contradictory_num_classes_raises_typed_bad_request(self, cls):
+        state = _oracle(_reports(3)).state()
+        with pytest.raises(E.BadRequest):
+            cls.from_state(state, num_classes=C + 2)
+        # the matching value still restores
+        coord = cls.from_state(state, num_classes=C)
+        assert coord.num_classes == C
+
+    def test_malformed_checkpoints_rejected_up_front(self):
+        state = _oracle(_reports(2)).state()
+        bad = dict(state)
+        bad["moment"] = state["moment"][:-1]               # row mismatch
+        with pytest.raises(E.BadRequest):
+            AFLServer.from_state(bad)
+        with pytest.raises(E.BadRequest):
+            AFLServer.from_state({"gamma": state["gamma"]})  # missing keys
+
+    def test_legacy_checkpoint_without_diag_rider_still_restores(self):
+        """Checkpoints written before gram_diag_raw restore to ≤1e-10 (the
+        regularized round trip costs at most the diagonal's last ulp)."""
+        oracle = _oracle(_reports(4))
+        state = dict(oracle.state())
+        state.pop("gram_diag_raw")
+        back = AFLServer.from_state(state)
+        np.testing.assert_allclose(back.solve(0.2), oracle.solve(0.2),
+                                   rtol=1e-12, atol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# Live grow/shrink under the epoch guard
+# ---------------------------------------------------------------------------
+
+
+class TestLiveResize:
+    def test_grow_admits_empty_shards_and_placement_fills_them(self):
+        coord = ShardedCoordinator(DIM, C, gamma=GAMMA, num_shards=2)
+        coord.submit_many(_reports(4))
+        w0 = coord.solve_multi_gamma([0.25])[0]
+        assert coord.grow(2) == 1 and coord.num_shards == 4
+        assert coord.occupancy() == [2, 2, 0, 0]
+        # growth is exact: empty shards add nothing
+        np.testing.assert_array_equal(coord.solve_multi_gamma([0.25])[0], w0)
+        coord.submit_many(_reports(2, start_id=100, seed=9))
+        assert coord.occupancy() == [2, 2, 1, 1]   # new shards fill first
+
+    def test_shrink_folds_retired_shards_exactly(self):
+        coord = ShardedCoordinator(DIM, C, gamma=GAMMA, num_shards=5)
+        coord.submit_many(_reports(7))
+        before = coord.state()
+        assert coord.shrink(3) == 1 and coord.num_shards == 2
+        after = coord.state()
+        np.testing.assert_allclose(after["gram"], before["gram"],
+                                   rtol=1e-12, atol=1e-9)
+        np.testing.assert_array_equal(after["seen"], before["seen"])
+        assert sum(coord.occupancy()) == 7
+
+    def test_resize_bounds_raise_typed_bad_request(self):
+        coord = ShardedCoordinator(DIM, C, gamma=GAMMA, num_shards=2)
+        with pytest.raises(E.BadRequest):
+            coord.grow(0)
+        with pytest.raises(E.BadRequest):
+            coord.shrink(2)                        # nothing would survive
+        with pytest.raises(E.BadRequest):
+            coord.shrink(5)
+        assert coord.num_shards == 2 and coord.mesh_epoch == 0
+
+    def test_rejected_resize_leaves_coordinator_untouched(self):
+        """Validation precedes mutation: a grow the mesh cannot back (tiled
+        needs one device per tile) must not corrupt the tiles."""
+        coord = ShardedCoordinator(DIM, C, gamma=GAMMA, tiled_gram=True)
+        coord.submit_many(_reports(3))
+        w0 = coord.solve_multi_gamma([0.1])[0]
+        with pytest.raises(E.BadRequest):
+            coord.grow(64)                         # no such devices
+        assert coord.mesh_epoch == 0
+        np.testing.assert_array_equal(coord.solve_multi_gamma([0.1])[0], w0)
+
+    def test_inflight_requests_get_retryable_backpressure_mid_resize(self):
+        coord = ShardedCoordinator(DIM, C, gamma=GAMMA, num_shards=2)
+        coord.submit_many(_reports(2))
+        coord._resizing = True                     # freeze mid-migration
+        for call in (lambda: coord.submit(_reports(1, start_id=50)[0]),
+                     lambda: coord.solve(0.1),
+                     lambda: coord.solve_multi_gamma([0.1]),
+                     coord.state, coord.rebalance):
+            with pytest.raises(E.Backpressure) as exc:
+                call()
+            assert exc.value.retryable
+        coord._resizing = False
+        assert coord.num_clients == 2              # nothing landed
+
+    def test_wire_grow_shrink_and_describe(self):
+        svc = FederationService(
+            ShardedCoordinator(DIM, C, gamma=GAMMA, num_shards=2))
+        rc = RemoteCoordinator(svc)
+        rc.submit_many(_reports(3))
+        info = rc.describe()
+        assert info["num_shards"] == 2 and info["mesh_epoch"] == 0
+        assert rc.grow(1) == 1 and rc.num_shards == 3
+        assert rc.shrink(2) == 2 and rc.num_shards == 1
+        # non-elastic kinds answer a typed bad_request
+        rc2 = RemoteCoordinator(FederationService(
+            AFLServer(DIM, C, gamma=GAMMA)))
+        assert rc2.num_shards is None
+        with pytest.raises(E.BadRequest):
+            rc2.grow(1)
+
+
+# ---------------------------------------------------------------------------
+# Snapshot daemon
+# ---------------------------------------------------------------------------
+
+
+class TestSnapshotDaemon:
+    def test_versioned_snapshots_idempotent_and_pruned(self, tmp_path):
+        svc = FederationService(AFLServer(DIM, C, gamma=GAMMA))
+        rc = RemoteCoordinator(svc)
+        d = SnapshotDaemon(svc, directory=tmp_path, keep=2)
+        rc.submit_many(_reports(3))
+        path = d.snapshot_once()
+        assert path is not None and path.name == "snap-000000000003"
+        assert d.snapshot_once() is None           # same version: no-op
+        for extra in range(2):
+            rc.submit(_reports(1, start_id=10 + extra, seed=extra + 3)[0])
+            d.snapshot_once()
+        assert len(d.snapshots()) == 2             # retention pruned v3
+        assert d.latest_version == 5
+
+    def test_restore_cold_starts_any_kind_on_any_shard_count(self, tmp_path):
+        reports = _reports(5)
+        oracle = _oracle(reports)
+        svc = FederationService(AFLServer(DIM, C, gamma=GAMMA))
+        RemoteCoordinator(svc).submit_many(reports)
+        d = SnapshotDaemon(svc, directory=tmp_path)
+        d.snapshot_once()
+        same = d.restore()                         # AFLServer default
+        np.testing.assert_array_equal(same.solve(0.2), oracle.solve(0.2))
+        resharded = d.restore(ShardedCoordinator, num_shards=3)
+        assert resharded.num_shards == 3
+        np.testing.assert_array_equal(resharded.solve_multi_gamma([0.2])[0],
+                                      oracle.solve_multi_gamma([0.2])[0])
+        with pytest.raises(FileNotFoundError):
+            SnapshotDaemon(svc, directory=tmp_path / "empty").restore()
+
+    def test_daemon_survives_outage_and_keeps_snapshots(self, tmp_path):
+        import time
+
+        svc = FederationService(AFLServer(DIM, C, gamma=GAMMA))
+        with serve_http(svc) as http:
+            rc = RemoteCoordinator(http.url)
+            rc.submit_many(_reports(4))
+            d = SnapshotDaemon(http.url, directory=tmp_path, interval=0.02)
+            with d:
+                assert d.wait_for_version(4, timeout=10.0)
+            rc.close()
+        # service is gone: pulls fail, snapshots stay, errors are recorded
+        d2 = SnapshotDaemon(http.url, directory=tmp_path, interval=0.02)
+        with d2:
+            time.sleep(0.1)
+        assert d2.errors and d2.latest_version == 4
+
+
+# ---------------------------------------------------------------------------
+# The failover drill
+# ---------------------------------------------------------------------------
+
+
+def _drill(service, transport, tmp_path, replacement_cls, **restore_kw):
+    """Kill → snapshot-restore → resume. Clients only ever observe typed
+    retryable errors; returns (final head, uninterrupted-oracle head)."""
+    reports = _reports(16)
+    rc = RemoteCoordinator(transport)
+    rc.submit_many(reports[:10])
+    daemon = SnapshotDaemon(transport, directory=tmp_path)
+    daemon.snapshot_once()
+    assert daemon.latest_version == 10
+
+    service.suspend_federation()                   # the coordinator "dies"
+    outage_errors = []
+    for r in reports[10:]:
+        with pytest.raises(E.ServiceError) as exc:
+            rc.submit(r)
+        outage_errors.append(exc.value)
+    with pytest.raises(E.ServiceError) as exc:
+        rc.solve(0.25)
+    outage_errors.append(exc.value)
+    assert all(isinstance(e, E.Unavailable) and e.retryable
+               for e in outage_errors)             # typed, retryable, only
+
+    service.restore_federation(
+        "default", daemon.restore(replacement_cls, **restore_kw))
+    for r in reports[10:]:                         # clients back off + retry
+        rc.submit(r)
+    # a retry straddling the outage stays idempotent (ledger carried over)
+    _, _, _ = rc._request("submit", raw=reports[3].to_bytes())
+    assert rc.num_clients == 16
+    return np.asarray(rc.solve(0.25), np.float64), \
+        np.asarray(_oracle(reports).solve(0.25), np.float64)
+
+
+class TestFailoverDrill:
+    def test_inproc_drill_final_head_bitwise_vs_uninterrupted(self, tmp_path):
+        svc = FederationService(AFLServer(DIM, C, gamma=GAMMA))
+        final, ref = _drill(svc, svc, tmp_path, AFLServer)
+        np.testing.assert_array_equal(final, ref)
+
+    def test_http_drill_with_resharded_replacement(self, tmp_path):
+        """Over real loopback HTTP, restoring into a DIFFERENT kind and
+        shard count. The restore itself is bit-exact; post-outage arrivals
+        then merge into different shards than the oracle's sequential fold,
+        so the head matches to f64 reassociation roundoff (≪ 1e-12), and
+        the f32 device solve the wire serves stays within device
+        precision."""
+        svc = FederationService(AFLServer(DIM, C, gamma=GAMMA))
+        with serve_http(svc) as http:
+            final, ref = _drill(svc, http.url, tmp_path,
+                                ShardedCoordinator, num_shards=2)
+            coord = svc.coordinator()
+            np.testing.assert_allclose(
+                coord.solve_multi_gamma([0.25])[0], ref,
+                rtol=1e-12, atol=1e-12)
+            assert np.abs(final - ref).max() < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# x64 subprocess: ≤1e-10 vs the sync oracle on an 8-device mesh,
+# grow / shrink / indivisible-dim pad — the acceptance bar
+# ---------------------------------------------------------------------------
+
+_SUBPROC = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import numpy as np
+    from repro.fl.api import AFLServer, ShardedCoordinator, make_report
+
+    d, c, g = 30, 5, 1.0          # 30 rows: indivisible by 4 and 8 (pad 2)
+    rng = np.random.default_rng(7)
+    reports = [make_report(k, rng.standard_normal((40, d)),
+                           np.eye(c)[rng.integers(0, c, 40)], g)
+               for k in range(12)]
+    oracle = AFLServer(d, c, gamma=g)
+    oracle.submit_many(reports)
+    w_ref = oracle.solve(0.3)
+
+    base = ShardedCoordinator(d, c, gamma=g, num_shards=4)
+    base.submit_many(reports)
+    state = base.state()
+
+    for label, kw in [
+        ("shrink-nontiled", dict(num_shards=2)),
+        ("grow-nontiled", dict(num_shards=8)),
+        ("tiled-pad-4", dict(num_shards=4, tiled_gram=True)),
+        ("tiled-pad-8", dict(num_shards=8, tiled_gram=True,
+                             distributed_factor=False)),
+    ]:
+        coord = ShardedCoordinator.from_state(state, **kw)
+        err = np.abs(np.asarray(coord.solve(0.3), np.float64)
+                     - w_ref).max()
+        assert err < 1e-10, f"{label}: {err}"
+        print(label, err)
+
+    # live mesh growth/shrink, tiled: re-tile the global Gram in place
+    t = ShardedCoordinator.from_state(state, num_shards=4, tiled_gram=True)
+    assert t.grow(4) == 1 and t.num_shards == 8
+    err = np.abs(np.asarray(t.solve(0.3), np.float64) - w_ref).max()
+    assert err < 1e-10, f"tiled grow: {err}"
+    assert t.shrink(6) == 2 and t.num_shards == 2
+    err = np.abs(np.asarray(t.solve(0.3), np.float64) - w_ref).max()
+    assert err < 1e-10, f"tiled shrink: {err}"
+
+    # logical shards beyond the mesh: 12 accumulators on 8 devices
+    wide = ShardedCoordinator.from_state(state, num_shards=12)
+    err = np.abs(np.asarray(wide.solve(0.3), np.float64) - w_ref).max()
+    assert err < 1e-10, f"wide: {err}"
+    print("OK")
+    """
+)
+
+
+def test_elastic_restore_8device_x64_parity_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    res = subprocess.run(
+        [sys.executable, "-c", _SUBPROC], capture_output=True, text=True,
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert res.returncode == 0, res.stderr
+    assert "OK" in res.stdout

@@ -97,8 +97,12 @@ class TestErrorTaxonomy:
         rc = RemoteCoordinator(_service())
         reps = _reports(2)
         rc.submit(reps[0])
+        # byte-identical resubmit: idempotent success (transport retries
+        # must not see a spurious 409); CONFLICTING stats under the same
+        # id is the real duplicate
+        rc.submit(reps[0])
         with pytest.raises(E.DuplicateClient) as exc:
-            rc.submit(reps[0])
+            rc.submit(_reports(1, seed=3)[0])
         assert exc.value.code == "duplicate_client"
         bad_gamma = make_report(99, np.zeros((3, DIM)), np.zeros((3, C)), 2.0)
         with pytest.raises(E.GammaMismatch) as exc:
@@ -142,11 +146,15 @@ class TestErrorTaxonomy:
 class TestSubmitStream:
     def test_mixed_batch_partial_acceptance(self):
         """One framed request carrying good + corrupt + duplicate reports:
-        each frame succeeds/fails independently with its own code."""
+        each frame succeeds/fails independently with its own code. The
+        duplicate frame carries CONFLICTING stats for an already-folded
+        client id — a byte-identical replay would be answered as idempotent
+        success instead (TestIdempotentIngest)."""
         rc = RemoteCoordinator(_service())
         reps = _reports(3)
+        conflict = _reports(1, seed=9)[0]       # same client id, new stats
         frames = [reps[0].to_bytes(), b"garbage", reps[1].to_bytes(),
-                  reps[0].to_bytes(), reps[2].to_bytes()]
+                  conflict.to_bytes(), reps[2].to_bytes()]
         out = rc.submit_stream(frames)
         codes = [r.get("error") for r in out["results"]]
         assert out["accepted"] == 3
@@ -503,3 +511,71 @@ class TestHttpKeepAlive:
                 dt = time.perf_counter() - t0
                 transport.close()
                 print(f"{label}: 20 describes in {1e3 * dt:.1f}ms")
+
+
+class TestIdempotentIngest:
+    """Transport retries must never double-apply or surface a spurious 409:
+    the service keys accepted submissions on (client id, payload CRC) and
+    answers a re-delivered identical payload with success."""
+
+    def test_identical_payload_retry_answers_success_once_applied(self):
+        svc = _service()
+        payload = _reports(1)[0].to_bytes()
+        header, _ = svc.handle("submit", payload)
+        first, _, _ = unpack_message(header)
+        assert first["ok"] and first["duplicate"] is False
+        again, _ = svc.handle("submit", payload)
+        h, _, _ = unpack_message(again)
+        assert h["ok"] and h["duplicate"] is True
+        assert h["num_clients"] == 1
+        assert svc.coordinator().num_clients == 1      # applied exactly once
+
+    def test_different_payload_same_client_still_conflicts(self):
+        svc = _service()
+        rc = RemoteCoordinator(svc)
+        rc.submit(_reports(1)[0])
+        with pytest.raises(E.DuplicateClient):
+            rc.submit(_reports(1, seed=9)[0])          # same id, new stats
+
+    def test_submit_stream_frames_are_idempotent(self):
+        svc = _service()
+        rc = RemoteCoordinator(svc)
+        payload = _reports(1)[0].to_bytes()
+        out = rc.submit_stream([payload, payload])
+        assert out["accepted"] == 2
+        assert out["results"][1]["duplicate"] is True
+        assert svc.coordinator().num_clients == 1
+        # a whole-batch replay (lost stream response) is also a no-op
+        out = rc.submit_stream([payload])
+        assert out["accepted"] == 1
+        assert svc.coordinator().num_clients == 1
+
+    def test_http_submit_replay_after_lost_response_is_transparent(self):
+        """The send-phase retry bug: the first attempt lands but its
+        response is lost on the kept-alive socket. The transport replays on
+        a fresh connection; the service's idempotent ingest answers success
+        — the client sees ONE successful submit, aggregated once."""
+        import http.client
+
+        svc = _service()
+        with serve_http(svc) as http_srv:
+            t = HttpTransport(http_srv.url)
+            try:
+                t.request("describe")                  # pool a connection
+                conn = t._local.conn
+
+                class _Lost(Exception):
+                    pass
+
+                real = conn.getresponse
+
+                def lose_response():
+                    real().read()                      # server DID apply it
+                    raise http.client.HTTPException("response lost")
+
+                conn.getresponse = lose_response
+                rc = RemoteCoordinator(t)
+                assert rc.submit(_reports(1)[0]) is not None
+                assert svc.coordinator().num_clients == 1
+            finally:
+                t.close()

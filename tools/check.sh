@@ -37,6 +37,9 @@ echo "== smoke: reduced analytic training run (launch/train.py)"
 python -m repro.launch.train --arch minicpm_2b --mode analytic --reduced \
     --samples 512 --seq 16 --classes 8 --batch 64
 
+echo "== smoke: elastic failover drill (grow → crash → resharded restore)"
+python examples/failover_drill.py
+
 if [[ "$RUN_BENCH" == "1" ]]; then
   # The double config (f64 allowed, f32 default) scoped to the bench step:
   # recorded numbers must match the env fingerprint in BENCH_solve.json.
