@@ -1,0 +1,153 @@
+"""Read-replica benchmark: p50/p99 read latency, primary vs replica.
+
+The replica exists for exactly one workload shape — solve once, download
+millions — and this bench measures whether it actually buys anything: N
+concurrent readers issue ``weights`` (ETag-revalidating after the first
+download) and ``personalized_solve`` requests against (a) the primary,
+which is simultaneously ingesting a stream of submits, and (b) a
+:class:`~repro.fl.replication.WeightsReplica` following the primary's
+ledger — which never contends with ingest because it reads from its own
+cached factor.
+
+Rows report per-target read p50/p99 wall seconds (``p50_s``/``p99_s``), so
+the ``tools/bench_gate.py`` trajectory catches a regression on either path;
+``dw`` audits that the replica's head is bit-for-bit the primary's.
+"""
+
+from __future__ import annotations
+
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from repro.fl import (AFLServer, FederationService, RemoteCoordinator,
+                      WeightsReplica, make_report, serve_http)
+
+from benchmarks.common import print_table
+
+GAMMA = 1.0
+
+
+def _population(d, c, n_clients, rows_each, seed=0, start_id=0):
+    rng = np.random.default_rng(seed)
+    n = n_clients * rows_each
+    x = rng.standard_normal((n, d))
+    y = np.eye(c)[rng.integers(0, c, n)]
+    return [make_report(start_id + k, x[k * rows_each:(k + 1) * rows_each],
+                        y[k * rows_each:(k + 1) * rows_each], GAMMA)
+            for k in range(n_clients)]
+
+
+def _read_loop(url, reqs, latencies):
+    """One reader: alternate cached-weights revalidation and a fresh
+    personalized solve — the two read routes a deployment actually serves."""
+    rc = RemoteCoordinator(url)
+    etag = None
+    try:
+        for i in range(reqs):
+            t0 = time.perf_counter()
+            if i % 2 == 0:
+                vw = rc.weights(0.25, if_etag=etag)
+                if not vw.not_modified:
+                    etag = vw.etag
+            else:
+                rc.personalized_solve(0.25)
+            latencies.append(time.perf_counter() - t0)
+    finally:
+        rc.close()
+
+
+def _measure(url, readers, reqs):
+    latencies: list = []
+    threads = [threading.Thread(target=_read_loop,
+                                args=(url, reqs, latencies))
+               for _ in range(readers)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    lat = np.sort(np.asarray(latencies))
+    return (float(lat[int(0.50 * (len(lat) - 1))]),
+            float(lat[int(0.99 * (len(lat) - 1))]),
+            len(lat) / wall)
+
+
+def run(quick: bool = False):
+    d, c = (128, 10) if quick else (512, 20)
+    n_clients, rows_each = (16, 16) if quick else (48, 32)
+    readers, reqs = (4, 20) if quick else (8, 50)
+    reps = _population(d, c, n_clients, rows_each)
+    # writer traffic during the measurement: a second population streaming
+    # in while readers hammer the weights route
+    writers = _population(d, c, n_clients, rows_each, seed=1,
+                          start_id=n_clients)
+
+    rows = []
+    with tempfile.TemporaryDirectory() as tmp:
+        primary = FederationService(AFLServer(d, c, gamma=GAMMA),
+                                    ledger_dir=f"{tmp}/ledger")
+        with primary, serve_http(primary) as http:
+            rc = RemoteCoordinator(http.url)
+            rc.submit_many(reps)
+            primary_w = np.asarray(rc.solve(0.25), np.float64)
+
+            # replica follows the ledger (same box here; the point is the
+            # contention profile, not the network)
+            replica = WeightsReplica(f"{tmp}/ledger",
+                                     ctor_kw=dict(dim=d, num_classes=c,
+                                                  gamma=GAMMA))
+            rep_svc = FederationService(replica)
+            with rep_svc, serve_http(rep_svc) as rep_http:
+                # ingest load against the primary while both are measured:
+                # the replica's reads must not care
+                stop = threading.Event()
+
+                def _ingest():
+                    wrc = RemoteCoordinator(http.url)
+                    i = 0
+                    while not stop.is_set() and i < len(writers):
+                        wrc.submit(writers[i])
+                        i += 1
+                        time.sleep(0.002)
+                    wrc.close()
+
+                ingest = threading.Thread(target=_ingest)
+                ingest.start()
+                try:
+                    for target, url in (("primary", http.url),
+                                        ("replica", rep_http.url)):
+                        p50, p99, rps = _measure(url, readers, reqs)
+                        rows.append({"bench": "replica_read", "d": d,
+                                     "target": target, "readers": readers,
+                                     "reqs": readers * reqs,
+                                     "p50_s": round(p50, 4),
+                                     "p99_s": round(p99, 4),
+                                     "reads_per_s": round(rps, 1)})
+                finally:
+                    stop.set()
+                    ingest.join()
+                # exactness audit: the replica head at the primary's epoch
+                replica.refresh()
+                dw = float(np.abs(np.asarray(replica.solve(0.25),
+                                             np.float64)
+                                  - np.asarray(rc.solve(0.25),
+                                               np.float64)).max())
+                for row in rows:
+                    row["dw"] = dw
+            rc.close()
+
+    print_table(
+        f"Replica reads — {readers} readers × {reqs} reqs under ingest "
+        f"(d={d}, C={c})",
+        ["target", "p50", "p99", "reads/s", "max|ΔW| replica vs primary"],
+        [[r["target"], f"{r['p50_s']*1e3:.1f}ms", f"{r['p99_s']*1e3:.1f}ms",
+          r["reads_per_s"], f"{r['dw']:.2e}"] for r in rows])
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -38,6 +38,8 @@ MODULES = [
      "Solve kernels — fused γ-sweep, batched factor, tiled d=6144"),
     ("elastic_bench",
      "Elastic federation — reshard/resize/snapshot migration cost"),
+    ("replica_read_bench",
+     "Replication — p50/p99 reads, primary-under-ingest vs replica"),
     ("roofline", "§Roofline — dry-run derived"),
 ]
 

@@ -16,21 +16,46 @@ so a failed pull is recorded and retried, never fatal). ``tools/snapshotd.py``
 is the CLI wrapper; the failover drill in ``tests/test_elastic.py`` and
 ``examples/failover_drill.py`` exercise kill → restore end-to-end.
 
-Snapshot naming: ``snap-{version:012d}`` where version is the federation's
-submission version at pull time — monotone under ingest, so lexicographic
-order IS recency order and ``latest()`` is a directory listing.
+Snapshot naming: ``snap-{version:012d}-{epoch:06d}`` where version is the
+federation's submission version (client count) at pull time and epoch is the
+coordinator's ``mesh_epoch`` — monotone under ingest AND resharding, so
+lexicographic order IS recency order and ``latest()`` is a directory
+listing. Client count alone is not an identity: a grow/shrink or a γ change
+mutates the state without admitting a client, so idempotence is decided by a
+digest of the pulled state, not by the name — same name + different digest
+means the snapshot on disk is stale and gets overwritten in place.
 """
 
 from __future__ import annotations
 
+import json
 import pathlib
 import threading
 import time
+import zlib
 from typing import Any, List, Optional, Tuple
+
+import numpy as np
 
 import repro.checkpoint as ckpt
 
-__all__ = ["SnapshotDaemon"]
+__all__ = ["SnapshotDaemon", "state_digest"]
+
+
+def state_digest(state: dict) -> str:
+    """CRC-32 over the state's arrays and scalars in sorted-key order — a
+    cheap, deterministic identity for "did the aggregate actually change".
+    Two pulls with equal digests are byte-identical snapshots."""
+    crc = 0
+    for key in sorted(state):
+        crc = zlib.crc32(key.encode(), crc)
+        val = state[key]
+        if hasattr(val, "shape") and hasattr(val, "dtype"):   # np OR jax
+            crc = zlib.crc32(np.ascontiguousarray(val).tobytes(), crc)
+        else:
+            crc = zlib.crc32(
+                json.dumps(val, sort_keys=True, default=str).encode(), crc)
+    return f"{crc:08x}"
 
 
 class SnapshotDaemon:
@@ -67,28 +92,39 @@ class SnapshotDaemon:
     def _pull_state(self):
         if hasattr(self.source, "state") and not hasattr(
                 self.source, "handle"):
-            return self.source.state(), type(self.source).__name__
+            return (self.source.state(), type(self.source).__name__,
+                    int(getattr(self.source, "mesh_epoch", 0)))
         from repro.fl.service import RemoteCoordinator
 
         # per-pull client: a stale connection to a restarted service must
         # never wedge the daemon
         remote = RemoteCoordinator(self.source, federation=self.federation)
         try:
-            return remote.state(), remote.kind
+            return remote.state(), remote.kind, remote.mesh_epoch
         finally:
             remote.close()
 
     def snapshot_once(self) -> Optional[pathlib.Path]:
         """Pull and persist one snapshot; returns its directory, or ``None``
-        when this version is already on disk (an idempotent no-op)."""
-        state, kind = self._pull_state()
+        when this exact state is already on disk (an idempotent no-op).
+        Idempotence is by state digest, not name: a resharding or γ change
+        that kept the client count rewrites the stale snapshot in place."""
+        state, kind, epoch = self._pull_state()
         version = int(len(state["seen"]))
-        path = self.directory / f"snap-{version:012d}"
-        if (path / "manifest.json").exists():
-            return None
+        digest = state_digest(state)
+        path = self.directory / f"snap-{version:012d}-{epoch:06d}"
+        manifest = path / "manifest.json"
+        if manifest.exists():
+            meta = json.loads(manifest.read_text()).get("metadata", {})
+            if meta.get("digest") == digest:
+                return None
+            for f in sorted(path.iterdir(), reverse=True):    # stale: redo
+                f.unlink()
+            path.rmdir()
         ckpt.save(path, dict(state),
                   metadata={"federation": self.federation,
-                            "source_kind": kind, "version": version})
+                            "source_kind": kind, "version": version,
+                            "mesh_epoch": epoch, "digest": digest})
         self.prune()
         return path
 
@@ -114,8 +150,10 @@ class SnapshotDaemon:
 
     @property
     def latest_version(self) -> Optional[int]:
+        """Client count of the newest snapshot (the ``-{epoch}`` suffix is
+        tie-break, not version — ``wait_for_version`` waits on ingest)."""
         latest = self.latest()
-        return None if latest is None else int(latest.name.split("-")[-1])
+        return None if latest is None else int(latest.name.split("-")[1])
 
     def restore(self, cls=None, **kwargs):
         """Cold-start a replacement coordinator from the latest snapshot —

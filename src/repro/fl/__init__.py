@@ -14,8 +14,11 @@ from repro.fl.api import (AFLClient, AFLServer, ClientReport, Coordinator,
                           masked_reports)
 from repro.fl.async_server import AsyncAFLServer
 from repro.fl.errors import ServiceError
+from repro.fl.replication import (LedgerTailer, ReportLedger, WarmStandby,
+                                  WeightsReplica, watch_primary)
 from repro.fl.service import (FederationService, HttpTransport,
-                              InProcTransport, RemoteCoordinator, serve_http)
+                              InProcTransport, RemoteCoordinator,
+                              promote_remote, serve_http)
 
 __all__ = [
     "AFLClient",
@@ -27,13 +30,19 @@ __all__ = [
     "GammaSweep",
     "HttpTransport",
     "InProcTransport",
+    "LedgerTailer",
     "RemoteCoordinator",
+    "ReportLedger",
     "SCHEMA_VERSION",
     "ServiceError",
     "ShardedCoordinator",
     "VersionedWeights",
+    "WarmStandby",
+    "WeightsReplica",
     "evaluate_weight",
     "make_report",
     "masked_reports",
+    "promote_remote",
     "serve_http",
+    "watch_primary",
 ]

@@ -682,6 +682,18 @@ class AFLServer:
     def _etag(self, target_gamma: float) -> str:
         return f"{self._etag_salt}-{self._version}-{float(target_gamma)!r}"
 
+    def new_etag_salt(self) -> str:
+        """Refresh the instance ETag salt, permanently invalidating every
+        outstanding ``weights`` token. Tokens are *instance*-scoped on
+        purpose: a restore, promotion, or reshard installs a coordinator
+        whose state history diverges from the one that minted the token,
+        so revalidating across the boundary could serve a stale head as
+        fresh. New instances mint a fresh salt in ``__init__``; this is
+        the hook for in-place identity changes (standby promotion, mesh
+        resize)."""
+        self._etag_salt = uuid.uuid4().hex[:8]
+        return self._etag_salt
+
     def weights(self, target_gamma: float = 0.0, *,
                 if_etag: Optional[str] = None) -> VersionedWeights:
         """Versioned solved-head download. ``if_etag`` equal to the current
@@ -1082,7 +1094,7 @@ class ShardedCoordinator:
             self.mesh = new_mesh
             self._solve_fns.clear()        # compiled for the old mesh
             self._last_rebalance = None
-            self._etag_salt = uuid.uuid4().hex[:8]
+            self.new_etag_salt()           # old-epoch tokens must die here
             self._mesh_epoch += 1
         finally:
             self._resizing = False
@@ -1187,6 +1199,14 @@ class ShardedCoordinator:
 
     def _etag(self, target_gamma: float) -> str:
         return f"{self._etag_salt}-{self._version}-{float(target_gamma)!r}"
+
+    def new_etag_salt(self) -> str:
+        """Refresh the instance ETag salt (see
+        :meth:`AFLServer.new_etag_salt`) — called by :meth:`_resize`, so a
+        token minted against one mesh epoch can never revalidate against
+        another."""
+        self._etag_salt = uuid.uuid4().hex[:8]
+        return self._etag_salt
 
     def weights(self, target_gamma: float = 0.0, *,
                 if_etag: Optional[str] = None) -> VersionedWeights:

@@ -322,3 +322,10 @@ class AsyncAFLServer:
     def server(self) -> AFLServer:
         """The wrapped synchronous server (shared statistics, same cache)."""
         return self._server
+
+    def new_etag_salt(self) -> str:
+        """Mint a fresh ETag salt (see :meth:`AFLServer.new_etag_salt`) —
+        tokens are minted by the wrapped server, so the salt lives there.
+        Synchronous: an identity change (promotion) happens outside the
+        serving loop."""
+        return self._server.new_etag_salt()

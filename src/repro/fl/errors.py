@@ -30,6 +30,7 @@ __all__ = [
     "GammaMismatch",
     "EmptyFederation",
     "Backpressure",
+    "ReadOnlyFederation",
     "Unavailable",
     "UnknownFederation",
     "ERROR_CODES",
@@ -104,6 +105,16 @@ class Backpressure(ServiceError):
     retryable = True
 
 
+class ReadOnlyFederation(ServiceError, ValueError):
+    """A mutating request (submit / grow / shrink) sent to a weights read
+    replica. Replicas follow the primary's ledger and never ingest — send
+    writes to the primary endpoint. Not retryable *here*: retrying against
+    the replica can never succeed."""
+
+    code = "read_only"
+    http_status = 403
+
+
 class Unavailable(ServiceError):
     """The federation exists but is temporarily not being served — its
     coordinator died and a failover restore is in flight. Nothing was
@@ -125,8 +136,8 @@ class UnknownFederation(ServiceError, KeyError):
 ERROR_CODES: Dict[str, Type[ServiceError]] = {
     cls.code: cls
     for cls in (BadRequest, CorruptReport, OversizedReport, DuplicateClient,
-                GammaMismatch, EmptyFederation, Backpressure, Unavailable,
-                UnknownFederation)
+                GammaMismatch, EmptyFederation, Backpressure,
+                ReadOnlyFederation, Unavailable, UnknownFederation)
 }
 
 

@@ -51,6 +51,7 @@ import struct
 import threading
 import urllib.parse
 import zlib
+from collections import OrderedDict
 from typing import (Any, Dict, Iterable, List, Optional, Sequence, Tuple,
                     Union)
 
@@ -60,6 +61,7 @@ from repro.core.engine import AnalyticEngine, SuffStats
 from repro.fl import errors as E
 from repro.fl.api import (ClientReport, GammaSweep, VersionedWeights,
                           _restore_stats)
+from repro.fl.replication import ReportLedger, WarmStandby
 
 __all__ = [
     "pack_message",
@@ -199,6 +201,41 @@ def _decode_response(data: bytes) -> Tuple[dict, Dict[str, np.ndarray], bytes]:
 # ---------------------------------------------------------------------------
 
 
+class _AppliedMap:
+    """Bounded idempotent-ingest map: client id → CRC-32 of the exact
+    payload the service accepted.
+
+    The unbounded dict grew one entry per client forever. With a
+    :class:`~repro.fl.replication.ReportLedger` attached the map is a pure
+    cache — an evicted entry is recoverable from disk
+    (``ledger.find_crc``), so eviction never breaks the ``duplicate: true``
+    replay answer. Without a ledger the LRU *is* the replay window: a
+    retry arriving after ``maxsize`` newer clients degrades to the
+    coordinator's ``duplicate_client`` 409 — the documented floor for
+    ledger-less services. ``maxsize=None`` keeps the old unbounded
+    behavior."""
+
+    def __init__(self, maxsize: Optional[int] = None):
+        self.maxsize = None if maxsize is None else max(1, int(maxsize))
+        self._d: "OrderedDict[int, int]" = OrderedDict()
+
+    def get(self, client_id: int) -> Optional[int]:
+        crc = self._d.get(client_id)
+        if crc is not None:
+            self._d.move_to_end(client_id)
+        return crc
+
+    def set(self, client_id: int, crc: int) -> None:
+        self._d[client_id] = crc
+        self._d.move_to_end(client_id)
+        if self.maxsize is not None:
+            while len(self._d) > self.maxsize:
+                self._d.popitem(last=False)
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+
 class _Federation:
     """Adapter making any coordinator callable from transport threads.
 
@@ -209,20 +246,35 @@ class _Federation:
     coordinator's own internal locking behave exactly as in-process.
     """
 
-    def __init__(self, coordinator):
+    def __init__(self, coordinator, *,
+                 applied_cache_size: Optional[int] = None,
+                 ledger: Optional[ReportLedger] = None):
         self.coordinator = coordinator
         self.is_async = inspect.iscoroutinefunction(
             getattr(coordinator, "submit", None))
         self._lock = threading.RLock()
         self._loop: Optional[asyncio.AbstractEventLoop] = None
         self._thread: Optional[threading.Thread] = None
-        # idempotent-ingest ledger: client id → CRC-32 of the exact report
+        # idempotent-ingest map: client id → CRC-32 of the exact report
         # payload the service accepted. A transport retry that re-delivers
         # the identical bytes answers success instead of duplicate_client.
-        self.applied: Dict[int, int] = {}
+        # LRU-bounded; with a ledger attached, evicted entries are
+        # recovered from disk, so the bound costs nothing but a scan.
+        self.applied = _AppliedMap(applied_cache_size)
+        # durable submit ledger: every accepted submit/stream frame is
+        # appended (and fsynced before the ack), so a warm standby tailing
+        # the directory loses zero reports on failover
+        self.ledger = ledger
+        # a read replica never ingests: mutating routes answer the typed
+        # read_only 403 before dispatch
+        self.read_only = bool(getattr(coordinator, "read_only", False))
+        # a hosted-but-not-yet-promoted warm standby (host_standby)
+        self.standby: Optional[WarmStandby] = None
+        self._adopt_ledger = False
         # failover latch: while True the federation answers 503 unavailable
         # (retryable) on every route — set when the coordinator dies,
-        # cleared by FederationService.restore_federation
+        # cleared by FederationService.restore_federation or the promote
+        # route (which flips a hosted standby live)
         self.suspended = False
 
     def start(self) -> "_Federation":
@@ -256,6 +308,12 @@ class _Federation:
         return int(getattr(self.coordinator, "pending", 0))
 
     def close(self) -> None:
+        if self.standby is not None:
+            self.standby.stop()
+            self.standby = None
+        if self.ledger is not None:
+            self.ledger.close()
+            self.ledger = None
         if self._loop is not None:
             try:
                 close = getattr(self.coordinator, "close", None)
@@ -294,21 +352,67 @@ class FederationService:
 
     def __init__(self, coordinator=None, *, federation_id: str = "default",
                  max_report_bytes: int = 64 << 20,
-                 max_pending: Optional[int] = None):
+                 max_pending: Optional[int] = None,
+                 ledger_dir=None, applied_cache_size: int = 65536):
         self.max_report_bytes = int(max_report_bytes)
         self.max_pending = None if max_pending is None else int(max_pending)
+        self.applied_cache_size = (None if applied_cache_size is None
+                                   else int(applied_cache_size))
         self._feds: Dict[str, _Federation] = {}
         if coordinator is not None:
-            self.add_federation(federation_id, coordinator)
+            self.add_federation(
+                federation_id, coordinator,
+                ledger=(None if ledger_dir is None
+                        else ReportLedger(ledger_dir)))
 
     # -- lifecycle / registry -----------------------------------------------
 
-    def add_federation(self, federation_id: str,
-                       coordinator) -> "FederationService":
+    def add_federation(self, federation_id: str, coordinator, *,
+                       ledger: Optional[ReportLedger] = None
+                       ) -> "FederationService":
         """Host another coordinator under ``federation_id`` (async kinds get
-        their worker loop brought up here)."""
-        self._feds[str(federation_id)] = _Federation(coordinator).start()
+        their worker loop brought up here). With a ``ledger``, every
+        accepted submit/stream frame is appended and fsynced before the
+        ack — the durable half of zero-loss failover."""
+        self._feds[str(federation_id)] = _Federation(
+            coordinator, applied_cache_size=self.applied_cache_size,
+            ledger=ledger).start()
         return self
+
+    def host_standby(self, federation_id: str, standby: WarmStandby,
+                     *, adopt_ledger: bool = True) -> "FederationService":
+        """Host a warm standby: the federation answers retryable 503s while
+        the standby tails the primary's ledger in the background; the
+        ``promote`` route (or :meth:`promote_federation`) flips it live.
+        With ``adopt_ledger`` the promoted primary keeps appending to the
+        same ledger directory, so the failover chain can repeat."""
+        fed = _Federation(standby.coordinator,
+                          applied_cache_size=self.applied_cache_size)
+        fed.standby = standby.start()
+        fed.suspended = True
+        self._feds[str(federation_id)] = fed
+        fed._adopt_ledger = bool(adopt_ledger)
+        return self
+
+    def promote_federation(self, federation_id: str = "default"):
+        """Standby → primary: drain the ledger tail, refresh the ETag salt
+        (tokens the dead primary minted never revalidate here), clear the
+        suspended latch, and resume serving — with continued ledger appends
+        when the standby was hosted with ``adopt_ledger``. Returns the
+        promoted coordinator."""
+        fed = self._fed(federation_id)
+        if fed.standby is None:
+            raise E.BadRequest(
+                f"federation {federation_id!r} has no warm standby to "
+                "promote (host one via host_standby)")
+        standby = fed.standby
+        fed.standby = None
+        coordinator = standby.promote()
+        if fed._adopt_ledger and fed.ledger is None:
+            fed.ledger = ReportLedger(standby.ledger_dir)
+        fed.suspended = False
+        fed.start()                        # async kinds: bring the loop up
+        return coordinator
 
     def suspend_federation(self, federation_id: str = "default"):
         """Take a federation out of service — the failover latch. Every
@@ -322,14 +426,17 @@ class FederationService:
     def restore_federation(self, federation_id: str,
                            coordinator) -> "FederationService":
         """Install a replacement coordinator (e.g. cold-started from the
-        snapshot daemon's latest snapshot) and resume serving. The
-        idempotent-ingest ledger carries over, so a client retrying a
-        submit that straddled the outage still gets its idempotent
-        answer."""
+        snapshot daemon's latest snapshot, or a promoted warm standby) and
+        resume serving. The idempotent-ingest map AND the submit ledger
+        carry over, so a client retrying a submit that straddled the
+        outage still gets its idempotent answer."""
         old = self._fed(federation_id)
-        applied = dict(old.applied)
+        applied, ledger = old.applied, old.ledger
+        old.ledger = None                  # keep it open across the swap
         old.close()
-        fed = _Federation(coordinator).start()
+        fed = _Federation(coordinator,
+                          applied_cache_size=self.applied_cache_size,
+                          ledger=ledger).start()
         fed.applied = applied
         self._feds[str(federation_id)] = fed
         return self
@@ -370,10 +477,16 @@ class FederationService:
                 raise E.BadRequest(
                     f"unknown route {route!r} (one of {sorted(self._ROUTES)})")
             fed = self._fed(federation)
-            if fed.suspended:
+            # promote is the one route that must work DURING the outage —
+            # it is how a hosted standby ends it
+            if fed.suspended and route != "promote":
                 raise E.Unavailable(
                     f"federation {federation!r} is failing over — retry "
                     "after the replacement coordinator is installed")
+            if fed.read_only and route in self._MUTATING_ROUTES:
+                raise E.ReadOnlyFederation(
+                    f"{route!r} on read-only federation {federation!r} — "
+                    "replicas never ingest; send writes to the primary")
             return handler(self, fed, bytes(body)), 200
         except E.ServiceError as exc:
             return self._error(exc)
@@ -429,6 +542,30 @@ class FederationService:
         return crc if fed.applied.get(report.client_id) == crc else None
 
     @staticmethod
+    def _client_known(fed: _Federation, client_id: int) -> bool:
+        """Whether the coordinator has already folded this client — the
+        cheap gate in front of a ledger disk scan (a brand-new client must
+        never pay one)."""
+        c = fed.coordinator
+        seen = getattr(getattr(c, "server", c), "_seen", None)
+        return seen is not None and int(client_id) in seen
+
+    def _ledger_replayed(self, fed: _Federation, report: ClientReport,
+                         payload: bytes) -> bool:
+        """Disk half of the idempotency check, consulted only after the
+        in-memory map missed (LRU eviction, or a service restarted /
+        promoted onto the same ledger): ``True`` iff the ledger's newest
+        record for this client is byte-identical to ``payload``. A hit is
+        re-cached into the map."""
+        if fed.ledger is None:
+            return False
+        crc = zlib.crc32(payload)
+        if fed.ledger.find_crc(report.client_id) != crc:
+            return False
+        fed.applied.set(report.client_id, crc)
+        return True
+
+    @staticmethod
     def _request_header(body: bytes) -> Tuple[dict, Dict[str, np.ndarray],
                                               bytes]:
         if not body:
@@ -453,6 +590,12 @@ class FederationService:
         if shards is not None:
             info["num_shards"] = int(shards)
             info["mesh_epoch"] = int(getattr(c, "mesh_epoch", 0))
+        info["read_only"] = fed.read_only
+        if fed.read_only:
+            info["replica_lag"] = int(getattr(c, "lag", 0))
+            info["mesh_epoch"] = int(getattr(c, "mesh_epoch", 0))
+        if fed.ledger is not None:
+            info["ledger_seq"] = int(fed.ledger.last_seq)
         return self._ok(info)
 
     def _r_grow(self, fed: _Federation, body: bytes) -> bytes:
@@ -477,20 +620,37 @@ class FederationService:
                          "num_shards": int(c.num_shards),
                          "version": int(c.version)})
 
+    def _duplicate_ok(self, fed: _Federation) -> bytes:
+        c = fed.coordinator
+        return self._ok({"folded": True, "duplicate": True,
+                         "num_clients": int(c.num_clients),
+                         "version": int(c.version)})
+
     def _r_submit(self, fed: _Federation, body: bytes) -> bytes:
         """Body = one raw :class:`ClientReport` payload → fold outcome.
         Idempotent: re-delivery of the identical payload (client id + CRC)
         answers success without touching the aggregate, so a transport may
-        safely replay a submit whose response was lost."""
+        safely replay a submit whose response was lost — even across an
+        LRU-evicted map entry or a promotion, via the ledger fallback.
+        Accepted folds are appended to the ledger and fsynced BEFORE the
+        ack: anything a client saw acknowledged survives to the standby."""
         report = self._parse_report(body)
         if self._replayed(fed, report, body) is not None:
-            c = fed.coordinator
-            return self._ok({"folded": True, "duplicate": True,
-                             "num_clients": int(c.num_clients),
-                             "version": int(c.version)})
+            return self._duplicate_ok(fed)
         self._check_backpressure(fed)
-        folded = fed.call("submit", report)
-        fed.applied[report.client_id] = zlib.crc32(body)
+        try:
+            folded = fed.call("submit", report)
+        except E.DuplicateClient:
+            # the map missed (evicted / fresh promotion) but the
+            # coordinator knows the client — identical bytes on disk mean
+            # this is a replay, not a conflict
+            if self._ledger_replayed(fed, report, body):
+                return self._duplicate_ok(fed)
+            raise
+        fed.applied.set(report.client_id, zlib.crc32(body))
+        if fed.ledger is not None:
+            fed.ledger.append(body, report.client_id)
+            fed.ledger.sync()              # durable before the ack
         c = fed.coordinator
         return self._ok({"folded": bool(folded), "duplicate": False,
                          "num_clients": int(c.num_clients),
@@ -505,7 +665,7 @@ class FederationService:
         rejects a frame without touching state."""
         frames = _unframe_reports(body)
         results: List[Dict[str, Any]] = []
-        accepted = 0
+        accepted = appended = 0
         for frame in frames:
             try:
                 report = self._parse_report(frame)
@@ -515,13 +675,35 @@ class FederationService:
                     continue
                 if fed.is_async:
                     self._check_backpressure(fed)
+                    # fire-and-forget: the fold outcome is unknown at ack
+                    # time, so the idempotency answer for an evicted map
+                    # entry must come from disk BEFORE re-enqueueing
+                    if (self._client_known(fed, report.client_id)
+                            and self._ledger_replayed(fed, report, frame)):
+                        results.append({"ok": True, "duplicate": True})
+                        accepted += 1
+                        continue
                     fed.call("enqueue", report)
                     results.append({"ok": True, "queued": True})
                 else:
-                    folded = fed.call("submit", report)
+                    try:
+                        folded = fed.call("submit", report)
+                    except E.DuplicateClient:
+                        if self._ledger_replayed(fed, report, frame):
+                            results.append({"ok": True, "duplicate": True})
+                            accepted += 1
+                            continue
+                        raise
                     results.append({"ok": True, "queued": False,
                                     "folded": bool(folded)})
-                fed.applied[report.client_id] = zlib.crc32(frame)
+                fed.applied.set(report.client_id, zlib.crc32(frame))
+                if fed.ledger is not None:
+                    # queued frames are appended the moment they are
+                    # admitted — a crash before the worker applies them
+                    # still drains them into the standby (zero loss for
+                    # fire-and-forget ingest)
+                    fed.ledger.append(frame, report.client_id)
+                    appended += 1
                 accepted += 1
             except E.ServiceError as exc:
                 results.append({"ok": False, "error": exc.code,
@@ -530,6 +712,8 @@ class FederationService:
             except ValueError as exc:
                 results.append({"ok": False, "error": E.BadRequest.code,
                                 "message": str(exc), "retryable": False})
+        if appended:
+            fed.ledger.sync()              # ONE fsync per stream batch
         return self._ok({"results": results, "accepted": accepted,
                          "pending": fed.pending,
                          "version": int(fed.coordinator.version)})
@@ -630,6 +814,18 @@ class FederationService:
                          "version": int(c.version)},
                         [("weight", np.asarray(w, np.float64))])
 
+    def _r_promote(self, fed: _Federation, body: bytes) -> bytes:
+        """Flip a hosted warm standby live (see :meth:`promote_federation`).
+        The one route the suspended latch does not gate."""
+        # self-route through the public method: _fed lookup already done,
+        # but promote_federation re-resolves by id — find ours
+        fid = next(k for k, v in self._feds.items() if v is fed)
+        coordinator = self.promote_federation(fid)
+        return self._ok({"promoted": True,
+                         "kind": type(coordinator).__name__,
+                         "num_clients": int(coordinator.num_clients),
+                         "version": int(coordinator.version)})
+
     _ROUTES = {
         "describe": _r_describe,
         "submit": _r_submit,
@@ -642,7 +838,13 @@ class FederationService:
         "personalized_solve": _r_personalized_solve,
         "grow": _r_grow,
         "shrink": _r_shrink,
+        "promote": _r_promote,
     }
+
+    # routes that change federation state — rejected up front on a
+    # read-only (replica) federation
+    _MUTATING_ROUTES = frozenset(
+        {"submit", "submit_stream", "grow", "shrink"})
 
 
 # ---------------------------------------------------------------------------
@@ -869,6 +1071,28 @@ def serve_http(service: FederationService, host: str = "127.0.0.1",
 # ---------------------------------------------------------------------------
 # The remote client
 # ---------------------------------------------------------------------------
+
+
+def promote_remote(transport: Union[str, FederationService, "InProcTransport",
+                                    "HttpTransport"],
+                   federation: str = "default") -> dict:
+    """Send the ``promote`` route to a standby service — the one request a
+    suspended federation answers, so it cannot go through
+    :class:`RemoteCoordinator` (whose constructor ``describe`` would 503
+    during the outage). Returns the promote response header; a
+    :class:`RemoteCoordinator` can be constructed normally afterwards."""
+    own = False
+    if isinstance(transport, str):
+        transport, own = HttpTransport(transport), True
+    elif isinstance(transport, FederationService):
+        transport = InProcTransport(transport)
+    try:
+        header, _, _ = _decode_response(
+            transport.request("promote", b"", federation))
+        return header
+    finally:
+        if own:
+            transport.close()
 
 
 class RemoteCoordinator:

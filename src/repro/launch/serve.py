@@ -70,6 +70,11 @@ def serve_federation(args) -> None:
     from repro.fl.service import FederationService, serve_http
 
     shard_kw = dict(num_shards=args.shards, tiled_gram=args.tiled)
+    cls_kw = {
+        "sync": (AFLServer, {}),
+        "async": (AsyncAFLServer, {"max_pending": args.max_pending}),
+        "sharded": (ShardedCoordinator, shard_kw),
+    }[args.coordinator]
     kinds = {
         "sync": lambda: AFLServer(args.dim, args.classes, gamma=args.gamma),
         "async": lambda: AsyncAFLServer(args.dim, args.classes,
@@ -78,25 +83,29 @@ def serve_federation(args) -> None:
         "sharded": lambda: ShardedCoordinator(args.dim, args.classes,
                                               gamma=args.gamma, **shard_kw),
     }
+
+    if args.standby_of or args.replica:
+        serve_role(args, cls_kw)
+        return
+
     if args.restore_from:
         import repro.checkpoint as ckpt
 
-        cls_kw = {
-            "sync": (AFLServer, {}),
-            "async": (AsyncAFLServer, {}),
-            "sharded": (ShardedCoordinator, shard_kw),
-        }[args.coordinator]
         coordinator = ckpt.load_server(args.restore_from, cls_kw[0],
                                        **cls_kw[1])
         print(f"restored {args.coordinator} coordinator from "
               f"{args.restore_from} ({coordinator.num_clients} clients)")
     else:
         coordinator = kinds[args.coordinator]()
-    service = FederationService(coordinator, max_pending=args.max_pending)
+    service = FederationService(coordinator, max_pending=args.max_pending,
+                                ledger_dir=args.ledger_dir)
     with service, serve_http(service, args.host, args.port) as srv:
         print(f"federation up: {srv.url}  "
               f"(coordinator={args.coordinator} d={args.dim} "
               f"C={args.classes} γ={args.gamma:g})")
+        if args.ledger_dir:
+            print(f"  ledger: {args.ledger_dir} "
+                  "(every accepted submit, CRC-framed)")
         print(f"  submit:  POST {srv.url}/v1/default/submit  "
               "(ClientReport.to_bytes payload)")
         print(f"  weights: GET  {srv.url}/v1/default/weights")
@@ -121,6 +130,70 @@ def serve_federation(args) -> None:
         finally:
             if daemon is not None:
                 daemon.stop()
+
+
+def serve_role(args, cls_kw) -> None:
+    """Host a warm standby (``--standby-of URL``) or a read-only weights
+    replica (``--replica``), both following ``--ledger-dir``."""
+    from repro.fl import WarmStandby, WeightsReplica, watch_primary
+    from repro.fl.service import FederationService, serve_http
+
+    if not args.ledger_dir:
+        raise SystemExit("--standby-of/--replica require --ledger-dir "
+                         "(the primary's ledger, on shared storage)")
+    cls, kw = cls_kw
+    # Bootstrap kwargs: with no snapshot yet, the follower starts an EMPTY
+    # coordinator of the configured shape and replays the whole ledger.
+    boot_kw = dict(dim=args.dim, num_classes=args.classes,
+                   gamma=args.gamma, **kw)
+    if args.replica:
+        replica = WeightsReplica(args.ledger_dir,
+                                 snapshot_dir=args.snapshot_dir,
+                                 cls=cls, ctor_kw=boot_kw, from_state_kw=kw)
+        service = FederationService(replica)
+        with service, serve_http(service, args.host, args.port) as srv:
+            print(f"weights replica up: {srv.url} "
+                  f"(position={replica.position}, reads only — "
+                  "writes get HTTP 403 read_only)")
+            print("ctrl-c to stop")
+            try:
+                import threading
+
+                threading.Event().wait()
+            except KeyboardInterrupt:
+                print("shutting down")
+        return
+
+    standby = WarmStandby(args.ledger_dir, snapshot_dir=args.snapshot_dir,
+                          cls=cls, ctor_kw=boot_kw, from_state_kw=kw)
+    service = FederationService()
+    service.host_standby("default", standby)
+    with service, serve_http(service, args.host, args.port) as srv:
+        print(f"warm standby up: {srv.url} "
+              f"(tailing {args.ledger_dir}, watching {args.standby_of}; "
+              "503 until promoted)")
+
+        def _alive() -> bool:
+            from repro.fl.service import RemoteCoordinator
+
+            try:
+                RemoteCoordinator(args.standby_of).close()
+                return True
+            except Exception:                              # noqa: BLE001
+                return False
+
+        watch_primary(standby, _alive, grace=args.grace,
+                      interval=args.watch_every,
+                      on_promote=lambda c: service.promote_federation())
+        print(f"PROMOTED: primary missed {args.grace} liveness checks — "
+              f"now serving writes at {srv.url} "
+              f"({standby.coordinator.num_clients} clients, zero loss)")
+        try:
+            import threading
+
+            threading.Event().wait()
+        except KeyboardInterrupt:
+            print("shutting down")
 
 
 def main() -> None:
@@ -161,6 +234,21 @@ def main() -> None:
                      help="snapshot interval seconds (with --snapshot-dir)")
     fed.add_argument("--snapshot-keep", type=int, default=5,
                      help="snapshots retained (with --snapshot-dir)")
+    rep = ap.add_argument_group("replication (ledger / standby / replica)")
+    rep.add_argument("--ledger-dir", default=None,
+                     help="durable submit ledger directory: every accepted "
+                          "submit is appended + fsynced before the ack")
+    rep.add_argument("--standby-of", default=None, metavar="URL",
+                     help="run as a warm standby of the primary at URL: "
+                          "tail --ledger-dir, serve 503s, promote after "
+                          "--grace failed liveness probes")
+    rep.add_argument("--replica", action="store_true",
+                     help="run as a read-only weights replica following "
+                          "--ledger-dir (writes answer HTTP 403 read_only)")
+    rep.add_argument("--grace", type=int, default=3,
+                     help="standby: failed probes before promotion")
+    rep.add_argument("--watch-every", type=float, default=1.0,
+                     help="standby: seconds between liveness probes")
     args = ap.parse_args()
 
     if args.federation:

@@ -264,13 +264,36 @@ class TestSnapshotDaemon:
         d = SnapshotDaemon(svc, directory=tmp_path, keep=2)
         rc.submit_many(_reports(3))
         path = d.snapshot_once()
-        assert path is not None and path.name == "snap-000000000003"
-        assert d.snapshot_once() is None           # same version: no-op
+        assert path is not None and path.name == "snap-000000000003-000000"
+        assert d.snapshot_once() is None           # same state: no-op
         for extra in range(2):
             rc.submit(_reports(1, start_id=10 + extra, seed=extra + 3)[0])
             d.snapshot_once()
         assert len(d.snapshots()) == 2             # retention pruned v3
         assert d.latest_version == 5
+
+    def test_epoch_keyed_snapshots_catch_resharding(self, tmp_path):
+        """Regression: `snap-{clients}` alone skipped a fresh snapshot when
+        a grow/shrink changed the state without admitting a client — the
+        key now carries the mesh epoch, and idempotence is by state digest,
+        so a same-count same-epoch pull with different state (γ drift,
+        rebalance) is re-snapshotted in place rather than skipped."""
+        coord = ShardedCoordinator(DIM, C, gamma=GAMMA, num_shards=2)
+        svc = FederationService(coord)
+        RemoteCoordinator(svc).submit_many(_reports(3))
+        d = SnapshotDaemon(svc, directory=tmp_path, keep=10)
+        first = d.snapshot_once()
+        assert first.name == "snap-000000000003-000000"
+        coord.grow(1)                              # state changed, count not
+        second = d.snapshot_once()
+        assert second is not None                  # the old bug: None here
+        assert second.name == "snap-000000000003-000001"
+        assert d.latest() == second and d.latest_version == 3
+        # same count + epoch + state → true no-op
+        assert d.snapshot_once() is None
+        # a restore from latest sees the post-grow mesh
+        restored = d.restore(ShardedCoordinator, num_shards=3)
+        np.testing.assert_array_equal(restored.solve(0.2), coord.solve(0.2))
 
     def test_restore_cold_starts_any_kind_on_any_shard_count(self, tmp_path):
         reports = _reports(5)

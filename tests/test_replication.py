@@ -1,0 +1,629 @@
+"""Replication: the durable submit ledger, warm standby, read replicas.
+
+The AA law makes the server's state an additive sum of accepted reports, so
+an append-only log of the accepted payloads is a complete, order-insensitive
+replication log. This file locks down the three pieces built on that:
+
+  * :class:`ReportLedger`: CRC framing, rotation, crash-truncated-tail
+    recovery, compaction to snapshot ref + suffix, newest-record CRC lookup;
+  * :class:`LedgerTailer` + :class:`WarmStandby`: incremental tailing, every
+    cold-start source, and the promotion guarantee — bit-for-bit (f64,
+    ``assert_array_equal``) equal to the never-crashed oracle, zero loss,
+    including the kill-primary-mid-stream drill;
+  * :class:`WeightsReplica`: epoch following, staleness gating (typed
+    retryable ``unavailable``), instance-scoped ETag semantics, and the
+    typed ``read_only`` rejection of every mutating route;
+
+plus the service-side satellites: ledger appends fsynced before the ack,
+the bounded ``applied`` map whose evictions fall back to the ledger, and
+ETag lifecycles across restore / resharding / promotion / primary↔replica
+for all four coordinator kinds.
+"""
+
+import struct
+import time
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.fl import (AFLServer, AsyncAFLServer, FederationService,
+                      InProcTransport, LedgerTailer, RemoteCoordinator,
+                      ReportLedger, ShardedCoordinator, WarmStandby,
+                      WeightsReplica, make_report, promote_remote)
+from repro.fl import errors as E
+from repro.fl.replication import last_seq_on_disk
+from repro.checkpoint import SnapshotDaemon
+
+DIM, C, GAMMA = 16, 4, 1.0
+
+
+def _reports(n=8, rows=10, seed=0, start_id=0):
+    rng = np.random.default_rng(seed)
+    return [make_report(start_id + k, rng.standard_normal((rows, DIM)),
+                        np.eye(C)[rng.integers(0, C, rows)], GAMMA)
+            for k in range(n)]
+
+
+def _oracle(reports):
+    srv = AFLServer(DIM, C, gamma=GAMMA)
+    srv.submit_many(reports)
+    return srv
+
+
+def _drain(coord, timeout=5.0):
+    deadline = time.monotonic() + timeout
+    while coord.pending and time.monotonic() < deadline:
+        time.sleep(0.005)
+    assert coord.pending == 0
+
+
+_CTOR = dict(dim=DIM, num_classes=C, gamma=GAMMA)
+
+
+# ---------------------------------------------------------------------------
+# The ledger
+# ---------------------------------------------------------------------------
+
+
+class TestReportLedger:
+    def test_append_sync_replay_roundtrip(self, tmp_path):
+        payloads = [r.to_bytes() for r in _reports(5)]
+        with ReportLedger(tmp_path) as led:
+            for cid, p in enumerate(payloads):
+                assert led.append(p, cid) == cid + 1
+            assert led.last_seq == 5
+            led.sync()
+            assert led.durable_seq == 5
+        led2 = ReportLedger(tmp_path)              # fresh open, same disk
+        assert led2.last_seq == 5
+        got = list(led2.records())
+        assert [(s, c) for s, c, _ in got] == [(k + 1, k) for k in range(5)]
+        assert [p for _, _, p in got] == payloads
+        assert [s for s, _, _ in led2.records(after_seq=3)] == [4, 5]
+        led2.close()
+
+    def test_rotation_seals_segments_and_replay_spans_them(self, tmp_path):
+        payloads = [r.to_bytes() for r in _reports(6)]
+        led = ReportLedger(tmp_path, segment_bytes=2 * len(payloads[0]))
+        for cid, p in enumerate(payloads):
+            led.append(p, cid)
+        segs = sorted(tmp_path.glob("ledger-*.seg"))
+        assert len(segs) >= 2                      # rotation happened
+        assert segs[0].name == "ledger-000000000001.seg"
+        assert [c for _, c, _ in led.records()] == list(range(6))
+        assert last_seq_on_disk(tmp_path) == 6
+        led.close()
+
+    def test_fsync_batch_autosyncs(self, tmp_path):
+        led = ReportLedger(tmp_path, fsync_batch=3)
+        p = _reports(1)[0].to_bytes()
+        led.append(p, 0)
+        led.append(p, 1)
+        assert led.durable_seq == 0                # buffered
+        led.append(p, 2)
+        assert led.durable_seq == 3                # batch hit the valve
+        led.close()
+
+    def test_torn_tail_garbage_is_truncated_on_open(self, tmp_path):
+        led = ReportLedger(tmp_path)
+        for cid, r in enumerate(_reports(3)):
+            led.append(r.to_bytes(), cid)
+        led.close()
+        seg = sorted(tmp_path.glob("ledger-*.seg"))[-1]
+        clean = seg.stat().st_size
+        with seg.open("ab") as f:                  # crash mid-append
+            f.write(b"\x13\x37" * 9)
+        led2 = ReportLedger(tmp_path)
+        assert led2.last_seq == 3                  # tear invisible
+        assert seg.stat().st_size == clean         # physically truncated
+        led2.append(_reports(1, start_id=9)[0].to_bytes(), 9)
+        assert [s for s, _, _ in led2.records()] == [1, 2, 3, 4]
+        led2.close()
+
+    def test_torn_tail_half_record_and_torn_header(self, tmp_path):
+        led = ReportLedger(tmp_path)
+        payload = _reports(1)[0].to_bytes()
+        led.append(payload, 0)
+        led.close()
+        seg = sorted(tmp_path.glob("ledger-*.seg"))[-1]
+        # a half-written record: valid header, body cut short
+        body = b"x" * 64
+        with seg.open("ab") as f:
+            f.write(struct.pack("<II", len(body), zlib.crc32(body)))
+            f.write(body[:10])
+        assert ReportLedger(tmp_path).last_seq == 1
+        # header itself torn (fresh segment, partial magic)
+        (tmp_path / "ledger-000000000099.seg").write_bytes(b"AFL")
+        led3 = ReportLedger(tmp_path)
+        assert led3.last_seq == 1
+        led3.close()
+
+    def test_find_crc_newest_record_wins(self, tmp_path):
+        led = ReportLedger(tmp_path, segment_bytes=1)   # rotate every append
+        a, b = (r.to_bytes() for r in _reports(2, seed=1))
+        led.append(a, 7)
+        led.append(b, 7)                           # same client, newer bytes
+        assert led.find_crc(7) == zlib.crc32(b)
+        assert led.find_crc(8) is None
+        led.close()
+
+    def test_compaction_keeps_suffix_and_floor(self, tmp_path):
+        payloads = [r.to_bytes() for r in _reports(6)]
+        led = ReportLedger(tmp_path, segment_bytes=1)   # one record/segment
+        for cid, p in enumerate(payloads):
+            led.append(p, cid)
+        assert len(list(tmp_path.glob("ledger-*.seg"))) == 6
+        deleted = led.compact("/snaps/snap-000000000004-000000", 4)
+        assert len(deleted) == 4                   # sealed + covered only
+        assert led.base_seq == 4
+        assert led.snapshot_ref.endswith("snap-000000000004-000000")
+        assert [s for s, _, _ in led.records()] == [5, 6]
+        # the floor is monotone: a stale compact cannot lower it
+        led.compact(None, 2)
+        assert led.base_seq == 4
+        led.append(payloads[0], 10)                # appends continue at seq 7
+        assert led.last_seq == 7
+        led.close()
+
+    def test_checkpoint_survives_empty_segments(self, tmp_path):
+        led = ReportLedger(tmp_path)
+        led.append(_reports(1)[0].to_bytes(), 0)
+        led.rotate()                               # active segment is empty
+        led.compact(None, 1)
+        led.close()
+        assert last_seq_on_disk(tmp_path) == 1     # falls back to the floor
+        assert ReportLedger(tmp_path).last_seq == 1
+
+
+class TestLedgerTailer:
+    def test_incremental_polls_across_rotation(self, tmp_path):
+        led = ReportLedger(tmp_path, segment_bytes=1)
+        tail = LedgerTailer(tmp_path)
+        assert tail.poll() == []
+        led.append(b"a", 0)
+        led.append(b"b", 1)
+        led.sync()
+        assert [(s, c, p) for s, c, p in tail.poll()] == [(1, 0, b"a"),
+                                                          (2, 1, b"b")]
+        assert tail.poll() == []                   # nothing new
+        led.append(b"c", 2)
+        led.sync()
+        assert [p for _, _, p in tail.poll()] == [b"c"]
+        assert tail.position == 3 and tail.lag() == 0
+        led.close()
+
+    def test_tailer_stops_at_torn_tail_then_resumes(self, tmp_path):
+        led = ReportLedger(tmp_path)
+        led.append(b"ok", 0)
+        led.sync()
+        seg = sorted(tmp_path.glob("ledger-*.seg"))[-1]
+        with seg.open("ab") as f:
+            f.write(b"\xde\xad\xbe\xef")           # live/torn bytes
+        tail = LedgerTailer(tmp_path)
+        assert [p for _, _, p in tail.poll()] == [b"ok"]
+        assert tail.poll() == []                   # parked at the tear
+        led.close()
+
+    def test_tailer_follows_past_compaction(self, tmp_path):
+        led = ReportLedger(tmp_path, segment_bytes=1)
+        for cid in range(4):
+            led.append(bytes([cid]), cid)
+        led.compact(None, 2)                       # seqs 1–2 gone from disk
+        tail = LedgerTailer(tmp_path)              # cold tailer at 0
+        assert [s for s, _, _ in tail.poll()] == [3, 4]
+        led.close()
+
+
+# ---------------------------------------------------------------------------
+# Service ↔ ledger integration (durability + the bounded applied map)
+# ---------------------------------------------------------------------------
+
+
+class TestServiceLedger:
+    def test_sync_submit_is_durable_before_the_ack(self, tmp_path):
+        svc = FederationService(AFLServer(**_CTOR), ledger_dir=tmp_path)
+        rc = RemoteCoordinator(svc)
+        rc.submit(_reports(1)[0])
+        led = svc._fed("default").ledger
+        assert led.last_seq == 1 and led.durable_seq == 1
+        # idempotent retry: answered from the map, NOT re-appended
+        assert rc.submit(_reports(1)[0]) is True
+        assert led.last_seq == 1
+        svc.close()
+
+    def test_stream_appends_on_admission_one_fsync_per_batch(self, tmp_path):
+        svc = FederationService(AsyncAFLServer(**_CTOR), ledger_dir=tmp_path)
+        rc = RemoteCoordinator(svc)
+        payloads = [r.to_bytes() for r in _reports(5)]
+        out = rc.submit_stream(payloads)
+        assert out["accepted"] == 5
+        led = svc._fed("default").ledger
+        # appended the moment they were admitted — even if the worker has
+        # not folded them yet — and durable in ONE sync
+        assert led.last_seq == 5 and led.durable_seq == 5
+        _drain(svc.coordinator())
+        # replaying the whole batch: all duplicates, nothing re-appended
+        out2 = rc.submit_stream(payloads)
+        assert all(r.get("duplicate") for r in out2["results"])
+        assert led.last_seq == 5
+        svc.close()
+
+    def test_bounded_applied_map_falls_back_to_the_ledger(self, tmp_path):
+        svc = FederationService(AFLServer(**_CTOR), ledger_dir=tmp_path,
+                                applied_cache_size=2)
+        rc = RemoteCoordinator(svc)
+        reports = _reports(5)
+        for r in reports:
+            rc.submit(r)
+        fed = svc._fed("default")
+        assert len(fed.applied) == 2               # LRU held the bound
+        # client 0 was evicted long ago; its exact bytes replay as duplicate
+        t = InProcTransport(svc)
+        from repro.fl.service import _decode_response
+        header, _, _ = _decode_response(
+            t.request("submit", reports[0].to_bytes()))
+        assert header["duplicate"] is True
+        # ...and the hit was re-cached
+        assert fed.applied.get(reports[0].client_id) is not None
+        # DIFFERENT bytes under a known id stay a conflict, not a replay
+        with pytest.raises(E.DuplicateClient):
+            rc.submit_bytes(_reports(1, start_id=1, seed=42)[0].to_bytes())
+        svc.close()
+
+    def test_ledger_less_lru_floor_degrades_to_duplicate_client(self):
+        svc = FederationService(AFLServer(**_CTOR), applied_cache_size=2)
+        rc = RemoteCoordinator(svc)
+        reports = _reports(4)
+        for r in reports:
+            rc.submit(r)
+        # evicted + no ledger: the documented floor is the coordinator's 409
+        with pytest.raises(E.DuplicateClient):
+            rc.submit(reports[0])
+        # a still-cached entry answers idempotently
+        assert rc.submit(reports[3]) is True
+        svc.close()
+
+    def test_stream_to_async_replays_duplicates_from_disk(self, tmp_path):
+        svc = FederationService(AsyncAFLServer(**_CTOR), ledger_dir=tmp_path,
+                                applied_cache_size=1)
+        rc = RemoteCoordinator(svc)
+        payloads = [r.to_bytes() for r in _reports(4)]
+        rc.submit_stream(payloads)
+        _drain(svc.coordinator())
+        # every map entry but one is gone; disk answers for the rest —
+        # nothing is re-enqueued (the fold count proves it below)
+        out = rc.submit_stream(payloads)
+        assert all(r.get("duplicate") for r in out["results"])
+        _drain(svc.coordinator())
+        assert svc.coordinator().num_clients == 4
+        assert svc._fed("default").ledger.last_seq == 4
+        svc.close()
+
+
+# ---------------------------------------------------------------------------
+# Warm standby
+# ---------------------------------------------------------------------------
+
+
+class TestWarmStandby:
+    def test_cold_start_sources(self, tmp_path):
+        led_dir = tmp_path / "ledger"
+        ReportLedger(led_dir).close()              # empty but present
+        # 1. nothing to start from → typed bad_request
+        with pytest.raises(E.BadRequest):
+            WarmStandby(led_dir)
+        # 2. empty via ctor_kw
+        sb = WarmStandby(led_dir, ctor_kw=_CTOR)
+        assert sb.coordinator.num_clients == 0
+        # 3. explicit coordinator wins over everything
+        oracle = _oracle(_reports(2))
+        assert WarmStandby(led_dir, coordinator=oracle).coordinator is oracle
+        # 4. snapshot dir
+        snaps = tmp_path / "snaps"
+        SnapshotDaemon(oracle, directory=snaps).snapshot_once()
+        sb4 = WarmStandby(led_dir, snapshot_dir=snaps)
+        assert sb4.coordinator.num_clients == 2
+        # 5. the ledger's own compaction checkpoint names the snapshot
+        led = ReportLedger(led_dir)
+        snap_path = sorted(snaps.glob("snap-*"))[0]
+        led.compact(snap_path, 2)
+        led.close()
+        sb5 = WarmStandby(led_dir)
+        assert sb5.coordinator.num_clients == 2
+
+    def test_promote_is_bitwise_the_oracle(self, tmp_path):
+        reports = _reports(12)
+        svc = FederationService(AFLServer(**_CTOR),
+                                ledger_dir=tmp_path / "ledger")
+        rc = RemoteCoordinator(svc)
+        for r in reports[:7]:
+            rc.submit(r)
+        snaps = tmp_path / "snaps"
+        SnapshotDaemon(svc, directory=snaps).snapshot_once()
+        rc.submit_stream([r.to_bytes() for r in reports[7:]])
+        coord = WarmStandby(tmp_path / "ledger",
+                            snapshot_dir=snaps).promote()
+        assert coord.num_clients == 12
+        oracle = _oracle(reports)
+        for g in (0.0, 0.3, 2.0):
+            np.testing.assert_array_equal(coord.solve(g), oracle.solve(g))
+        np.testing.assert_array_equal(
+            np.asarray(coord.state()["gram"], np.float64),
+            np.asarray(oracle.state()["gram"], np.float64))
+        svc.close()
+
+    def test_background_tail_follows_live_appends(self, tmp_path):
+        svc = FederationService(AFLServer(**_CTOR), ledger_dir=tmp_path)
+        rc = RemoteCoordinator(svc)
+        with WarmStandby(tmp_path, ctor_kw=_CTOR,
+                         poll_interval=0.01) as sb:
+            for r in _reports(5):
+                rc.submit(r)
+            deadline = time.monotonic() + 5
+            while sb.position < 5 and time.monotonic() < deadline:
+                time.sleep(0.01)
+            assert sb.position == 5 and sb.lag() == 0
+            assert sb.coordinator.num_clients == 5
+        svc.close()
+
+    def test_kill_primary_mid_stream_zero_loss(self, tmp_path):
+        """THE acceptance drill: the primary dies with queued-but-unapplied
+        stream frames; everything a client saw acked drains into the
+        standby, which promotes bit-for-bit (f64) equal to the oracle."""
+        reports = _reports(16)
+        primary = AsyncAFLServer(**_CTOR)
+        svc = FederationService(primary, ledger_dir=tmp_path / "ledger")
+        rc = RemoteCoordinator(svc)
+        rc.submit_stream([r.to_bytes() for r in reports[:10]])
+        _drain(primary)
+        snaps = tmp_path / "snaps"
+        SnapshotDaemon(svc, directory=snaps).snapshot_once()
+        standby = WarmStandby(tmp_path / "ledger", snapshot_dir=snaps,
+                              poll_interval=0.01).start()
+        # in-flight batch is ACKED (admitted + ledgered), then the primary
+        # "dies" before its worker necessarily applied any of it
+        out = rc.submit_stream([r.to_bytes() for r in reports[10:]])
+        assert out["accepted"] == 6
+        svc.suspend_federation()
+        with pytest.raises(E.Unavailable):
+            rc.solve(0.25)
+        promoted = standby.promote()
+        oracle = _oracle(reports)                  # never-crashed run
+        assert promoted.num_clients == 16          # zero reports lost
+        np.testing.assert_array_equal(promoted.solve(0.25),
+                                      oracle.solve(0.25))
+        # the straggler retry against the restored service answers
+        # duplicate, not conflict — the ledger carried the applied CRCs
+        svc.restore_federation("default", promoted)
+        t = InProcTransport(svc)
+        from repro.fl.service import _decode_response
+        header, _, _ = _decode_response(
+            t.request("submit", reports[12].to_bytes()))
+        assert header["duplicate"] is True
+        svc.close()
+
+    def test_hosted_standby_promotes_over_the_wire(self, tmp_path):
+        reports = _reports(6)
+        svc = FederationService(AFLServer(**_CTOR), ledger_dir=tmp_path)
+        RemoteCoordinator(svc).submit_many(reports)
+        svc.close()                                # primary box is gone
+
+        standby_svc = FederationService()
+        standby_svc.host_standby(
+            "default", WarmStandby(tmp_path, ctor_kw=_CTOR))
+        # suspended: every normal route answers retryable 503
+        with pytest.raises(E.Unavailable) as exc:
+            RemoteCoordinator(standby_svc)
+        assert exc.value.retryable
+        header = promote_remote(standby_svc)
+        assert header["promoted"] and header["num_clients"] == 6
+        rc = RemoteCoordinator(standby_svc)        # now a live primary
+        np.testing.assert_array_equal(rc.solve(0.5),
+                                      _oracle(reports).solve(0.5))
+        # adopt_ledger: the promoted primary keeps the chain appendable
+        rc.submit(_reports(1, start_id=50, seed=5)[0])
+        assert standby_svc._fed("default").ledger.last_seq == 7
+        standby_svc.close()
+
+
+# ---------------------------------------------------------------------------
+# Weights read replica
+# ---------------------------------------------------------------------------
+
+
+class TestWeightsReplica:
+    def _primary(self, tmp_path):
+        svc = FederationService(AFLServer(**_CTOR), ledger_dir=tmp_path)
+        rc = RemoteCoordinator(svc)
+        rc.submit_many(_reports(5))
+        return svc, rc
+
+    def test_replica_follows_the_primary_epoch(self, tmp_path):
+        svc, rc = self._primary(tmp_path)
+        rep = WeightsReplica(tmp_path, ctor_kw=_CTOR)
+        assert rep.num_clients == 5 and rep.lag == 0
+        np.testing.assert_array_equal(rep.solve(0.4),
+                                      svc.coordinator().solve(0.4))
+        rc.submit(_reports(1, start_id=9, seed=9)[0])
+        assert rep.lag == 1                        # visible before refresh
+        np.testing.assert_array_equal(rep.solve(0.4),     # auto_refresh
+                                      svc.coordinator().solve(0.4))
+        assert rep.version == svc.coordinator().version
+        rep.close()
+        svc.close()
+
+    def test_lagging_replica_answers_typed_unavailable(self, tmp_path):
+        svc, rc = self._primary(tmp_path)
+        rep = WeightsReplica(tmp_path, ctor_kw=_CTOR, auto_refresh=False)
+        rep.weights(0.2)                           # current: fine
+        rc.submit(_reports(1, start_id=9, seed=9)[0])
+        with pytest.raises(E.Unavailable) as exc:
+            rep.weights(0.2)
+        assert exc.value.retryable
+        assert rep.refresh() == 1                  # manual catch-up
+        rep.weights(0.2)
+        rep.close()
+        svc.close()
+
+    def test_mutations_raise_typed_read_only(self, tmp_path):
+        svc, _rc = self._primary(tmp_path)
+        rep = WeightsReplica(tmp_path, ctor_kw=_CTOR)
+        for call in (lambda: rep.submit(_reports(1, start_id=9)[0]),
+                     lambda: rep.grow(1), lambda: rep.shrink(1)):
+            with pytest.raises(E.ReadOnlyFederation) as exc:
+                call()
+            assert not exc.value.retryable
+        rep.close()
+        svc.close()
+
+    def test_replica_over_the_wire(self, tmp_path):
+        svc, rc = self._primary(tmp_path)
+        rep_svc = FederationService(WeightsReplica(tmp_path, ctor_kw=_CTOR))
+        rrc = RemoteCoordinator(rep_svc)
+        info = rrc.describe()
+        assert info["read_only"] is True and info["replica_lag"] == 0
+        np.testing.assert_array_equal(rrc.solve(0.4), rc.solve(0.4))
+        np.testing.assert_array_equal(
+            rrc.personalized_solve(0.4), rc.personalized_solve(0.4))
+        # the wire rejection is the typed 403, before dispatch
+        with pytest.raises(E.ReadOnlyFederation):
+            rrc.submit(_reports(1, start_id=9)[0])
+        with pytest.raises(E.ReadOnlyFederation):
+            rrc.grow(1)
+        rep_svc.close()
+        svc.close()
+
+    def test_etag_caching_against_the_replica_itself_works(self, tmp_path):
+        svc, rc = self._primary(tmp_path)
+        rep = WeightsReplica(tmp_path, ctor_kw=_CTOR)
+        vw = rep.weights(0.3)
+        assert rep.weights(0.3, if_etag=vw.etag).not_modified
+        rc.submit(_reports(1, start_id=9, seed=9)[0])   # epoch moves
+        vw2 = rep.weights(0.3, if_etag=vw.etag)
+        assert not vw2.not_modified and vw2.etag != vw.etag
+        rep.close()
+        svc.close()
+
+
+# ---------------------------------------------------------------------------
+# ETag lifecycles across instances — all four coordinator kinds
+# ---------------------------------------------------------------------------
+
+
+class _Driver:
+    """Drive any coordinator kind through one synchronous surface: local
+    kinds directly, the async kind through the service's federation adapter
+    (its dedicated event loop), the remote kind over the wire."""
+
+    _CLS = {"sync": AFLServer, "async": AsyncAFLServer,
+            "sharded": ShardedCoordinator, "remote": AFLServer}
+
+    def __init__(self, kind):
+        self.kind = kind
+        kw = {"num_shards": 2} if kind == "sharded" else {}
+        self.restore_kw = kw
+        self.svc = FederationService(self._CLS[kind](**_CTOR, **kw))
+        self.fed = self.svc._fed("default")
+        self.coord = (RemoteCoordinator(self.svc) if kind == "remote"
+                      else self.svc.coordinator())
+
+    def call(self, name, *a, **kw):
+        if self.kind == "remote":
+            return getattr(self.coord, name)(*a, **kw)
+        return self.fed.call(name, *a, **kw)
+
+    def restore(self):
+        """Same state, NEW instance (the restore leg of the lifecycle)."""
+        cls = self._CLS["sync" if self.kind == "remote" else self.kind]
+        reborn = cls.from_state(self.call("state"), **self.restore_kw)
+        self.svc.restore_federation("default", reborn)
+        self.fed = self.svc._fed("default")
+        if self.kind != "remote":
+            self.coord = reborn
+        return reborn
+
+    def refresh_salt(self):
+        target = self.svc.coordinator()
+        target.new_etag_salt()
+
+    def close(self):
+        self.svc.close()
+
+
+@pytest.mark.parametrize("kind", ["sync", "async", "sharded", "remote"])
+class TestETagLifecycle:
+    def test_tokens_never_revalidate_across_restore(self, kind):
+        d = _Driver(kind)
+        try:
+            for r in _reports(4):
+                d.call("submit", r)
+            vw = d.call("weights", 0.5)
+            assert d.call("weights", 0.5, if_etag=vw.etag).not_modified
+            d.restore()
+            vw2 = d.call("weights", 0.5, if_etag=vw.etag)
+            assert not vw2.not_modified            # dead token: full body
+            assert vw2.etag != vw.etag
+            assert d.call("weights", 0.5, if_etag=vw2.etag).not_modified
+        finally:
+            d.close()
+
+    def test_salt_refresh_kills_live_tokens(self, kind):
+        """Promotion and resharding both go through ``new_etag_salt`` — any
+        token minted before the identity change must re-download."""
+        d = _Driver(kind)
+        try:
+            for r in _reports(3):
+                d.call("submit", r)
+            vw = d.call("weights", 0.1)
+            d.refresh_salt()
+            vw2 = d.call("weights", 0.1, if_etag=vw.etag)
+            assert not vw2.not_modified and vw2.etag != vw.etag
+        finally:
+            d.close()
+
+
+class TestETagTopology:
+    def test_resharding_invalidates_tokens(self):
+        coord = ShardedCoordinator(**_CTOR, num_shards=2)
+        coord.submit_many(_reports(4))
+        vw = coord.weights(0.2)
+        assert coord.weights(0.2, if_etag=vw.etag).not_modified
+        coord.grow(1)                              # _resize → new salt
+        vw2 = coord.weights(0.2, if_etag=vw.etag)
+        assert not vw2.not_modified and vw2.etag != vw.etag
+
+    def test_promotion_invalidates_primary_tokens(self, tmp_path):
+        svc = FederationService(AFLServer(**_CTOR), ledger_dir=tmp_path)
+        rc = RemoteCoordinator(svc)
+        rc.submit_many(_reports(4))
+        vw = rc.weights(0.2)
+        promoted = WarmStandby(tmp_path, ctor_kw=_CTOR).promote()
+        vw2 = promoted.weights(0.2, if_etag=vw.etag)
+        assert not vw2.not_modified and vw2.etag != vw.etag
+        # ...and freshly-minted standby tokens work on the standby
+        assert promoted.weights(0.2, if_etag=vw2.etag).not_modified
+        svc.close()
+
+    @pytest.mark.parametrize("kind", ["sync", "sharded"])
+    def test_primary_and_replica_tokens_never_cross(self, kind, tmp_path):
+        cls = AFLServer if kind == "sync" else ShardedCoordinator
+        kw = {} if kind == "sync" else {"num_shards": 2}
+        svc = FederationService(cls(**_CTOR, **kw), ledger_dir=tmp_path)
+        rc = RemoteCoordinator(svc)
+        rc.submit_many(_reports(4))
+        rep = WeightsReplica(tmp_path, cls=cls, ctor_kw={**_CTOR, **kw},
+                             from_state_kw=kw)
+        vw_p = rc.weights(0.3)
+        vw_r = rep.weights(0.3)
+        assert vw_p.etag != vw_r.etag
+        # primary token on the replica: full body, replica-minted token
+        cross = rep.weights(0.3, if_etag=vw_p.etag)
+        assert not cross.not_modified and cross.etag == vw_r.etag
+        # replica token on the primary: full body too
+        assert not rc.weights(0.3, if_etag=vw_r.etag).not_modified
+        # each side's own token still caches
+        assert rc.weights(0.3, if_etag=vw_p.etag).not_modified
+        assert rep.weights(0.3, if_etag=vw_r.etag).not_modified
+        rep.close()
+        svc.close()

@@ -40,6 +40,9 @@ python -m repro.launch.train --arch minicpm_2b --mode analytic --reduced \
 echo "== smoke: elastic failover drill (grow → crash → resharded restore)"
 python examples/failover_drill.py
 
+echo "== smoke: replication drill (kill primary mid-stream → standby + replica)"
+python examples/replication_drill.py
+
 if [[ "$RUN_BENCH" == "1" ]]; then
   # The double config (f64 allowed, f32 default) scoped to the bench step:
   # recorded numbers must match the env fingerprint in BENCH_solve.json.
@@ -47,6 +50,11 @@ if [[ "$RUN_BENCH" == "1" ]]; then
   JAX_ENABLE_X64=1 JAX_DEFAULT_DTYPE_BITS=32 \
     python -m benchmarks.run --quick --only solve_kernels_bench
   python tools/bench_gate.py --smoke --suite quick:solve_kernels_bench
+
+  # Separate suite key: the replica-read trajectory gates against its own
+  # history, never against the solve-kernel baseline.
+  echo "== bench: quick replica-read suite (recorded trajectory)"
+  python -m benchmarks.run --quick --only replica_read_bench
 fi
 
 echo "== check.sh OK"

@@ -1,0 +1,120 @@
+#!/usr/bin/env python
+"""Warm-standby daemon: tail the submit ledger, promote on primary death.
+
+Runs OUTSIDE the primary's process (like ``snapshotd.py``, its whole point
+is surviving the primary). Cold-starts a coordinator from the newest
+snapshot under ``--snapshot-dir`` (or from scratch via ``--dim/--classes``),
+then tails the primary's :class:`~repro.fl.replication.ReportLedger` under
+``--ledger-dir`` so every acked submit — including ones the snapshot never
+saw — is already folded the moment promotion is needed. While the primary
+answers liveness probes (``--watch-url``) the standby serves retryable 503s;
+after ``--grace`` consecutive failures it promotes and starts serving writes
+itself, appending to the SAME ledger so the failover chain can repeat:
+
+  PYTHONPATH=src python tools/standbyd.py \
+      --ledger-dir /var/afl/ledger --snapshot-dir /var/afl/snapshots \
+      --watch-url http://127.0.0.1:8790 --grace 3 --port 8791
+
+``--once`` replays ledger + snapshot, prints the recovered position, and
+exits without serving (an offline restore check). Promotion is bit-for-bit:
+the AA law makes the ledger an order-insensitive sum, so snapshot prefix +
+ledger suffix equals the never-crashed aggregate exactly (f64).
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+import threading
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.fl import (AFLServer, AsyncAFLServer,  # noqa: E402
+                      ShardedCoordinator, WarmStandby, watch_primary)
+from repro.fl.service import (FederationService,  # noqa: E402
+                              RemoteCoordinator, serve_http)
+
+_KINDS = {"sync": AFLServer, "async": AsyncAFLServer,
+          "sharded": ShardedCoordinator}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--ledger-dir", required=True,
+                    help="the primary's submit ledger directory")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="snapshotd directory to cold-start from")
+    ap.add_argument("--watch-url", default=None,
+                    help="primary URL to probe; omit with --once")
+    ap.add_argument("--grace", type=int, default=3,
+                    help="consecutive failed probes before promotion")
+    ap.add_argument("--interval", type=float, default=1.0,
+                    help="seconds between liveness probes")
+    ap.add_argument("--coordinator", default="sync", choices=sorted(_KINDS),
+                    help="coordinator kind to restore as (any kind can "
+                         "replay any ledger)")
+    ap.add_argument("--dim", type=int, default=None,
+                    help="bootstrap dim when no snapshot exists yet")
+    ap.add_argument("--classes", type=int, default=None)
+    ap.add_argument("--gamma", type=float, default=1.0)
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8791)
+    ap.add_argument("--once", action="store_true",
+                    help="replay snapshot + ledger, report, exit")
+    args = ap.parse_args()
+
+    ctor_kw = None
+    if args.dim is not None and args.classes is not None:
+        ctor_kw = dict(dim=args.dim, num_classes=args.classes,
+                       gamma=args.gamma)
+    standby = WarmStandby(args.ledger_dir, snapshot_dir=args.snapshot_dir,
+                          cls=_KINDS[args.coordinator], ctor_kw=ctor_kw)
+
+    if args.once:
+        folded = standby.catch_up()
+        c = standby.coordinator
+        print(f"replayed to seq {standby.position} "
+              f"(+{folded} applied, {standby.skipped} already in snapshot): "
+              f"{type(c).__name__} with {c.num_clients} clients "
+              f"at version {c.version}")
+        return 0
+    if not args.watch_url:
+        ap.error("--watch-url is required unless --once")
+
+    service = FederationService()
+    service.host_standby("default", standby)
+    with service, serve_http(service, args.host, args.port) as srv:
+        print(f"standbyd: tailing {args.ledger_dir}, watching "
+              f"{args.watch_url} (grace {args.grace}); standby at {srv.url} "
+              "answers 503 until promoted; ctrl-c to stop")
+
+        def _alive() -> bool:
+            try:
+                RemoteCoordinator(args.watch_url).close()
+                return True
+            except Exception:                          # noqa: BLE001
+                return False
+
+        stop = threading.Event()
+        try:
+            coordinator = watch_primary(
+                standby, _alive, grace=args.grace, interval=args.interval,
+                stop=stop,
+                on_promote=lambda c: service.promote_federation())
+        except KeyboardInterrupt:
+            stop.set()
+            return 0
+        if coordinator is not None:
+            print(f"PROMOTED: {type(coordinator).__name__} with "
+                  f"{coordinator.num_clients} clients now serving writes "
+                  f"at {srv.url} (zero reports lost)")
+            try:
+                threading.Event().wait()
+            except KeyboardInterrupt:
+                print("shutting down")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
