@@ -1,0 +1,330 @@
+"""Load harness: saturation throughput + tail latency, http vs mux, TLS on/off.
+
+A closed-loop driver (each worker issues its next request the moment the
+previous one completes — no open-loop arrival fiction) measures the two
+serving transports under the workload shapes a federation actually sees:
+
+* ``load_upload`` — N concurrent uploaders, each submit a NEW client
+  joining the federation. HTTP/1.1 is modeled the way distinct clients hit
+  it: one fresh connection per arrival (TCP + optional TLS handshake each
+  time) — there is no keep-alive across different machines. Mux rides ONE
+  shared persistent connection for all workers. The ``upload_ratio`` row
+  records mux-over-http saturation throughput — the PR's ≥2× acceptance
+  bar — plus an honesty row for keep-alive HTTP (same-client polling, the
+  shape keep-alive actually serves).
+* ``load_mixed`` — weights polling with ETag revalidation, periodic
+  ``submit_stream`` batches, and ``personalized_solve``, against a
+  persistent per-worker connection (http) vs one shared mux socket.
+
+Every row carries ``p50_s``/``p99_s``/``ops_per_s`` and lands in the
+``tools/bench_gate.py`` trajectory via ``benchmarks/run.py`` (or this
+file's own ``--smoke`` CLI, which records suite ``quick:load_harness``).
+All measurements run the hardened path: bearer-token auth always on, TLS
+per row.
+"""
+
+from __future__ import annotations
+
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from repro.fl import (AFLServer, FederationService, HttpTransport,
+                      MuxTransport, RemoteCoordinator, generate_self_signed_cert,
+                      make_report, serve_http, serve_mux, server_ssl_context)
+
+from benchmarks.common import print_table
+
+GAMMA = 1.0
+TOKEN = "load-harness-token"
+
+
+def _population(d, c, n_clients, rows_each, seed=0, start_id=0):
+    rng = np.random.default_rng(seed)
+    n = n_clients * rows_each
+    x = rng.standard_normal((n, d))
+    y = np.eye(c)[rng.integers(0, c, n)]
+    return [make_report(start_id + k, x[k * rows_each:(k + 1) * rows_each],
+                        y[k * rows_each:(k + 1) * rows_each], GAMMA)
+            for k in range(n_clients)]
+
+
+def _percentiles(latencies):
+    lat = np.sort(np.asarray(latencies))
+    return (float(lat[int(0.50 * (len(lat) - 1))]),
+            float(lat[int(0.99 * (len(lat) - 1))]))
+
+
+class _Endpoint:
+    """One served federation in a given (transport, tls) config, plus the
+    matching client-side factories."""
+
+    def __init__(self, transport, tls, d, c, cert=None, key=None):
+        self.transport, self.tls = transport, tls
+        self.service = FederationService(AFLServer(d, c, gamma=GAMMA),
+                                         auth_token=TOKEN)
+        ctx = server_ssl_context(cert, key) if tls else None
+        if transport == "mux":
+            self.server = serve_mux(self.service, ssl_context=ctx)
+        else:
+            self.server = serve_http(self.service, ssl_context=ctx)
+        self.url = self.server.url
+        self.cert = cert
+
+    def fresh_transport(self, keep_alive=True):
+        if self.transport == "mux":
+            return MuxTransport(self.url, auth_token=TOKEN,
+                                cafile=self.cert if self.tls else None)
+        return HttpTransport(self.url, auth_token=TOKEN,
+                             keep_alive=keep_alive,
+                             cafile=self.cert if self.tls else None)
+
+    def close(self):
+        self.server.close()
+        self.service.close()
+
+
+# ---------------------------------------------------------------------------
+# Upload saturation: N concurrent NEW clients joining
+# ---------------------------------------------------------------------------
+
+
+def _measure_upload(ep, payload_batches, mode):
+    """Each worker submits its batch of pre-serialized reports. ``mode``:
+    ``fresh`` opens a connection per submit (distinct-clients HTTP model),
+    ``keepalive`` keeps one connection per worker, ``shared`` multiplexes
+    every worker over ONE transport."""
+    latencies: list = []
+    lat_lock = threading.Lock()
+    shared = ep.fresh_transport() if mode == "shared" else None
+    errors: list = []
+
+    def work(batch):
+        local = []
+        try:
+            if mode == "keepalive":
+                tr = ep.fresh_transport()
+            for body in batch:
+                t0 = time.perf_counter()
+                if mode == "fresh":
+                    tr = ep.fresh_transport(keep_alive=False)
+                    try:
+                        tr.request("submit", body, "default")
+                    finally:
+                        tr.close()
+                elif mode == "keepalive":
+                    tr.request("submit", body, "default")
+                else:
+                    shared.request("submit", body, "default")
+                local.append(time.perf_counter() - t0)
+            if mode == "keepalive":
+                tr.close()
+        except Exception as exc:                           # noqa: BLE001
+            errors.append(repr(exc))
+        with lat_lock:
+            latencies.extend(local)
+
+    threads = [threading.Thread(target=work, args=(b,))
+               for b in payload_batches]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    if shared is not None:
+        shared.close()
+    if errors:
+        raise RuntimeError(f"upload workers failed: {errors[:3]}")
+    p50, p99 = _percentiles(latencies)
+    return p50, p99, len(latencies) / wall
+
+
+# ---------------------------------------------------------------------------
+# Mixed read-mostly workload
+# ---------------------------------------------------------------------------
+
+
+def _measure_mixed(ep, ops_per_worker, workers, submit_batches):
+    """Closed loop per worker: ETag-revalidating weights polls, a
+    submit_stream batch every 4th op, personalized_solve every 4th+2."""
+    latencies: list = []
+    lat_lock = threading.Lock()
+    errors: list = []
+    shared = ep.fresh_transport() if ep.transport == "mux" else None
+
+    def work(widx):
+        local = []
+        try:
+            rc = RemoteCoordinator(shared if shared is not None
+                                   else ep.fresh_transport())
+            etag = None
+            for i in range(ops_per_worker):
+                t0 = time.perf_counter()
+                if i % 4 == 0 and submit_batches[widx]:
+                    rc.submit_many(submit_batches[widx].pop())
+                elif i % 4 == 2:
+                    rc.personalized_solve(0.25)
+                else:
+                    vw = rc.weights(0.25, if_etag=etag)
+                    if not vw.not_modified:
+                        etag = vw.etag
+                local.append(time.perf_counter() - t0)
+            if shared is None:
+                rc.close()
+        except Exception as exc:                           # noqa: BLE001
+            errors.append(repr(exc))
+        with lat_lock:
+            latencies.extend(local)
+
+    threads = [threading.Thread(target=work, args=(w,))
+               for w in range(workers)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    if shared is not None:
+        shared.close()
+    if errors:
+        raise RuntimeError(f"mixed workers failed: {errors[:3]}")
+    p50, p99 = _percentiles(latencies)
+    return p50, p99, len(latencies) / wall
+
+
+# ---------------------------------------------------------------------------
+# The bench
+# ---------------------------------------------------------------------------
+
+
+def run(quick: bool = False):
+    # d stays small enough that the SERVICE (d² gram folds under the GIL)
+    # doesn't become the bottleneck — this harness measures the transport;
+    # engine_bench/solve_kernels_bench own the math-side numbers
+    d, c = (64, 8) if quick else (96, 10)
+    workers = 4 if quick else 16
+    uploads_per_worker = 6 if quick else 24
+    mixed_ops = 12 if quick else 40
+    rows = []
+
+    with tempfile.TemporaryDirectory() as td:
+        cert, key = generate_self_signed_cert(td)
+
+        # -- upload saturation, per transport × tls ------------------------
+        throughput = {}
+        for tls in (False, True):
+            for transport, mode in (("http", "fresh"), ("mux", "shared")):
+                ep = _Endpoint(transport, tls, d, c, cert, key)
+                try:
+                    batches = [
+                        [r.to_bytes() for r in _population(
+                            d, c, uploads_per_worker, 8, seed=w,
+                            start_id=10_000 * (w + 1))]
+                        for w in range(workers)]
+                    p50, p99, rps = _measure_upload(ep, batches, mode)
+                finally:
+                    ep.close()
+                throughput[(transport, tls)] = rps
+                rows.append({"bench": "load_upload", "transport": transport,
+                             "tls": tls, "mode": mode, "workers": workers,
+                             "ops": workers * uploads_per_worker,
+                             "p50_s": round(p50, 4), "p99_s": round(p99, 4),
+                             "ops_per_s": round(rps, 1)})
+
+        # honesty row: keep-alive HTTP (same-client polling shape — NOT the
+        # distinct-uploaders model the ratio is defined over)
+        ep = _Endpoint("http", True, d, c, cert, key)
+        try:
+            batches = [[r.to_bytes() for r in _population(
+                d, c, uploads_per_worker, 8, seed=50 + w,
+                start_id=900_000 + 10_000 * w)] for w in range(workers)]
+            p50, p99, rps = _measure_upload(ep, batches, "keepalive")
+        finally:
+            ep.close()
+        rows.append({"bench": "load_upload", "transport": "http-keepalive",
+                     "tls": True, "mode": "keepalive", "workers": workers,
+                     "ops": workers * uploads_per_worker,
+                     "p50_s": round(p50, 4), "p99_s": round(p99, 4),
+                     "ops_per_s": round(rps, 1)})
+
+        # the acceptance-bar row: mux over fresh-connection HTTP/1.1
+        rows.append({"bench": "upload_ratio",
+                     "mux_over_http_plain": round(
+                         throughput[("mux", False)]
+                         / throughput[("http", False)], 2),
+                     "mux_over_http_tls": round(
+                         throughput[("mux", True)]
+                         / throughput[("http", True)], 2)})
+
+        # -- mixed workload, per transport × tls ---------------------------
+        for tls in (False, True):
+            for transport in ("http", "mux"):
+                ep = _Endpoint(transport, tls, d, c, cert, key)
+                try:
+                    seed_rc = RemoteCoordinator(
+                        ep.url, auth_token=TOKEN,
+                        cafile=cert if tls else None)
+                    seed_rc.submit_many(_population(d, c, 8, 8, seed=99))
+                    batches = [
+                        [_population(d, c, 2, 8, seed=100 + w * 10 + i,
+                                     start_id=20_000 * (w + 1) + 100 * i)
+                         for i in range(mixed_ops // 4 + 1)]
+                        for w in range(workers)]
+                    p50, p99, rps = _measure_mixed(ep, mixed_ops, workers,
+                                                   batches)
+                    seed_rc.close()
+                finally:
+                    ep.close()
+                rows.append({"bench": "load_mixed", "transport": transport,
+                             "tls": tls, "workers": workers,
+                             "ops": workers * mixed_ops,
+                             "p50_s": round(p50, 4), "p99_s": round(p99, 4),
+                             "ops_per_s": round(rps, 1)})
+
+    ratio = next(r for r in rows if r["bench"] == "upload_ratio")
+    print_table(
+        f"Load harness — {workers} closed-loop workers (d={d}, C={c}), "
+        f"auth on",
+        ["bench", "transport", "tls", "p50", "p99", "ops/s"],
+        [[r["bench"], r["transport"], "on" if r["tls"] else "off",
+          f"{r['p50_s']*1e3:.1f}ms", f"{r['p99_s']*1e3:.1f}ms",
+          r["ops_per_s"]]
+         for r in rows if r["bench"] != "upload_ratio"])
+    print(f"concurrent-uploader throughput, mux over fresh-conn HTTP/1.1: "
+          f"{ratio['mux_over_http_plain']}x plaintext, "
+          f"{ratio['mux_over_http_tls']}x TLS "
+          f"(acceptance bar: >=2x)")
+    return rows
+
+
+def main() -> None:
+    import argparse
+    import json
+    import pathlib
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-scale sizes; records suite quick:load_harness")
+    args = ap.parse_args()
+
+    from benchmarks import env_truth
+    from benchmarks.run import _bench_metrics, record_trajectory
+
+    env = env_truth.apply()
+    outdir = pathlib.Path("results/bench")
+    outdir.mkdir(parents=True, exist_ok=True)
+    t0 = time.perf_counter()
+    rows = run(quick=args.smoke)
+    secs = time.perf_counter() - t0
+    (outdir / "load_harness.json").write_text(json.dumps(rows, indent=1))
+    record_trajectory(outdir, ("quick" if args.smoke else "full")
+                      + ":load_harness", {"load_harness": secs}, [],
+                      metrics=_bench_metrics("load_harness", rows), env=env)
+    print(f"[load_harness: {secs:.1f}s]")
+
+
+if __name__ == "__main__":
+    main()

@@ -40,6 +40,8 @@ MODULES = [
      "Elastic federation — reshard/resize/snapshot migration cost"),
     ("replica_read_bench",
      "Replication — p50/p99 reads, primary-under-ingest vs replica"),
+    ("load_harness",
+     "Serving at traffic — http vs mux saturation, TLS on/off"),
     ("roofline", "§Roofline — dry-run derived"),
 ]
 

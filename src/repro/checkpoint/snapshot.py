@@ -77,30 +77,64 @@ class SnapshotDaemon:
     """
 
     def __init__(self, source: Any, *, directory, interval: float = 30.0,
-                 keep: int = 5, federation: str = "default"):
+                 keep: int = 5, federation: str = "default",
+                 ledger: Any = None, auth_token: Optional[str] = None):
         self.source = source
         self.directory = pathlib.Path(directory)
         self.interval = float(interval)
         self.keep = int(keep)
         self.federation = str(federation)
+        # ledger-aware compaction: a ReportLedger object (same process as
+        # the writer) or a ledger directory path (out-of-process — uses the
+        # non-truncating compact_ledger_dir). Each successful snapshot tick
+        # compacts the ledger to the highest sequence number the snapshot
+        # provably covers — only when the pull observed pending == 0, so an
+        # async coordinator's queued-but-unapplied records always survive.
+        self.ledger = ledger
+        self.auth_token = auth_token
         self.errors: List[Tuple[float, str]] = []   # (monotonic time, msg)
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
 
     # -- one pull -----------------------------------------------------------
 
+    def _local_floor(self) -> int:
+        """Compaction floor for a bare-coordinator source: ledger position
+        read BEFORE pending (the same ordering contract as the service's
+        describe route) — any record appended after the seq read either
+        shows as pending (floor 0, skip) or carries a higher seq."""
+        if self.ledger is None:
+            return 0
+        if hasattr(self.ledger, "last_seq"):
+            seq = int(self.ledger.last_seq)
+        else:
+            from repro.fl.replication import last_seq_on_disk
+
+            seq = int(last_seq_on_disk(self.ledger))
+        pending = int(getattr(self.source, "pending", 0) or 0)
+        return seq if pending == 0 else 0
+
     def _pull_state(self):
         if hasattr(self.source, "state") and not hasattr(
                 self.source, "handle"):
+            floor = self._local_floor()
             return (self.source.state(), type(self.source).__name__,
-                    int(getattr(self.source, "mesh_epoch", 0)))
+                    int(getattr(self.source, "mesh_epoch", 0)), floor)
         from repro.fl.service import RemoteCoordinator
 
         # per-pull client: a stale connection to a restarted service must
         # never wedge the daemon
-        remote = RemoteCoordinator(self.source, federation=self.federation)
+        remote = RemoteCoordinator(self.source, federation=self.federation,
+                                   auth_token=self.auth_token)
         try:
-            return remote.state(), remote.kind, remote.mesh_epoch
+            info = remote.describe()
+            floor = 0
+            if self.ledger is not None and int(info.get("pending", 0)) == 0:
+                # describe reads ledger_seq before pending, so with
+                # pending == 0 everything ≤ ledger_seq is applied — and
+                # the state pulled below can only cover MORE than that
+                floor = int(info.get("ledger_seq", 0))
+            return remote.state(), remote.kind, remote.mesh_epoch, floor
         finally:
             remote.close()
 
@@ -108,8 +142,10 @@ class SnapshotDaemon:
         """Pull and persist one snapshot; returns its directory, or ``None``
         when this exact state is already on disk (an idempotent no-op).
         Idempotence is by state digest, not name: a resharding or γ change
-        that kept the client count rewrites the stale snapshot in place."""
-        state, kind, epoch = self._pull_state()
+        that kept the client count rewrites the stale snapshot in place.
+        Either way the tick ends by compacting the attached ledger (when
+        one is configured) to what the on-disk snapshot now covers."""
+        state, kind, epoch, floor = self._pull_state()
         version = int(len(state["seen"]))
         digest = state_digest(state)
         path = self.directory / f"snap-{version:012d}-{epoch:06d}"
@@ -117,6 +153,7 @@ class SnapshotDaemon:
         if manifest.exists():
             meta = json.loads(manifest.read_text()).get("metadata", {})
             if meta.get("digest") == digest:
+                self._compact(path, floor)
                 return None
             for f in sorted(path.iterdir(), reverse=True):    # stale: redo
                 f.unlink()
@@ -126,7 +163,24 @@ class SnapshotDaemon:
                             "source_kind": kind, "version": version,
                             "mesh_epoch": epoch, "digest": digest})
         self.prune()
+        self._compact(path, floor)
         return path
+
+    def _compact(self, snapshot_path: pathlib.Path, base_seq: int) -> None:
+        """Tick compaction: drop ledger segments the snapshot covers. A
+        failure here never fails the snapshot — compaction is advisory."""
+        if self.ledger is None or base_seq <= 0:
+            return
+        try:
+            if hasattr(self.ledger, "compact"):
+                self.ledger.compact(snapshot_path, base_seq)
+            else:
+                from repro.fl.replication import compact_ledger_dir
+
+                compact_ledger_dir(self.ledger, snapshot_path, base_seq)
+        except Exception as exc:                       # noqa: BLE001
+            self.errors.append((time.monotonic(),
+                                f"compact: {type(exc).__name__}: {exc}"))
 
     def prune(self) -> None:
         """Drop all but the newest ``keep`` snapshots."""

@@ -10,12 +10,17 @@ stay as submodules.
 
 from repro.fl.api import (AFLClient, AFLServer, ClientReport, Coordinator,
                           GammaSweep, SCHEMA_VERSION, ShardedCoordinator,
-                          VersionedWeights, evaluate_weight, make_report,
-                          masked_reports)
+                          Transport, VersionedWeights, evaluate_weight,
+                          make_report, masked_reports)
 from repro.fl.async_server import AsyncAFLServer
 from repro.fl.errors import ServiceError
+from repro.fl.mux import (MuxFederationServer, MuxTransport,
+                          client_ssl_context, generate_self_signed_cert,
+                          mux_ping, probe_alive, serve_mux,
+                          server_ssl_context)
 from repro.fl.replication import (LedgerTailer, ReportLedger, WarmStandby,
-                                  WeightsReplica, watch_primary)
+                                  WeightsReplica, compact_ledger_dir,
+                                  watch_primary)
 from repro.fl.service import (FederationService, HttpTransport,
                               InProcTransport, RemoteCoordinator,
                               promote_remote, serve_http)
@@ -31,18 +36,28 @@ __all__ = [
     "HttpTransport",
     "InProcTransport",
     "LedgerTailer",
+    "MuxFederationServer",
+    "MuxTransport",
     "RemoteCoordinator",
     "ReportLedger",
     "SCHEMA_VERSION",
     "ServiceError",
     "ShardedCoordinator",
+    "Transport",
     "VersionedWeights",
     "WarmStandby",
     "WeightsReplica",
+    "client_ssl_context",
+    "compact_ledger_dir",
     "evaluate_weight",
+    "generate_self_signed_cert",
     "make_report",
     "masked_reports",
+    "mux_ping",
+    "probe_alive",
     "promote_remote",
     "serve_http",
+    "serve_mux",
+    "server_ssl_context",
     "watch_primary",
 ]

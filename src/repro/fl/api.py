@@ -58,6 +58,7 @@ __all__ = [
     "GammaSweep",
     "VersionedWeights",
     "Coordinator",
+    "Transport",
     "AFLServer",
     "ShardedCoordinator",
 ]
@@ -515,6 +516,21 @@ class Coordinator(Protocol):
                 if_etag: Optional[str] = None): ...
 
     def state(self) -> Dict[str, np.ndarray]: ...
+
+
+@runtime_checkable
+class Transport(Protocol):
+    """What every service transport satisfies — opaque byte envelopes in,
+    opaque byte envelopes out, no knowledge of what they carry. Implemented
+    by :class:`~repro.fl.service.InProcTransport`,
+    :class:`~repro.fl.service.HttpTransport`, and
+    :class:`~repro.fl.mux.MuxTransport`; anything satisfying it plugs into
+    :class:`~repro.fl.service.RemoteCoordinator` unchanged."""
+
+    def request(self, route: str, body: bytes = b"",
+                federation: str = "default") -> bytes: ...
+
+    def close(self) -> None: ...
 
 
 # ---------------------------------------------------------------------------

@@ -31,6 +31,7 @@ __all__ = [
     "EmptyFederation",
     "Backpressure",
     "ReadOnlyFederation",
+    "Unauthorized",
     "Unavailable",
     "UnknownFederation",
     "ERROR_CODES",
@@ -115,6 +116,16 @@ class ReadOnlyFederation(ServiceError, ValueError):
     http_status = 403
 
 
+class Unauthorized(ServiceError):
+    """The federation requires a bearer token and the request carried a
+    missing or wrong one. Checked before routing, so nothing was applied and
+    coordinator state is untouched. Not retryable: resending the same
+    credentials can never succeed — obtain a valid token first."""
+
+    code = "unauthorized"
+    http_status = 401
+
+
 class Unavailable(ServiceError):
     """The federation exists but is temporarily not being served — its
     coordinator died and a failover restore is in flight. Nothing was
@@ -137,7 +148,8 @@ ERROR_CODES: Dict[str, Type[ServiceError]] = {
     cls.code: cls
     for cls in (BadRequest, CorruptReport, OversizedReport, DuplicateClient,
                 GammaMismatch, EmptyFederation, Backpressure,
-                ReadOnlyFederation, Unavailable, UnknownFederation)
+                ReadOnlyFederation, Unauthorized, Unavailable,
+                UnknownFederation)
 }
 
 

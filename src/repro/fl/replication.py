@@ -68,6 +68,7 @@ __all__ = [
     "LedgerTailer",
     "WarmStandby",
     "WeightsReplica",
+    "compact_ledger_dir",
     "last_seq_on_disk",
     "watch_primary",
 ]
@@ -360,6 +361,42 @@ def last_seq_on_disk(directory) -> int:
         return int(ckpt.get("base_seq", 0))
     except (OSError, ValueError):
         return 0
+
+
+def compact_ledger_dir(directory, snapshot_ref,
+                       base_seq: int) -> List[pathlib.Path]:
+    """Out-of-process compaction: the same sealed-segment drop + checkpoint
+    floor as :meth:`ReportLedger.compact`, but safe to run against a
+    directory whose writer lives in ANOTHER process. Opening a second
+    :class:`ReportLedger` would be wrong here — its open-time recovery
+    physically truncates what it takes for a torn tail, racing the live
+    writer's active segment. This helper only ever deletes *sealed*
+    segments fully covered by ``base_seq`` and atomically rewrites the
+    checkpoint file; the active (last) segment is never touched. The
+    caller owns the safety of ``base_seq`` (e.g. a ``describe`` that
+    reported the seq with ``pending == 0``). Returns deleted paths."""
+    directory = pathlib.Path(directory)
+    base_seq = int(base_seq)
+    segs = _list_segments(directory)
+    deleted = []
+    for path, nxt in zip(segs[:-1], segs[1:]):
+        if _seg_start(nxt) - 1 <= base_seq:
+            try:
+                path.unlink()
+            except OSError:
+                continue               # already gone (concurrent compactor)
+            deleted.append(path)
+    ckpt_path = directory / _CKPT_NAME
+    try:
+        prior = int(json.loads(ckpt_path.read_text()).get("base_seq", 0))
+    except (OSError, ValueError):
+        prior = 0
+    tmp = ckpt_path.with_suffix(".tmp")
+    tmp.write_text(json.dumps(
+        {"snapshot": None if snapshot_ref is None else str(snapshot_ref),
+         "base_seq": max(base_seq, prior)}))
+    os.replace(tmp, ckpt_path)
+    return deleted
 
 
 class LedgerTailer:

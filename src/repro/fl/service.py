@@ -43,10 +43,12 @@ is rejected, never silently folded into a federation.
 from __future__ import annotations
 
 import asyncio
+import hmac
 import http.client
 import http.server
 import inspect
 import json
+import ssl
 import struct
 import threading
 import urllib.parse
@@ -248,8 +250,12 @@ class _Federation:
 
     def __init__(self, coordinator, *,
                  applied_cache_size: Optional[int] = None,
-                 ledger: Optional[ReportLedger] = None):
+                 ledger: Optional[ReportLedger] = None,
+                 auth_token: Optional[str] = None):
         self.coordinator = coordinator
+        # bearer token gating every route of this federation (None = open).
+        # Checked before dispatch, so a bad token never touches state.
+        self.auth_token = None if auth_token is None else str(auth_token)
         self.is_async = inspect.iscoroutinefunction(
             getattr(coordinator, "submit", None))
         self._lock = threading.RLock()
@@ -353,7 +359,8 @@ class FederationService:
     def __init__(self, coordinator=None, *, federation_id: str = "default",
                  max_report_bytes: int = 64 << 20,
                  max_pending: Optional[int] = None,
-                 ledger_dir=None, applied_cache_size: int = 65536):
+                 ledger_dir=None, applied_cache_size: int = 65536,
+                 auth_token: Optional[str] = None):
         self.max_report_bytes = int(max_report_bytes)
         self.max_pending = None if max_pending is None else int(max_pending)
         self.applied_cache_size = (None if applied_cache_size is None
@@ -363,31 +370,51 @@ class FederationService:
             self.add_federation(
                 federation_id, coordinator,
                 ledger=(None if ledger_dir is None
-                        else ReportLedger(ledger_dir)))
+                        else ReportLedger(ledger_dir)),
+                auth_token=auth_token)
 
     # -- lifecycle / registry -----------------------------------------------
 
     def add_federation(self, federation_id: str, coordinator, *,
-                       ledger: Optional[ReportLedger] = None
+                       ledger: Optional[ReportLedger] = None,
+                       auth_token: Optional[str] = None
                        ) -> "FederationService":
         """Host another coordinator under ``federation_id`` (async kinds get
         their worker loop brought up here). With a ``ledger``, every
         accepted submit/stream frame is appended and fsynced before the
-        ack — the durable half of zero-loss failover."""
+        ack — the durable half of zero-loss failover. With ``auth_token``,
+        every request must carry that bearer token or it answers the typed
+        ``unauthorized`` 401 before touching any state."""
         self._feds[str(federation_id)] = _Federation(
             coordinator, applied_cache_size=self.applied_cache_size,
-            ledger=ledger).start()
+            ledger=ledger, auth_token=auth_token).start()
         return self
 
+    def set_auth_token(self, token: Optional[str],
+                       federation_id: str = "default") -> None:
+        """Install (or clear, with ``None``) the bearer token gating a
+        hosted federation — rotation without a restart."""
+        self._fed(federation_id).auth_token = (
+            None if token is None else str(token))
+
+    def ledger(self, federation_id: str = "default"
+               ) -> Optional[ReportLedger]:
+        """The federation's live submit ledger (None when not configured) —
+        e.g. to hand the in-process snapshot daemon for tick compaction."""
+        return self._fed(federation_id).ledger
+
     def host_standby(self, federation_id: str, standby: WarmStandby,
-                     *, adopt_ledger: bool = True) -> "FederationService":
+                     *, adopt_ledger: bool = True,
+                     auth_token: Optional[str] = None
+                     ) -> "FederationService":
         """Host a warm standby: the federation answers retryable 503s while
         the standby tails the primary's ledger in the background; the
         ``promote`` route (or :meth:`promote_federation`) flips it live.
         With ``adopt_ledger`` the promoted primary keeps appending to the
         same ledger directory, so the failover chain can repeat."""
         fed = _Federation(standby.coordinator,
-                          applied_cache_size=self.applied_cache_size)
+                          applied_cache_size=self.applied_cache_size,
+                          auth_token=auth_token)
         fed.standby = standby.start()
         fed.suspended = True
         self._feds[str(federation_id)] = fed
@@ -436,7 +463,8 @@ class FederationService:
         old.close()
         fed = _Federation(coordinator,
                           applied_cache_size=self.applied_cache_size,
-                          ledger=ledger).start()
+                          ledger=ledger,
+                          auth_token=old.auth_token).start()
         fed.applied = applied
         self._feds[str(federation_id)] = fed
         return self
@@ -469,7 +497,8 @@ class FederationService:
     # -- the wire entrypoint -------------------------------------------------
 
     def handle(self, route: str, body: bytes = b"",
-               federation: str = "default") -> Tuple[bytes, int]:
+               federation: str = "default", *,
+               token: Optional[str] = None) -> Tuple[bytes, int]:
         """Dispatch one request → (response envelope, HTTP status)."""
         try:
             handler = self._ROUTES.get(route)
@@ -477,6 +506,14 @@ class FederationService:
                 raise E.BadRequest(
                     f"unknown route {route!r} (one of {sorted(self._ROUTES)})")
             fed = self._fed(federation)
+            # auth precedes EVERYTHING else (promote included): a bad
+            # bearer token answers 401 with coordinator state untouched
+            if fed.auth_token is not None and (
+                    token is None
+                    or not hmac.compare_digest(str(token), fed.auth_token)):
+                raise E.Unauthorized(
+                    f"federation {federation!r} requires a valid bearer "
+                    "token")
             # promote is the one route that must work DURING the outage —
             # it is how a hosted standby ends it
             if fed.suspended and route != "promote":
@@ -576,6 +613,13 @@ class FederationService:
 
     def _r_describe(self, fed: _Federation, body: bytes) -> bytes:
         c = fed.coordinator
+        # ledger position is read BEFORE pending: a compactor may treat
+        # ledger_seq as fully-applied only when the same describe reports
+        # pending == 0 — with this ordering, any record appended after the
+        # seq read either shows up as pending or carries a higher seq, so
+        # compacting to ledger_seq can never drop an unapplied report
+        ledger_seq = (None if fed.ledger is None
+                      else int(fed.ledger.last_seq))
         info = {
             "kind": type(c).__name__,
             "dim": int(c.dim),
@@ -585,6 +629,7 @@ class FederationService:
             "version": int(c.version),
             "pending": fed.pending,
             "max_report_bytes": self.max_report_bytes,
+            "auth_required": fed.auth_token is not None,
         }
         shards = getattr(c, "num_shards", None)
         if shards is not None:
@@ -594,8 +639,8 @@ class FederationService:
         if fed.read_only:
             info["replica_lag"] = int(getattr(c, "lag", 0))
             info["mesh_epoch"] = int(getattr(c, "mesh_epoch", 0))
-        if fed.ledger is not None:
-            info["ledger_seq"] = int(fed.ledger.last_seq)
+        if ledger_seq is not None:
+            info["ledger_seq"] = ledger_seq
         return self._ok(info)
 
     def _r_grow(self, fed: _Federation, body: bytes) -> bytes:
@@ -857,12 +902,15 @@ class InProcTransport:
     for tests — what crosses this transport is exactly what would cross
     HTTP, so in-proc coverage IS wire coverage."""
 
-    def __init__(self, service: FederationService):
+    def __init__(self, service: FederationService, *,
+                 auth_token: Optional[str] = None):
         self._service = service
+        self.auth_token = auth_token
 
     def request(self, route: str, body: bytes = b"",
                 federation: str = "default") -> bytes:
-        data, _status = self._service.handle(route, body, federation)
+        data, _status = self._service.handle(route, body, federation,
+                                             token=self.auth_token)
         return data
 
     def close(self) -> None:
@@ -894,20 +942,33 @@ class HttpTransport:
     """
 
     def __init__(self, url: str, *, timeout: float = 60.0,
-                 keep_alive: bool = True):
+                 keep_alive: bool = True,
+                 auth_token: Optional[str] = None,
+                 ssl_context: Optional[ssl.SSLContext] = None,
+                 cafile: Optional[str] = None):
         parts = urllib.parse.urlsplit(url)
-        if parts.scheme != "http":
-            raise ValueError(f"HttpTransport speaks http:// only, got {url!r}")
+        if parts.scheme not in ("http", "https"):
+            raise ValueError(
+                f"HttpTransport speaks http:// or https:// only, got {url!r}")
+        self._tls = parts.scheme == "https"
         self._host = parts.hostname or "127.0.0.1"
-        self._port = parts.port or 80
+        self._port = parts.port or (443 if self._tls else 80)
         self._prefix = parts.path.rstrip("/")
         self._timeout = float(timeout)
         self.keep_alive = bool(keep_alive)
+        self.auth_token = auth_token
+        self._ssl = (ssl_context if ssl_context is not None
+                     else (ssl.create_default_context(cafile=cafile)
+                           if self._tls else None))
         self._local = threading.local()
         self._pool: Dict[threading.Thread, http.client.HTTPConnection] = {}
         self._pool_lock = threading.Lock()
 
     def _connect(self) -> http.client.HTTPConnection:
+        if self._tls:
+            return http.client.HTTPSConnection(
+                self._host, self._port, timeout=self._timeout,
+                context=self._ssl)
         return http.client.HTTPConnection(self._host, self._port,
                                           timeout=self._timeout)
 
@@ -946,6 +1007,8 @@ class HttpTransport:
                 federation: str = "default") -> bytes:
         path = self._path(route, federation)
         headers = {"Content-Type": "application/octet-stream"}
+        if self.auth_token is not None:
+            headers["Authorization"] = f"Bearer {self.auth_token}"
         if not self.keep_alive:
             conn = self._connect()
             try:
@@ -986,6 +1049,9 @@ class _HttpHandler(http.server.BaseHTTPRequestHandler):
     service: FederationService = None  # type: ignore[assignment]
     server_version = "AFLFederationService/1"
     protocol_version = "HTTP/1.1"
+    # headers and body go out in separate writes; without TCP_NODELAY the
+    # Nagle + delayed-ACK interaction costs ~40ms per response on loopback
+    disable_nagle_algorithm = True
 
     def _respond(self, data: bytes, status: int) -> None:
         self.send_response(status)
@@ -994,13 +1060,18 @@ class _HttpHandler(http.server.BaseHTTPRequestHandler):
         self.end_headers()
         self.wfile.write(data)
 
+    def _bearer(self) -> Optional[str]:
+        auth = self.headers.get("Authorization") or ""
+        return auth[7:] if auth.startswith("Bearer ") else None
+
     def _route(self, body: bytes) -> Tuple[bytes, int]:
         parts = [p for p in self.path.split("?")[0].split("/") if p]
         if len(parts) != 3 or parts[0] != "v1":
             return FederationService._error(E.BadRequest(
                 f"path {self.path!r} is not /v1/<federation>/<route>"))
         return self.service.handle(parts[2], body,
-                                   urllib.parse.unquote(parts[1]))
+                                   urllib.parse.unquote(parts[1]),
+                                   token=self._bearer())
 
     def do_POST(self) -> None:  # noqa: N802 (stdlib handler naming)
         length = int(self.headers.get("Content-Length") or 0)
@@ -1031,12 +1102,17 @@ class HttpFederationServer:
     """
 
     def __init__(self, service: FederationService, host: str = "127.0.0.1",
-                 port: int = 0):
+                 port: int = 0, *,
+                 ssl_context: Optional[ssl.SSLContext] = None):
         handler = type("BoundHandler", (_HttpHandler,), {"service": service})
         self.service = service
         self._httpd = http.server.ThreadingHTTPServer((host, port), handler)
         self.host, self.port = self._httpd.server_address[:2]
-        self.url = f"http://{self.host}:{self.port}"
+        if ssl_context is not None:
+            self._httpd.socket = ssl_context.wrap_socket(
+                self._httpd.socket, server_side=True)
+        self.url = (f"{'https' if ssl_context is not None else 'http'}"
+                    f"://{self.host}:{self.port}")
         self._thread: Optional[threading.Thread] = None
 
     def start(self) -> "HttpFederationServer":
@@ -1062,10 +1138,30 @@ class HttpFederationServer:
 
 
 def serve_http(service: FederationService, host: str = "127.0.0.1",
-               port: int = 0) -> HttpFederationServer:
-    """Serve a federation over loopback HTTP; returns the started server
-    (``.url`` carries the ephemeral port when ``port=0``)."""
-    return HttpFederationServer(service, host, port).start()
+               port: int = 0, *,
+               ssl_context: Optional[ssl.SSLContext] = None
+               ) -> HttpFederationServer:
+    """Serve a federation over loopback HTTP (HTTPS with ``ssl_context``);
+    returns the started server (``.url`` carries the ephemeral port when
+    ``port=0``)."""
+    return HttpFederationServer(service, host, port,
+                                ssl_context=ssl_context).start()
+
+
+def _transport_for_url(url: str, *, auth_token: Optional[str] = None,
+                       ssl_context: Optional[ssl.SSLContext] = None,
+                       cafile: Optional[str] = None):
+    """URL scheme → transport: http/https → :class:`HttpTransport`,
+    mux/muxs → :class:`~repro.fl.mux.MuxTransport` (imported lazily —
+    mux builds on this module, not the other way around)."""
+    scheme = urllib.parse.urlsplit(url).scheme
+    if scheme in ("mux", "muxs"):
+        from repro.fl.mux import MuxTransport
+
+        return MuxTransport(url, auth_token=auth_token,
+                            ssl_context=ssl_context, cafile=cafile)
+    return HttpTransport(url, auth_token=auth_token,
+                         ssl_context=ssl_context, cafile=cafile)
 
 
 # ---------------------------------------------------------------------------
@@ -1075,7 +1171,10 @@ def serve_http(service: FederationService, host: str = "127.0.0.1",
 
 def promote_remote(transport: Union[str, FederationService, "InProcTransport",
                                     "HttpTransport"],
-                   federation: str = "default") -> dict:
+                   federation: str = "default", *,
+                   auth_token: Optional[str] = None,
+                   ssl_context: Optional[ssl.SSLContext] = None,
+                   cafile: Optional[str] = None) -> dict:
     """Send the ``promote`` route to a standby service — the one request a
     suspended federation answers, so it cannot go through
     :class:`RemoteCoordinator` (whose constructor ``describe`` would 503
@@ -1083,9 +1182,11 @@ def promote_remote(transport: Union[str, FederationService, "InProcTransport",
     :class:`RemoteCoordinator` can be constructed normally afterwards."""
     own = False
     if isinstance(transport, str):
-        transport, own = HttpTransport(transport), True
+        transport, own = _transport_for_url(
+            transport, auth_token=auth_token, ssl_context=ssl_context,
+            cafile=cafile), True
     elif isinstance(transport, FederationService):
-        transport = InProcTransport(transport)
+        transport = InProcTransport(transport, auth_token=auth_token)
     try:
         header, _, _ = _decode_response(
             transport.request("promote", b"", federation))
@@ -1099,9 +1200,11 @@ class RemoteCoordinator:
     """A :class:`~repro.fl.api.Coordinator` whose backing state lives behind
     a transport.
 
-    Construction accepts a URL string (→ :class:`HttpTransport`), a
-    :class:`FederationService` (→ :class:`InProcTransport`), or any object
-    with the transport ``request`` method. ``describe`` pins dim/classes/γ
+    Construction accepts a URL string (``http(s)://`` →
+    :class:`HttpTransport`, ``mux(s)://`` →
+    :class:`~repro.fl.mux.MuxTransport`), a :class:`FederationService`
+    (→ :class:`InProcTransport`), or any object with the transport
+    ``request`` method. ``describe`` pins dim/classes/γ
     at construction; everything else is a wire round-trip, and every error
     re-raises as the same typed taxonomy exception an in-process coordinator
     would have thrown — which is why this class passes the local
@@ -1115,11 +1218,16 @@ class RemoteCoordinator:
     def __init__(self,
                  transport: Union[str, FederationService, "InProcTransport",
                                   "HttpTransport"],
-                 *, federation: str = "default"):
+                 *, federation: str = "default",
+                 auth_token: Optional[str] = None,
+                 ssl_context: Optional[ssl.SSLContext] = None,
+                 cafile: Optional[str] = None):
         if isinstance(transport, str):
-            transport = HttpTransport(transport)
+            transport = _transport_for_url(
+                transport, auth_token=auth_token, ssl_context=ssl_context,
+                cafile=cafile)
         elif isinstance(transport, FederationService):
-            transport = InProcTransport(transport)
+            transport = InProcTransport(transport, auth_token=auth_token)
         self._transport = transport
         self.federation = str(federation)
         info = self.describe()

@@ -64,10 +64,32 @@ def serve(cfg, batch: int, prompt_len: int, gen: int, seed: int = 0):
     return out, t1 - t0, t2 - t1
 
 
+def _make_endpoint(service, args):
+    """Start the configured transport server: ``--mux`` → the multiplexed
+    mux protocol, default → HTTP; either one TLS-wrapped when
+    ``--tls-cert/--tls-key`` are given (plus required client certificates
+    with ``--tls-client-ca``)."""
+    from repro.fl.service import serve_http
+
+    ssl_ctx = None
+    if args.tls_cert:
+        from repro.fl.mux import server_ssl_context
+
+        if not args.tls_key:
+            raise SystemExit("--tls-cert requires --tls-key")
+        ssl_ctx = server_ssl_context(args.tls_cert, args.tls_key,
+                                     client_ca=args.tls_client_ca)
+    if args.mux:
+        from repro.fl.mux import serve_mux
+
+        return serve_mux(service, args.host, args.port, ssl_context=ssl_ctx)
+    return serve_http(service, args.host, args.port, ssl_context=ssl_ctx)
+
+
 def serve_federation(args) -> None:
-    """Host a FederationService over HTTP until interrupted."""
+    """Host a FederationService over HTTP or mux until interrupted."""
     from repro.fl import AFLServer, AsyncAFLServer, ShardedCoordinator
-    from repro.fl.service import FederationService, serve_http
+    from repro.fl.service import FederationService
 
     shard_kw = dict(num_shards=args.shards, tiled_gram=args.tiled)
     cls_kw = {
@@ -98,28 +120,46 @@ def serve_federation(args) -> None:
     else:
         coordinator = kinds[args.coordinator]()
     service = FederationService(coordinator, max_pending=args.max_pending,
-                                ledger_dir=args.ledger_dir)
-    with service, serve_http(service, args.host, args.port) as srv:
+                                ledger_dir=args.ledger_dir,
+                                auth_token=args.auth_token)
+    with service, _make_endpoint(service, args) as srv:
         print(f"federation up: {srv.url}  "
               f"(coordinator={args.coordinator} d={args.dim} "
               f"C={args.classes} γ={args.gamma:g})")
+        if args.tls_cert:
+            print(f"  TLS: {args.tls_cert}"
+                  + (f" (client certs required: {args.tls_client_ca})"
+                     if args.tls_client_ca else ""))
+        if args.auth_token:
+            print("  auth: bearer token required on every request")
         if args.ledger_dir:
             print(f"  ledger: {args.ledger_dir} "
                   "(every accepted submit, CRC-framed)")
-        print(f"  submit:  POST {srv.url}/v1/default/submit  "
-              "(ClientReport.to_bytes payload)")
-        print(f"  weights: GET  {srv.url}/v1/default/weights")
+        if args.mux:
+            print(f"  point RemoteCoordinator at {srv.url} "
+                  "(many clients per connection — interleaved streams)")
+        else:
+            print(f"  submit:  POST {srv.url}/v1/default/submit  "
+                  "(ClientReport.to_bytes payload)")
+            print(f"  weights: GET  {srv.url}/v1/default/weights")
         daemon = None
         if args.snapshot_dir:
             from repro.checkpoint import SnapshotDaemon
 
+            # in-proc pull (the service object, not the URL): no TLS /
+            # token round-trips, and the live ledger object rides along so
+            # successful ticks compact what each snapshot now covers
             daemon = SnapshotDaemon(
-                srv.url, directory=args.snapshot_dir,
-                interval=args.snapshot_every, keep=args.snapshot_keep)
+                service, directory=args.snapshot_dir,
+                interval=args.snapshot_every, keep=args.snapshot_keep,
+                ledger=service.ledger() if args.ledger_dir else None,
+                auth_token=args.auth_token)
             daemon.start()
             print(f"  snapshots: {args.snapshot_dir} "
                   f"every {args.snapshot_every:g}s "
-                  f"(keep {args.snapshot_keep})")
+                  f"(keep {args.snapshot_keep}"
+                  + (", ledger compacted per tick)" if args.ledger_dir
+                     else ")"))
         print("ctrl-c to stop")
         try:
             import threading
@@ -136,7 +176,7 @@ def serve_role(args, cls_kw) -> None:
     """Host a warm standby (``--standby-of URL``) or a read-only weights
     replica (``--replica``), both following ``--ledger-dir``."""
     from repro.fl import WarmStandby, WeightsReplica, watch_primary
-    from repro.fl.service import FederationService, serve_http
+    from repro.fl.service import FederationService
 
     if not args.ledger_dir:
         raise SystemExit("--standby-of/--replica require --ledger-dir "
@@ -150,8 +190,8 @@ def serve_role(args, cls_kw) -> None:
         replica = WeightsReplica(args.ledger_dir,
                                  snapshot_dir=args.snapshot_dir,
                                  cls=cls, ctor_kw=boot_kw, from_state_kw=kw)
-        service = FederationService(replica)
-        with service, serve_http(service, args.host, args.port) as srv:
+        service = FederationService(replica, auth_token=args.auth_token)
+        with service, _make_endpoint(service, args) as srv:
             print(f"weights replica up: {srv.url} "
                   f"(position={replica.position}, reads only — "
                   "writes get HTTP 403 read_only)")
@@ -167,20 +207,17 @@ def serve_role(args, cls_kw) -> None:
     standby = WarmStandby(args.ledger_dir, snapshot_dir=args.snapshot_dir,
                           cls=cls, ctor_kw=boot_kw, from_state_kw=kw)
     service = FederationService()
-    service.host_standby("default", standby)
-    with service, serve_http(service, args.host, args.port) as srv:
+    service.host_standby("default", standby, auth_token=args.auth_token)
+    with service, _make_endpoint(service, args) as srv:
         print(f"warm standby up: {srv.url} "
               f"(tailing {args.ledger_dir}, watching {args.standby_of}; "
               "503 until promoted)")
 
         def _alive() -> bool:
-            from repro.fl.service import RemoteCoordinator
+            from repro.fl.mux import probe_alive
 
-            try:
-                RemoteCoordinator(args.standby_of).close()
-                return True
-            except Exception:                              # noqa: BLE001
-                return False
+            return probe_alive(args.standby_of, cafile=args.watch_cafile,
+                               auth_token=args.auth_token)
 
         watch_primary(standby, _alive, grace=args.grace,
                       interval=args.watch_every,
@@ -216,6 +253,20 @@ def main() -> None:
                      choices=["sync", "async", "sharded"])
     fed.add_argument("--host", default="127.0.0.1")
     fed.add_argument("--port", type=int, default=8790)
+    fed.add_argument("--mux", action="store_true",
+                     help="serve the multiplexed mux protocol instead of "
+                          "HTTP (many interleaved streams per connection)")
+    fed.add_argument("--tls-cert", default=None,
+                     help="TLS server certificate PEM (enables TLS; see "
+                          "repro.fl.mux.generate_self_signed_cert)")
+    fed.add_argument("--tls-key", default=None,
+                     help="TLS server private key PEM (with --tls-cert)")
+    fed.add_argument("--tls-client-ca", default=None,
+                     help="require client certificates signed by this CA "
+                          "PEM (mutual TLS)")
+    fed.add_argument("--auth-token", default=None,
+                     help="bearer token every request must carry "
+                          "(typed 401 unauthorized otherwise)")
     fed.add_argument("--max-pending", type=int, default=None,
                      help="ingest high-watermark (HTTP 429 past it)")
     fed.add_argument("--shards", type=int, default=None,
@@ -249,6 +300,9 @@ def main() -> None:
                      help="standby: failed probes before promotion")
     rep.add_argument("--watch-every", type=float, default=1.0,
                      help="standby: seconds between liveness probes")
+    rep.add_argument("--watch-cafile", default=None,
+                     help="standby: CA PEM for probing a TLS primary "
+                          "(muxs:// or https:// --standby-of URL)")
     args = ap.parse_args()
 
     if args.federation:

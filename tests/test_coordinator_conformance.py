@@ -23,10 +23,12 @@ sharded-vs-sync solve check on that same x64 path, and the K=1000
 
 import asyncio
 import contextlib
+import functools
 import inspect
 import os
 import subprocess
 import sys
+import tempfile
 import textwrap
 
 import numpy as np
@@ -36,17 +38,31 @@ from repro.core import analytic as al
 from repro.fl import (AFLClient, AFLServer, AsyncAFLServer, ClientReport,
                       Coordinator, FederationService, GammaSweep,
                       RemoteCoordinator, ShardedCoordinator, VersionedWeights,
-                      make_report, masked_reports, serve_http)
+                      generate_self_signed_cert, make_report, masked_reports,
+                      serve_http, serve_mux, server_ssl_context)
 
 DIM, C, GAMMA = 24, 5, 1.0
-KINDS = ["sync", "async", "sharded", "remote"]
+KINDS = ["sync", "async", "sharded", "remote", "mux"]
 # device (f32) arithmetic for the in-process sharded solve; the 1e-6/1e-12
-# claims are made on the x64 subprocess path below. The remote kind fronts
-# an AFLServer over f64-lossless wire bytes, so it inherits sync tolerances.
+# claims are made on the x64 subprocess path below. The remote and mux kinds
+# front an AFLServer over f64-lossless wire bytes, so they inherit sync
+# tolerances — mux additionally rides TLS + bearer auth, proving the secured
+# transport is still bit-identical.
 TOL = {"sync": dict(rtol=1e-8, atol=1e-10),
        "async": dict(rtol=1e-8, atol=1e-10),
        "sharded": dict(rtol=1e-3, atol=2e-3),
-       "remote": dict(rtol=1e-8, atol=1e-10)}
+       "remote": dict(rtol=1e-8, atol=1e-10),
+       "mux": dict(rtol=1e-8, atol=1e-10)}
+
+_MUX_TOKEN = "conformance-suite-token"
+
+
+@functools.lru_cache(maxsize=1)
+def _tls_files():
+    """One self-signed keypair for the whole module (openssl run is ~1s)."""
+    directory = tempfile.mkdtemp(prefix="afl-mux-tls-")
+    cert, key = generate_self_signed_cert(directory)
+    return str(cert), str(key)
 
 
 def _reports(n_clients=10, rows_each=8, seed=0):
@@ -77,6 +93,23 @@ async def _serve_remote(server):
 
 
 @contextlib.asynccontextmanager
+async def _serve_mux(server):
+    """A RemoteCoordinator speaking the multiplexed binary framing over a
+    REAL loopback TLS socket, bearer-token auth enforced per request — the
+    hardest transport configuration runs the same matrix as everything
+    else."""
+    cert, key = _tls_files()
+    service = FederationService(server, auth_token=_MUX_TOKEN)
+    with serve_mux(service, ssl_context=server_ssl_context(cert, key)) as srv:
+        coord = RemoteCoordinator(srv.url, auth_token=_MUX_TOKEN,
+                                  cafile=cert)
+        try:
+            yield coord
+        finally:
+            coord.close()
+
+
+@contextlib.asynccontextmanager
 async def _make(kind, **kw):
     if kind == "sync":
         yield AFLServer(DIM, C, gamma=GAMMA, **kw)
@@ -84,6 +117,9 @@ async def _make(kind, **kw):
         yield ShardedCoordinator(DIM, C, gamma=GAMMA)
     elif kind == "remote":
         async with _serve_remote(AFLServer(DIM, C, gamma=GAMMA, **kw)) as rc:
+            yield rc
+    elif kind == "mux":
+        async with _serve_mux(AFLServer(DIM, C, gamma=GAMMA, **kw)) as rc:
             yield rc
     else:
         async with AsyncAFLServer(DIM, C, gamma=GAMMA, **kw) as srv:
@@ -98,6 +134,9 @@ async def _restore(kind, state):
         yield ShardedCoordinator.from_state(state)
     elif kind == "remote":
         async with _serve_remote(AFLServer.from_state(state)) as rc:
+            yield rc
+    elif kind == "mux":
+        async with _serve_mux(AFLServer.from_state(state)) as rc:
             yield rc
     else:
         async with AsyncAFLServer.from_state(state) as srv:
@@ -471,6 +510,28 @@ class TestRemoteWireEquivalence:
         for w_remote, w_local in zip(multi,
                                      inproc.solve_multi_gamma([0.0, 0.1, 1.0])):
             np.testing.assert_array_equal(w_remote, w_local)
+
+    def test_mux_tls_auth_solved_head_bit_for_bit_at_f64(self):
+        """Same bar for the multiplexed transport, in its hardest config:
+        TLS socket + bearer auth, and the bits still match exactly."""
+        x, y, reps = _reports()
+        inproc = AFLServer(DIM, C, gamma=GAMMA)
+        inproc.submit_many(reps)
+
+        async def body():
+            async with _make("mux") as coord:
+                for r in reps:
+                    await _call(coord.submit(r))
+                return (await _call(coord.solve()),
+                        await _call(coord.solve(0.5)),
+                        await _call(coord.solve_multi_gamma([0.0, 0.1, 1.0])))
+
+        w0, w_half, multi = asyncio.run(body())
+        np.testing.assert_array_equal(w0, inproc.solve())
+        np.testing.assert_array_equal(w_half, inproc.solve(0.5))
+        for w_mux, w_local in zip(multi,
+                                  inproc.solve_multi_gamma([0.0, 0.1, 1.0])):
+            np.testing.assert_array_equal(w_mux, w_local)
 
     def test_remote_shim_module_is_gone(self):
         """The repro.fl.server deprecation window (PR 3) is closed."""

@@ -1,0 +1,568 @@
+"""AFLMux transport/server tests: the parts conformance can't see.
+
+The conformance matrix (test_coordinator_conformance.py) already drives a
+RemoteCoordinator through TLS + auth mux as its fifth kind; this file locks
+down the transport itself: genuine stream interleaving on one socket, frame
+robustness (torn / oversized / corrupt frames answered with GOAWAY, server
+survives for the next connection), graceful GOAWAY drain, the
+never-replay-a-sent-submit discipline, per-stream flow control under a tiny
+window, TLS handshake failure modes (pinning, mutual TLS), and bearer-token
+auth leaving coordinator state untouched on every transport.
+"""
+
+import socket
+import ssl
+import struct
+import tempfile
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.fl import (AFLServer, FederationService, HttpTransport,
+                      MuxTransport, RemoteCoordinator, Transport,
+                      generate_self_signed_cert, make_report, mux_ping,
+                      probe_alive, serve_http, serve_mux, server_ssl_context)
+from repro.fl import errors as E
+from repro.fl.mux import (F_END_STREAM, PREFACE, T_DATA, T_GOAWAY, T_HEADERS,
+                          _HDR, _U32)
+
+DIM, C, GAMMA = 16, 4, 1.0
+
+
+def _reports(n=4, rows=5, seed=0, start_id=0):
+    rng = np.random.default_rng(seed)
+    return [make_report(start_id + k, rng.standard_normal((rows, DIM)),
+                        np.eye(C)[rng.integers(0, C, rows)], GAMMA)
+            for k in range(n)]
+
+
+def _service(**kw):
+    return FederationService(AFLServer(DIM, C, gamma=GAMMA), **kw)
+
+
+@pytest.fixture(scope="module")
+def tls_files():
+    with tempfile.TemporaryDirectory() as td:
+        yield generate_self_signed_cert(td)
+
+
+# ---------------------------------------------------------------------------
+# Basics
+# ---------------------------------------------------------------------------
+
+
+class TestMuxBasics:
+    def test_satisfies_transport_protocol(self):
+        with serve_mux(_service()) as srv:
+            tr = MuxTransport(srv.url)
+            try:
+                assert isinstance(tr, Transport)
+                assert isinstance(HttpTransport("http://127.0.0.1:1"),
+                                  Transport)
+            finally:
+                tr.close()
+
+    def test_rejects_non_mux_scheme(self):
+        with pytest.raises(ValueError):
+            MuxTransport("http://127.0.0.1:8790")
+
+    def test_ping_and_probe(self):
+        with serve_mux(_service()) as srv:
+            assert mux_ping(srv.url) >= 0.0
+            assert probe_alive(srv.url)
+
+    def test_probe_alive_speaks_http_too(self):
+        with serve_http(_service()) as srv:
+            assert probe_alive(srv.url)
+
+    def test_probe_dead_endpoint_is_false_not_an_exception(self):
+        lsock = socket.create_server(("127.0.0.1", 0))
+        port = lsock.getsockname()[1]
+        lsock.close()                          # nobody ever listened here
+        assert not probe_alive(f"mux://127.0.0.1:{port}", timeout=2.0)
+        assert not probe_alive(f"http://127.0.0.1:{port}", timeout=2.0)
+
+    def test_full_coordinator_roundtrip_bit_for_bit(self):
+        reps = _reports(6)
+        oracle = AFLServer(DIM, C, gamma=GAMMA)
+        oracle.submit_many(reps)
+        with serve_mux(_service()) as srv:
+            rc = RemoteCoordinator(srv.url)
+            try:
+                for r in reps:
+                    rc.submit(r)
+                np.testing.assert_array_equal(rc.solve(), oracle.solve())
+                vw = rc.weights()
+                assert rc.weights(if_etag=vw.etag).not_modified
+            finally:
+                rc.close()
+
+
+# ---------------------------------------------------------------------------
+# Interleaving: many streams, one socket
+# ---------------------------------------------------------------------------
+
+
+class _GatedService(FederationService):
+    """handle() blocks on ``gate`` for routes in ``slow_routes`` — lets a
+    test hold one stream in flight while proving others still complete."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.gate = threading.Event()
+        self.slow_routes = set()
+        self.entered = threading.Event()
+
+    def handle(self, route, body=b"", federation="default", *, token=None):
+        if route in self.slow_routes:
+            self.entered.set()
+            assert self.gate.wait(30.0), "test gate never opened"
+        return super().handle(route, body, federation, token=token)
+
+
+class TestInterleavedStreams:
+    def test_fast_stream_completes_while_slow_stream_blocked(self):
+        svc = _GatedService(AFLServer(DIM, C, gamma=GAMMA))
+        svc.slow_routes = {"state"}
+        with svc, serve_mux(svc) as srv:
+            tr = MuxTransport(srv.url)
+            try:
+                results = {}
+
+                def slow():
+                    results["state"] = tr.request("state", b"", "default")
+
+                t = threading.Thread(target=slow)
+                t.start()
+                assert svc.entered.wait(10.0)
+                # the slow stream is parked inside handle() — a second
+                # stream on the SAME socket must still round-trip
+                assert tr.request("describe", b"", "default")
+                svc.gate.set()
+                t.join(10.0)
+                assert results["state"]
+            finally:
+                tr.close()
+
+    def test_eight_threads_share_one_transport(self):
+        with serve_mux(_service()) as srv:
+            tr = MuxTransport(srv.url)
+            rc = RemoteCoordinator(tr)
+            errs = []
+            batches = [_reports(3, start_id=100 * (i + 1)) for i in range(8)]
+
+            def work(i):
+                try:
+                    for r in batches[i]:
+                        rc.submit(r)
+                    rc.weights()
+                except Exception as exc:               # noqa: BLE001
+                    errs.append((i, repr(exc)))
+
+            threads = [threading.Thread(target=work, args=(i,))
+                       for i in range(8)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join(30.0)
+            assert not errs, errs
+            assert rc.num_clients == 24
+            assert tr.reconnects == 0          # one socket carried it all
+            tr.close()
+
+
+# ---------------------------------------------------------------------------
+# Frame robustness: every corruption is a typed connection error, and the
+# server keeps serving fresh connections afterwards
+# ---------------------------------------------------------------------------
+
+
+def _raw_conn(srv):
+    sock = socket.create_connection((srv.host, srv.port), timeout=5.0)
+    sock.sendall(PREFACE)
+    return sock
+
+
+def _expect_goaway(sock):
+    """Read frames until GOAWAY (or EOF, which some paths race to)."""
+    sock.settimeout(5.0)
+    rfile = sock.makefile("rb")
+    while True:
+        hdr = rfile.read(_HDR.size)
+        if len(hdr) < _HDR.size:
+            return None                       # peer closed without GOAWAY
+        length, ftype, _, _ = _HDR.unpack(hdr)
+        payload = rfile.read(length)
+        if ftype == T_GOAWAY:
+            return payload[4:].decode("utf-8", "replace")
+
+
+class TestFrameRobustness:
+    def test_bad_preface_gets_goaway(self):
+        with serve_mux(_service()) as srv:
+            sock = socket.create_connection((srv.host, srv.port), timeout=5.0)
+            sock.sendall(b"GET / HTTP/1.1\r\n")
+            msg = _expect_goaway(sock)
+            sock.close()
+            assert msg is None or "preface" in msg
+            assert probe_alive(srv.url)       # server survived
+
+    def test_oversized_frame_is_connection_fatal(self):
+        with serve_mux(_service(), max_frame_bytes=4096) as srv:
+            sock = _raw_conn(srv)
+            sock.sendall(_HDR.pack(1 << 30, T_HEADERS, 0, 1))
+            msg = _expect_goaway(sock)
+            sock.close()
+            assert msg is None or "frame cap" in msg
+            assert probe_alive(srv.url)
+
+    def test_torn_frame_is_connection_fatal(self):
+        with serve_mux(_service()) as srv:
+            sock = _raw_conn(srv)
+            # header promises 100 payload bytes; send 10 and slam the door
+            sock.sendall(_HDR.pack(100, T_HEADERS, 0, 1) + b"x" * 10)
+            sock.shutdown(socket.SHUT_WR)
+            _expect_goaway(sock)
+            sock.close()
+            assert probe_alive(srv.url)
+
+    def test_corrupt_headers_json_gets_goaway(self):
+        with serve_mux(_service()) as srv:
+            sock = _raw_conn(srv)
+            junk = b"\xff\xfenot json"
+            sock.sendall(_HDR.pack(len(junk), T_HEADERS, F_END_STREAM, 1)
+                         + junk)
+            msg = _expect_goaway(sock)
+            sock.close()
+            assert msg is None or "HEADERS" in msg
+            assert probe_alive(srv.url)
+
+    def test_even_or_stale_stream_id_rejected(self):
+        with serve_mux(_service()) as srv:
+            sock = _raw_conn(srv)
+            hdr = b'{"route": "describe", "federation": "default"}'
+            sock.sendall(_HDR.pack(len(hdr), T_HEADERS, F_END_STREAM, 2)
+                         + hdr)
+            msg = _expect_goaway(sock)
+            sock.close()
+            assert msg is None or "odd" in msg
+            assert probe_alive(srv.url)
+
+    def test_unknown_frame_type_gets_goaway(self):
+        with serve_mux(_service()) as srv:
+            sock = _raw_conn(srv)
+            sock.sendall(_HDR.pack(0, 99, 0, 1))
+            msg = _expect_goaway(sock)
+            sock.close()
+            assert msg is None or "frame type" in msg
+            assert probe_alive(srv.url)
+
+    def test_oversized_body_rejected_with_typed_error_not_goaway(self):
+        """A too-large request BODY (well-framed) is a stream-level typed
+        error — the connection and its other streams keep working."""
+        svc = _service(max_report_bytes=512)
+        with svc, serve_mux(svc) as srv:
+            tr = MuxTransport(srv.url)
+            try:
+                with pytest.raises(E.OversizedReport):
+                    RemoteCoordinator(tr).submit_bytes(b"\x00" * (64 << 10))
+                # same connection still serves
+                assert tr.request("describe", b"", "default")
+                assert tr.reconnects == 0
+            finally:
+                tr.close()
+
+
+# ---------------------------------------------------------------------------
+# GOAWAY drain
+# ---------------------------------------------------------------------------
+
+
+class TestGoawayDrain:
+    def test_close_drains_inflight_stream_to_completion(self):
+        svc = _GatedService(AFLServer(DIM, C, gamma=GAMMA))
+        svc.slow_routes = {"describe"}
+        srv = serve_mux(svc)
+        tr = MuxTransport(srv.url)
+        results = {}
+
+        def inflight():
+            results["describe"] = tr.request("describe", b"", "default")
+
+        t = threading.Thread(target=inflight)
+        t.start()
+        assert svc.entered.wait(10.0)
+
+        closer = threading.Thread(
+            target=lambda: srv.close(drain=True, timeout=15.0))
+        closer.start()
+        time.sleep(0.2)                       # GOAWAY is on the wire now
+        svc.gate.set()                        # release the parked dispatch
+        t.join(15.0)
+        closer.join(15.0)
+        assert not t.is_alive() and not closer.is_alive()
+        # the in-flight stream was answered, not dropped, through shutdown
+        assert results.get("describe")
+        tr.close()
+        svc.close()
+
+    def test_unprocessed_stream_fails_retryable_on_goaway(self):
+        """A fake server GOAWAYs with last_stream_id=0: the client's pending
+        stream (id 1 > 0) must fail with retryable Unavailable — the promise
+        that it was never processed."""
+        lsock = socket.create_server(("127.0.0.1", 0))
+        host, port = lsock.getsockname()[:2]
+
+        def fake_server():
+            sock, _ = lsock.accept()
+            rfile = sock.makefile("rb")
+            rfile.read(len(PREFACE))
+            rfile.read(_HDR.size)             # the HEADERS frame header…
+            sock.sendall(_HDR.pack(4 + 5, T_GOAWAY, 0, 0)
+                         + _U32.pack(0) + b"drain")
+            time.sleep(0.5)
+            sock.close()
+
+        t = threading.Thread(target=fake_server, daemon=True)
+        t.start()
+        tr = MuxTransport(f"mux://{host}:{port}", timeout=10.0)
+        try:
+            with pytest.raises(E.Unavailable) as exc:
+                tr.request("describe", b"", "default")
+            assert exc.value.retryable
+        finally:
+            tr.close()
+            lsock.close()
+
+
+# ---------------------------------------------------------------------------
+# Replay discipline
+# ---------------------------------------------------------------------------
+
+
+class TestReplayDiscipline:
+    def test_sent_submit_is_never_resent(self):
+        """The server reads a full submit, then dies without answering. The
+        client MUST surface ConnectionError and MUST NOT retry: exactly one
+        connection ever carried the request."""
+        lsock = socket.create_server(("127.0.0.1", 0))
+        host, port = lsock.getsockname()[:2]
+        connections = []
+
+        def fake_server():
+            while True:
+                try:
+                    sock, _ = lsock.accept()
+                except OSError:
+                    return
+                connections.append(sock)
+                rfile = sock.makefile("rb")
+                rfile.read(len(PREFACE))
+                while True:                   # read the whole request…
+                    hdr = rfile.read(_HDR.size)
+                    if len(hdr) < _HDR.size:
+                        break
+                    length, _, flags, _ = _HDR.unpack(hdr)
+                    rfile.read(length)
+                    if flags & F_END_STREAM:
+                        # …then die before responding (shutdown, not just
+                        # close: rfile holds the fd, so close alone would
+                        # never send the FIN)
+                        sock.shutdown(socket.SHUT_RDWR)
+                        sock.close()
+                        break
+
+        t = threading.Thread(target=fake_server, daemon=True)
+        t.start()
+        tr = MuxTransport(f"mux://{host}:{port}", timeout=10.0)
+        try:
+            with pytest.raises(ConnectionError):
+                tr.request("submit", _reports(1)[0].to_bytes(), "default")
+            time.sleep(0.3)
+            assert len(connections) == 1      # no silent replay
+        finally:
+            tr.close()
+            lsock.close()
+
+    def test_stale_connection_retries_transparently(self):
+        """Requests on a connection the server already dropped (idle death)
+        reconnect and succeed — HEADERS never reached a router, so the
+        single retry is safe."""
+        with serve_mux(_service()) as srv:
+            tr = MuxTransport(srv.url)
+            try:
+                assert tr.request("describe", b"", "default")
+                # sever every server-side socket under the client
+                for conn in list(srv._conns):
+                    conn.close()
+                deadline = time.monotonic() + 5.0
+                while tr._conn is not None and not tr._conn.dead \
+                        and time.monotonic() < deadline:
+                    time.sleep(0.01)
+                assert tr.request("describe", b"", "default")
+                assert tr.reconnects == 1
+            finally:
+                tr.close()
+
+
+# ---------------------------------------------------------------------------
+# Flow control
+# ---------------------------------------------------------------------------
+
+
+class TestFlowControl:
+    def test_large_bodies_cross_a_tiny_window_exactly(self):
+        """8 KiB windows + 2 KiB chunks force the WINDOW_UPDATE path in both
+        directions; the solve must still be bit-for-bit."""
+        reps = _reports(6, rows=32)
+        oracle = AFLServer(DIM, C, gamma=GAMMA)
+        oracle.submit_many(reps)
+        with serve_mux(_service(), initial_window=8 << 10,
+                       chunk_bytes=2 << 10) as srv:
+            tr = MuxTransport(srv.url, initial_window=8 << 10,
+                              chunk_bytes=2 << 10)
+            rc = RemoteCoordinator(tr)
+            try:
+                for r in reps:
+                    rc.submit(r)
+                np.testing.assert_array_equal(rc.solve(), oracle.solve())
+                # state download (the big response) crosses the window too
+                state = rc.state()
+                assert AFLServer.from_state(state).num_clients == len(reps)
+            finally:
+                tr.close()
+
+
+# ---------------------------------------------------------------------------
+# TLS
+# ---------------------------------------------------------------------------
+
+
+class TestTls:
+    def test_handshake_and_pinning(self, tls_files):
+        cert, key = tls_files
+        with serve_mux(_service(),
+                       ssl_context=server_ssl_context(cert, key)) as srv:
+            assert srv.url.startswith("muxs://")
+            assert mux_ping(srv.url, cafile=cert) >= 0.0
+
+    def test_unpinned_client_fails_cleanly_server_survives(self, tls_files):
+        cert, key = tls_files
+        with serve_mux(_service(),
+                       ssl_context=server_ssl_context(cert, key)) as srv:
+            tr = MuxTransport(srv.url)        # no cafile → self-signed fails
+            with pytest.raises(ssl.SSLError):
+                tr.request("describe", b"", "default")
+            tr.close()
+            deadline = time.monotonic() + 5.0
+            while not srv.errors and time.monotonic() < deadline:
+                time.sleep(0.01)
+            assert any(where == "tls" for where, _ in srv.errors)
+            assert probe_alive(srv.url, cafile=cert)
+
+    def test_mutual_tls_requires_client_cert(self, tls_files):
+        cert, key = tls_files
+        ctx = server_ssl_context(cert, key, client_ca=cert)
+        with serve_mux(_service(), ssl_context=ctx) as srv:
+            bare = MuxTransport(srv.url, cafile=cert)
+            with pytest.raises((ssl.SSLError, ConnectionError, OSError)):
+                bare.request("describe", b"", "default")
+            bare.close()
+
+            from repro.fl import client_ssl_context
+            cctx = client_ssl_context(cert, certfile=cert, keyfile=key)
+            tr = MuxTransport(srv.url, ssl_context=cctx)
+            try:
+                assert tr.request("describe", b"", "default")
+            finally:
+                tr.close()
+
+    def test_https_transport_and_server(self, tls_files):
+        cert, key = tls_files
+        with serve_http(_service(),
+                        ssl_context=server_ssl_context(cert, key)) as srv:
+            assert srv.url.startswith("https://")
+            rc = RemoteCoordinator(srv.url, cafile=cert)
+            try:
+                assert rc.describe()["kind"]
+            finally:
+                rc.close()
+
+
+# ---------------------------------------------------------------------------
+# Auth
+# ---------------------------------------------------------------------------
+
+
+class TestAuth:
+    def test_unauthorized_is_in_the_taxonomy(self):
+        exc = E.from_code("unauthorized", "nope")
+        assert isinstance(exc, E.Unauthorized)
+        assert exc.http_status == 401
+        assert not exc.retryable
+
+    @pytest.mark.parametrize("token", [None, "wrong"])
+    def test_bad_token_rejected_state_untouched_mux(self, token):
+        svc = _service(auth_token="hunter2")
+        with svc, serve_mux(svc) as srv:
+            tr = MuxTransport(srv.url, auth_token=token)
+            try:
+                with pytest.raises(E.Unauthorized):
+                    RemoteCoordinator(tr)     # typed 401 through the stack
+                # a raw submit attempt answers the error envelope and
+                # applies nothing
+                tr.request("submit", _reports(1)[0].to_bytes(), "default")
+            finally:
+                tr.close()
+            assert svc.coordinator().num_clients == 0   # nothing applied
+
+            good = RemoteCoordinator(srv.url, auth_token="hunter2")
+            try:
+                good.submit(_reports(1)[0])
+                assert good.num_clients == 1
+                assert good.describe()["auth_required"] is True
+            finally:
+                good.close()
+
+    def test_bad_token_rejected_over_http_too(self):
+        svc = _service(auth_token="hunter2")
+        with svc, serve_http(svc) as srv:
+            with pytest.raises(E.Unauthorized):
+                RemoteCoordinator(srv.url, auth_token="wrong")
+            rc = RemoteCoordinator(srv.url, auth_token="hunter2")
+            try:
+                rc.submit(_reports(1)[0])
+                assert rc.num_clients == 1
+            finally:
+                rc.close()
+            assert svc.coordinator().num_clients == 1
+
+    def test_token_rotation_without_restart(self):
+        svc = _service(auth_token="old")
+        with svc, serve_mux(svc) as srv:
+            rc = RemoteCoordinator(srv.url, auth_token="old")
+            assert rc.describe()["auth_required"]
+            svc.set_auth_token("new")
+            with pytest.raises(E.Unauthorized):
+                rc.describe()
+            rc.close()
+            rc2 = RemoteCoordinator(srv.url, auth_token="new")
+            try:
+                assert rc2.describe()["auth_required"]
+            finally:
+                rc2.close()
+
+    def test_promote_is_auth_gated(self):
+        """promote flips a standby to writable — exactly the call a bearer
+        token must gate."""
+        from repro.fl.service import promote_remote
+        svc = _service(auth_token="hunter2")
+        with svc, serve_mux(svc) as srv:
+            with pytest.raises(E.Unauthorized):
+                promote_remote(srv.url)
+            # the right token clears the auth gate: the request reaches
+            # routing, which (correctly) rejects promoting a non-standby
+            with pytest.raises(E.BadRequest, match="standby"):
+                promote_remote(srv.url, auth_token="hunter2")

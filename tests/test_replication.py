@@ -627,3 +627,124 @@ class TestETagTopology:
         assert rep.weights(0.3, if_etag=vw_r.etag).not_modified
         rep.close()
         svc.close()
+
+
+# ---------------------------------------------------------------------------
+# Ledger-aware tick compaction (SnapshotDaemon + compact/compact_ledger_dir)
+# ---------------------------------------------------------------------------
+
+
+class TestTickCompaction:
+    def test_snapshot_tick_compacts_and_standby_cold_starts(self, tmp_path):
+        """A snapshot tick drops the sealed segments it covers, and a warm
+        standby cold-started from (compacted ledger + snapshots) is still
+        bit-for-bit the oracle — compaction loses nothing."""
+        led = ReportLedger(tmp_path / "ledger", segment_bytes=2048)
+        svc = FederationService()
+        svc.add_federation("default", AFLServer(**_CTOR), ledger=led)
+        rc = RemoteCoordinator(svc)
+        reps = _reports(12)
+        for r in reps[:8]:
+            rc.submit(r)
+        segs_before = len(list((tmp_path / "ledger").glob("ledger-*.seg")))
+        assert segs_before > 1                 # rotation actually happened
+
+        daemon = SnapshotDaemon(svc, directory=tmp_path / "snaps",
+                                ledger=svc.ledger())
+        assert daemon.snapshot_once() is not None
+        assert not daemon.errors
+        segs_after = len(list((tmp_path / "ledger").glob("ledger-*.seg")))
+        assert segs_after < segs_before        # sealed prefix is gone
+        ckpt_file = tmp_path / "ledger" / "ledger-checkpoint.json"
+        assert ckpt_file.exists()
+
+        # a digest-identical no-op tick still compacts (and stays a no-op)
+        assert daemon.snapshot_once() is None
+        assert not daemon.errors
+
+        # post-compaction submits land in the surviving suffix…
+        for r in reps[8:]:
+            rc.submit(r)
+        svc.close()
+
+        # …and the standby reconstructs the full aggregate exactly
+        standby = WarmStandby(tmp_path / "ledger",
+                              snapshot_dir=tmp_path / "snaps")
+        standby.catch_up()
+        np.testing.assert_array_equal(standby.coordinator.solve(),
+                                      _oracle(reps).solve())
+        assert standby.coordinator.num_clients == len(reps)
+
+    def test_out_of_process_compaction_never_touches_live_writer(
+            self, tmp_path):
+        """compact_ledger_dir (the daemon's path when given a directory,
+        i.e. a writer in ANOTHER process) drops only sealed segments and
+        never opens a ReportLedger — the live writer keeps appending and a
+        replay still sees every surviving record."""
+        led = ReportLedger(tmp_path / "ledger", segment_bytes=2048)
+        svc = FederationService()
+        svc.add_federation("default", AFLServer(**_CTOR), ledger=led)
+        rc = RemoteCoordinator(svc)
+        reps = _reports(10)
+        for r in reps[:6]:
+            rc.submit(r)
+
+        daemon = SnapshotDaemon(svc, directory=tmp_path / "snaps",
+                                ledger=str(tmp_path / "ledger"))
+        assert daemon.snapshot_once() is not None
+        assert not daemon.errors, daemon.errors
+        active = _list_segments_for_test(tmp_path / "ledger")
+        assert len(active) >= 1
+
+        # the writer the compactor never opened keeps appending happily
+        for r in reps[6:]:
+            rc.submit(r)
+        svc.close()
+
+        standby = WarmStandby(tmp_path / "ledger",
+                              snapshot_dir=tmp_path / "snaps")
+        standby.catch_up()
+        np.testing.assert_array_equal(standby.coordinator.solve(),
+                                      _oracle(reps).solve())
+
+    def test_compaction_floor_skipped_while_reports_pending(self, tmp_path):
+        """An async coordinator with queued-but-unapplied reports must not
+        let the tick compact past them: floor is 0 until pending drains."""
+        led = ReportLedger(tmp_path / "ledger", segment_bytes=1024)
+
+        class _Stalled:
+            """state()-bearing source reporting unapplied queue depth."""
+            pending = 3
+
+            def state(self):
+                return {"seen": []}
+
+        daemon = SnapshotDaemon(_Stalled(), directory=tmp_path / "snaps",
+                                ledger=led)
+        led.append(b"payload", 0)
+        led.sync()
+        assert daemon._local_floor() == 0        # pending>0 → no floor
+        _Stalled.pending = 0
+        assert daemon._local_floor() == led.last_seq
+
+    def test_tick_compaction_failure_is_advisory(self, tmp_path):
+        """A compaction error lands in .errors; the snapshot still exists."""
+
+        class _Boom:
+            def compact(self, ref, base):
+                raise OSError("disk says no")
+
+            last_seq = 7
+
+        src = AFLServer(**_CTOR)
+        src.submit_many(_reports(2))
+        daemon = SnapshotDaemon(src, directory=tmp_path / "snaps",
+                                ledger=_Boom())
+        path = daemon.snapshot_once()
+        assert path is not None and path.exists()
+        assert any("compact" in msg for _, msg in daemon.errors)
+
+
+def _list_segments_for_test(directory):
+    from repro.fl.replication import _list_segments
+    return _list_segments(directory)

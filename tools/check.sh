@@ -55,6 +55,12 @@ if [[ "$RUN_BENCH" == "1" ]]; then
   # history, never against the solve-kernel baseline.
   echo "== bench: quick replica-read suite (recorded trajectory)"
   python -m benchmarks.run --quick --only replica_read_bench
+
+  # Serving-transport latencies gate against their own quick:load_harness
+  # history (http vs mux, TLS on/off, auth always on).
+  echo "== bench: load-harness smoke (http vs mux) + perf-regression gate"
+  python -m benchmarks.run --quick --only load_harness
+  python tools/bench_gate.py --smoke --suite quick:load_harness
 fi
 
 echo "== check.sh OK"

@@ -45,11 +45,20 @@ def main() -> int:
                     help="federation id to snapshot")
     ap.add_argument("--once", action="store_true",
                     help="take one snapshot and exit")
+    ap.add_argument("--ledger-dir", default=None,
+                    help="the primary's submit-ledger directory: each "
+                         "successful tick compacts it to what the snapshot "
+                         "covers (out-of-process safe — only sealed "
+                         "segments are dropped, never the active one)")
+    ap.add_argument("--auth-token", default=None,
+                    help="bearer token for an auth-gated federation")
     args = ap.parse_args()
 
     daemon = SnapshotDaemon(args.url, directory=args.dir,
                             interval=args.interval, keep=args.keep,
-                            federation=args.federation)
+                            federation=args.federation,
+                            ledger=args.ledger_dir,
+                            auth_token=args.auth_token)
     if args.once:
         path = daemon.snapshot_once()
         print(f"snapshot: {path if path else 'already current'}")

@@ -32,8 +32,8 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
 from repro.fl import (AFLServer, AsyncAFLServer,  # noqa: E402
                       ShardedCoordinator, WarmStandby, watch_primary)
-from repro.fl.service import (FederationService,  # noqa: E402
-                              RemoteCoordinator, serve_http)
+from repro.fl.mux import probe_alive  # noqa: E402
+from repro.fl.service import FederationService, serve_http  # noqa: E402
 
 _KINDS = {"sync": AFLServer, "async": AsyncAFLServer,
           "sharded": ShardedCoordinator}
@@ -46,7 +46,13 @@ def main() -> int:
     ap.add_argument("--snapshot-dir", default=None,
                     help="snapshotd directory to cold-start from")
     ap.add_argument("--watch-url", default=None,
-                    help="primary URL to probe; omit with --once")
+                    help="primary URL to probe (http(s):// describes, "
+                         "mux(s):// rides a PING frame); omit with --once")
+    ap.add_argument("--watch-cafile", default=None,
+                    help="CA PEM for probing a TLS primary (muxs/https)")
+    ap.add_argument("--watch-token", default=None,
+                    help="bearer token for http(s) probes of an "
+                         "auth-gated primary (mux PING needs none)")
     ap.add_argument("--grace", type=int, default=3,
                     help="consecutive failed probes before promotion")
     ap.add_argument("--interval", type=float, default=1.0,
@@ -90,11 +96,8 @@ def main() -> int:
               "answers 503 until promoted; ctrl-c to stop")
 
         def _alive() -> bool:
-            try:
-                RemoteCoordinator(args.watch_url).close()
-                return True
-            except Exception:                          # noqa: BLE001
-                return False
+            return probe_alive(args.watch_url, cafile=args.watch_cafile,
+                               auth_token=args.watch_token)
 
         stop = threading.Event()
         try:
