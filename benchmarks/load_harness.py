@@ -25,15 +25,18 @@ per row.
 
 from __future__ import annotations
 
+import asyncio
 import tempfile
 import threading
 import time
 
 import numpy as np
 
-from repro.fl import (AFLServer, FederationService, HttpTransport,
-                      MuxTransport, RemoteCoordinator, generate_self_signed_cert,
-                      make_report, serve_http, serve_mux, server_ssl_context)
+from repro.fl import (AFLServer, AsyncAFLServer, FederationService,
+                      HttpTransport, MuxTransport, RemoteCoordinator,
+                      generate_self_signed_cert, make_report, serve_http,
+                      serve_mux, server_ssl_context)
+from repro.fl.service import frame_reports, unpack_message
 
 from benchmarks.common import print_table
 
@@ -61,10 +64,12 @@ class _Endpoint:
     """One served federation in a given (transport, tls) config, plus the
     matching client-side factories."""
 
-    def __init__(self, transport, tls, d, c, cert=None, key=None):
+    def __init__(self, transport, tls, d, c, cert=None, key=None,
+                 server=None):
         self.transport, self.tls = transport, tls
-        self.service = FederationService(AFLServer(d, c, gamma=GAMMA),
-                                         auth_token=TOKEN)
+        if server is None:
+            server = AFLServer(d, c, gamma=GAMMA)
+        self.service = FederationService(server, auth_token=TOKEN)
         ctx = server_ssl_context(cert, key) if tls else None
         if transport == "mux":
             self.server = serve_mux(self.service, ssl_context=ctx)
@@ -140,6 +145,88 @@ def _measure_upload(ep, payload_batches, mode):
         raise RuntimeError(f"upload workers failed: {errors[:3]}")
     p50, p99 = _percentiles(latencies)
     return p50, p99, len(latencies) / wall
+
+
+# ---------------------------------------------------------------------------
+# Ingest saturation: fire-and-forget streams into the async fold worker
+# ---------------------------------------------------------------------------
+
+
+def _stall_folds(ep):
+    """Hold the coordinator's fold lock on its event loop so uploads pile
+    up behind the worker. Returns a release callable. This is what turns
+    the scenario into *saturation*: without it the mux wire (report parse +
+    CRC) delivers slower than even the per-report fold drains, the queue
+    never builds, and both configurations just measure the transport."""
+    fed = ep.service._fed("default")
+    coordinator = fed.coordinator
+    release = threading.Event()
+    held = threading.Event()
+
+    async def hold():
+        async with coordinator._lock:
+            held.set()
+            while not release.is_set():
+                await asyncio.sleep(0.001)
+
+    fut = asyncio.run_coroutine_threadsafe(hold(), fed._loop)
+    held.wait()
+
+    def _release():
+        release.set()
+        fut.result()
+
+    return _release
+
+
+def _measure_ingest(ep, batches, frame_size=16):
+    """Closed-loop uploaders fire ``submit_stream`` frames over ONE shared
+    mux connection into a queue-backed coordinator whose fold worker is
+    stalled until every report is admitted; the drain clock then runs until
+    the coordinator has FOLDED the lot (``describe.version`` reaches the
+    total). ops/s is therefore pure apply throughput under a saturated
+    queue — what the fold path can sustain once arrivals outpace it.
+    Per-request frame latencies feed the p50/p99 columns."""
+    shared = ep.fresh_transport()
+    latencies: list = []
+    lat_lock = threading.Lock()
+    errors: list = []
+    total = sum(len(b) for b in batches)
+    release = _stall_folds(ep)
+
+    def work(batch):
+        local = []
+        try:
+            for i in range(0, len(batch), frame_size):
+                body = frame_reports(batch[i:i + frame_size])
+                t0 = time.perf_counter()
+                shared.request("submit_stream", body, "default")
+                local.append(time.perf_counter() - t0)
+        except Exception as exc:                           # noqa: BLE001
+            errors.append(repr(exc))
+        with lat_lock:
+            latencies.extend(local)
+
+    threads = [threading.Thread(target=work, args=(b,)) for b in batches]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    t0 = time.perf_counter()
+    release()
+    info = {}
+    while not errors:                          # drain to the folded tip
+        info, _, _ = unpack_message(
+            shared.request("describe", b"", "default"))
+        if info["version"] >= total:
+            break
+        time.sleep(0.001)
+    wall = time.perf_counter() - t0
+    shared.close()
+    if errors:
+        raise RuntimeError(f"ingest workers failed: {errors[:3]}")
+    p50, p99 = _percentiles(latencies)
+    return p50, p99, total / wall, info
 
 
 # ---------------------------------------------------------------------------
@@ -259,6 +346,49 @@ def run(quick: bool = False):
                          throughput[("mux", True)]
                          / throughput[("http", True)], 2)})
 
+        # -- ingest saturation: batched fold vs per-report apply -----------
+        # 16 uploaders even in --smoke: the reports are tiny and mux rides
+        # one socket, so the scenario is cheap — and the batching win only
+        # shows once arrivals actually pile up behind the fold worker.
+        # d is deliberately SMALL here: batching amortizes the per-report
+        # worker overhead (wakeup, lock, future bookkeeping), so the regime
+        # under test is many small clients at high rate — at transport-bench
+        # d the O(d²) per-report gram copy drowns the amortizable part, and
+        # engine_bench owns that axis anyway.
+        d_ing, c_ing = 32, 4
+        ingest_workers = 16
+        ingest_per_worker = 24 if quick else 64
+        ingest_rps = {}
+        for batch_max in (1, 32):
+            srv = AsyncAFLServer(d_ing, c_ing, gamma=GAMMA,
+                                 batch_max=batch_max)
+            ep = _Endpoint("mux", False, d_ing, c_ing, cert, key,
+                           server=srv)
+            try:
+                batches = [
+                    [r.to_bytes() for r in _population(
+                        d_ing, c_ing, ingest_per_worker, 2, seed=200 + w,
+                        start_id=40_000 * (w + 1))]
+                    for w in range(ingest_workers)]
+                p50, p99, rps, info = _measure_ingest(ep, batches)
+            finally:
+                ep.close()
+            ingest_rps[batch_max] = rps
+            folded = info.get("ingest", {}).get("batches_folded", 0) or 1
+            n_ops = ingest_workers * ingest_per_worker
+            rows.append({"bench": "load_ingest", "transport": "mux",
+                         "tls": False, "workers": ingest_workers,
+                         "d": d_ing, "batch_max": batch_max, "ops": n_ops,
+                         "batches_folded": folded,
+                         "mean_batch": round(n_ops / folded, 1),
+                         "p50_s": round(p50, 4), "p99_s": round(p99, 4),
+                         "ops_per_s": round(rps, 1)})
+
+        # the ingest acceptance-bar row: micro-batch fold over batch_max=1
+        rows.append({"bench": "ingest_ratio",
+                     "batched_over_per_report": round(
+                         ingest_rps[32] / ingest_rps[1], 2)})
+
         # -- mixed workload, per transport × tls ---------------------------
         for tls in (False, True):
             for transport in ("http", "mux"):
@@ -285,17 +415,24 @@ def run(quick: bool = False):
                              "ops_per_s": round(rps, 1)})
 
     ratio = next(r for r in rows if r["bench"] == "upload_ratio")
+    ingest_ratio = next(r for r in rows if r["bench"] == "ingest_ratio")
     print_table(
         f"Load harness — {workers} closed-loop workers (d={d}, C={c}), "
         f"auth on",
         ["bench", "transport", "tls", "p50", "p99", "ops/s"],
-        [[r["bench"], r["transport"], "on" if r["tls"] else "off",
+        [[r["bench"] + (f"[bm={r['batch_max']}]" if "batch_max" in r
+                        else ""),
+          r["transport"], "on" if r["tls"] else "off",
           f"{r['p50_s']*1e3:.1f}ms", f"{r['p99_s']*1e3:.1f}ms",
           r["ops_per_s"]]
-         for r in rows if r["bench"] != "upload_ratio"])
+         for r in rows if r["bench"] not in ("upload_ratio",
+                                             "ingest_ratio")])
     print(f"concurrent-uploader throughput, mux over fresh-conn HTTP/1.1: "
           f"{ratio['mux_over_http_plain']}x plaintext, "
           f"{ratio['mux_over_http_tls']}x TLS "
+          f"(acceptance bar: >=2x)")
+    print(f"ingest apply throughput, micro-batch fold over per-report "
+          f"apply: {ingest_ratio['batched_over_per_report']}x "
           f"(acceptance bar: >=2x)")
     return rows
 
@@ -320,9 +457,20 @@ def main() -> None:
     rows = run(quick=args.smoke)
     secs = time.perf_counter() - t0
     (outdir / "load_harness.json").write_text(json.dumps(rows, indent=1))
-    record_trajectory(outdir, ("quick" if args.smoke else "full")
-                      + ":load_harness", {"load_harness": secs}, [],
-                      metrics=_bench_metrics("load_harness", rows), env=env)
+    pre = "quick" if args.smoke else "full"
+    transport_rows = [r for r in rows
+                      if r["bench"] not in ("load_ingest", "ingest_ratio")]
+    ingest_rows = [r for r in rows
+                   if r["bench"] in ("load_ingest", "ingest_ratio")]
+    record_trajectory(outdir, pre + ":load_harness",
+                      {"load_harness": secs}, [],
+                      metrics=_bench_metrics("load_harness",
+                                             transport_rows), env=env)
+    # the ingest scenario gates under its own suite key, so a regression in
+    # the fold path cannot hide behind transport-side noise (and vice versa)
+    record_trajectory(outdir, pre + ":ingest", {"ingest": secs}, [],
+                      metrics=_bench_metrics("ingest", ingest_rows),
+                      env=env)
     print(f"[load_harness: {secs:.1f}s]")
 
 

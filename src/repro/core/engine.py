@@ -128,6 +128,25 @@ class Factorization:
                 "singular system, or constructed without a backend)")
         return self.backend.rank_update(self, xs)
 
+    def rank_update_many(self, roots) -> "Factorization":
+        """Fold a *sequence* of update roots in one pass — the micro-batch
+        twin of :meth:`rank_update`.
+
+        Semantically ``functools.reduce(Factorization.rank_update, roots)``,
+        but executed as ONE column sweep interleaving each group's
+        reflections in arrival order. On the host backend that interleaving
+        performs the *identical* scalar operation schedule as the sequential
+        folds (row i of the factor is only touched at column step i, and
+        each group couples to the others solely through those rows), so the
+        result is bit-for-bit equal to sequential updates — the property the
+        batched ingest fold is pinned to.
+        """
+        if not self.updatable:
+            raise ValueError(
+                "factorization is not rank-updatable (pinv fallback for a "
+                "singular system, or constructed without a backend)")
+        return self.backend.rank_update_many(self, roots)
+
 
 class SweepRefreshNeeded(RuntimeError):
     """A rank-updated sweep handle cannot answer this γ grid exactly (the
@@ -236,6 +255,15 @@ class NumpyF64Backend:
         xs = self.asarray(xs).reshape(-1, f.handle.shape[0])
         return Factorization(_chol_rank_update(f.handle, xs), backend=self)
 
+    def rank_update_many(self, f: Factorization, roots) -> Factorization:
+        """One grouped column sweep over a sequence of update roots —
+        bit-for-bit equal to folding them with :meth:`rank_update` one at a
+        time (see :func:`_chol_rank_update_grouped`)."""
+        d = f.handle.shape[0]
+        roots = [self.asarray(x).reshape(-1, d) for x in roots]
+        return Factorization(
+            _chol_rank_update_grouped(f.handle, roots), backend=self)
+
     def factor_solve(self, f: Factorization, b):
         if f.handle is None:
             return np.linalg.pinv(f.matrix) @ b
@@ -325,17 +353,36 @@ class JaxBackend:
         return Factorization(jsl.cho_factor(a), backend=self)
 
     def rank_update(self, f: Factorization, xs) -> Factorization:
-        """Rank-k update of a cho_factor handle (jit-compiled column sweep)."""
+        """Rank-k update of a cho_factor handle. Kernel path: the whole
+        stacked update in ONE fused Pallas sweep (`repro.kernels.ops.
+        chol_rank_update`); otherwise a jit-compiled fori_loop column
+        sweep."""
         import jax
 
         c, lower = f.handle
         xs = self.asarray(xs).reshape(-1, c.shape[0])
-        if self._rank_update_fn is None:
-            self._rank_update_fn = jax.jit(_chol_rank_update_jax)
         # cho_factor leaves garbage in the untouched triangle — extract a
         # clean lower factor, sweep, and hand back a (lower, True) handle.
         tri = self._jnp.tril(c) if lower else self._jnp.triu(c).T
+        if self.use_kernel:
+            from repro.kernels import ops as _kops
+
+            return Factorization(
+                (_kops.chol_rank_update(tri, xs), True), backend=self)
+        if self._rank_update_fn is None:
+            self._rank_update_fn = jax.jit(_chol_rank_update_jax)
         return Factorization((self._rank_update_fn(tri, xs), True), backend=self)
+
+    def rank_update_many(self, f: Factorization, roots) -> Factorization:
+        """Batched fold on the device backend: the concatenated roots go
+        through one rank-(Σk) sweep. Exact in exact arithmetic (a sum of
+        Gram deltas is a Gram delta); the bit-for-bit-vs-sequential
+        guarantee is the host backend's."""
+        c, _ = f.handle
+        d = c.shape[0]
+        xs = [self.asarray(x).reshape(-1, d) for x in roots]
+        stacked = xs[0] if len(xs) == 1 else self._jnp.concatenate(xs, 0)
+        return self.rank_update(f, stacked)
 
     def factor_solve(self, f: Factorization, b):
         if self.use_kernel:
@@ -400,6 +447,41 @@ def _chol_rank_update(R, xs):
     return R
 
 
+def _chol_rank_update_grouped(R, roots):
+    """Grouped rank-(Σk) update: one column sweep folding a *sequence* of
+    update-row groups, bit-for-bit equal to sequential per-group
+    :func:`_chol_rank_update` calls.
+
+    Why interleaving is exact, not just exact-in-exact-arithmetic: the
+    sequential sweep reads and writes row i of R only at column step i, and
+    a group's reflections couple to later groups solely through those rows —
+    each group's own ``xt`` tail is private. So running column i for group
+    1, then group 2, … performs the *same scalar operations in the same
+    order* as finishing group 1's whole sweep before starting group 2's.
+    Each group keeps its own contiguous (d, k_g) ``xt`` buffer so every
+    BLAS call sees the exact shapes/strides of the sequential path.
+    """
+    d = R.shape[0]
+    R = np.array(R, np.float64, copy=True, order="C")
+    xts = [np.array(x.T, np.float64, copy=True, order="C") for x in roots]
+    for i in range(d):
+        for xt in xts:
+            w = xt[i]
+            s = w @ w
+            if s == 0.0:
+                continue
+            a = R[i, i]
+            r = np.sqrt(a * a + s)
+            amr = -s / (r + a)
+            beta = (r + a) / (r * s)
+            row = R[i, i + 1:]
+            t = amr * row + xt[i + 1:] @ w
+            R[i, i] = r
+            R[i, i + 1:] = row - (beta * amr) * t
+            xt[i + 1:] -= (beta * t)[:, None] * w[None, :]
+    return R
+
+
 def _chol_rank_update_jax(L, xs):
     """Device twin of :func:`_chol_rank_update`: masked full-width columns so
     every iteration has static shapes under ``lax.fori_loop`` + ``jit``."""
@@ -428,6 +510,15 @@ def _chol_rank_update_jax(L, xs):
 
     L, _ = jax.lax.fori_loop(0, d, body, (L, xs.T))
     return L
+
+
+def _factor_has_nan(f: Factorization) -> bool:
+    """True when a factor handle carries NaNs (host upper R, or a device
+    ``(tri, lower)`` handle — reading the latter materializes it, which the
+    host-driven serving path does anyway before solving)."""
+    h = f.handle
+    tri = h[0] if isinstance(h, tuple) else h
+    return bool(np.any(np.isnan(np.asarray(tri))))
 
 
 def get_backend(name: str, **kwargs):
@@ -532,6 +623,41 @@ class AnalyticEngine:
             moment_c=_maybe_add(a.moment_c, b.moment_c),
         )
 
+    def merge_many(self, stats: SuffStats, uploads) -> SuffStats:
+        """Left-fold a whole micro-batch of uploads in ONE stacked reduction.
+
+        ``np.add.reduce`` over the leading axis of a stacked array
+        accumulates strictly in index order (pairwise re-association only
+        kicks in when reducing a contiguous *inner* axis), so the gram and
+        moment come out bit-for-bit equal to sequential :meth:`merge` calls
+        — the AA law is order-free in exact arithmetic, but the batched
+        ingest fold is pinned to the sequential schedule exactly. The scalar
+        ``count``/``clients`` fields fold in an explicit Python loop for the
+        same reason. Kahan-compensated statistics (and non-host backends)
+        keep the sequential path: compensation is intrinsically pairwise.
+        """
+        uploads = list(uploads)
+        if not uploads:
+            return stats
+        if (not isinstance(self.backend, NumpyF64Backend)
+                or stats.gram_c is not None
+                or any(u.gram_c is not None for u in uploads)):
+            for u in uploads:
+                stats = self.merge(stats, u)
+            return stats
+        gram = np.add.reduce(
+            np.stack([np.asarray(stats.gram)]
+                     + [np.asarray(u.gram) for u in uploads]), axis=0)
+        moment = np.add.reduce(
+            np.stack([np.asarray(stats.moment)]
+                     + [np.asarray(u.moment) for u in uploads]), axis=0)
+        count, clients = stats.count, stats.clients
+        for u in uploads:
+            count = count + u.count
+            clients = clients + u.clients
+        return SuffStats(gram, moment, count, clients,
+                         stats.gram_c, stats.moment_c)
+
     # -- regularization bookkeeping -----------------------------------------
 
     def regularized_gram(self, stats: SuffStats, gamma: Optional[float] = None):
@@ -613,12 +739,26 @@ class AnalyticEngine:
         the crossover, a pinv-fallback factor (the γ=0 rank-deficient path),
         or ``use_ri=False`` — whose per-client +γI delta is full-rank by
         construction.
+
+        ``root`` may also be a list/tuple of (k_i, d) roots — a micro-batch
+        of deltas folded in one grouped sweep (:meth:`Factorization.
+        rank_update_many`); the budget then applies to Σk_i. Either way the
+        updated factor is checked for NaNs (a breakdown can only come from
+        non-finite inputs — the update itself is positive) and a poisoned
+        sweep falls back to the full refactor instead of caching NaNs.
         """
         if root is not None and use_ri and factorization.updatable:
-            root = self.backend.asarray(root).reshape(-1, stats.dim)
+            roots = list(root) if isinstance(root, (list, tuple)) else [root]
+            roots = [self.backend.asarray(r).reshape(-1, stats.dim)
+                     for r in roots]
+            total = sum(int(r.shape[0]) for r in roots)
             budget = max(1, stats.dim // 16) if max_rank is None else int(max_rank)
-            if root.shape[0] <= budget:
-                return factorization.rank_update(root)
+            if total <= budget:
+                updated = (factorization.rank_update(roots[0])
+                           if len(roots) == 1
+                           else factorization.rank_update_many(roots))
+                if not _factor_has_nan(updated):
+                    return updated
         return self.factor(stats, use_ri=use_ri, target_gamma=target_gamma)
 
     def ri_restore(

@@ -12,7 +12,7 @@ from repro.fl.api import (AFLClient, AFLServer, ClientReport, Coordinator,
                           GammaSweep, SCHEMA_VERSION, ShardedCoordinator,
                           Transport, VersionedWeights, evaluate_weight,
                           make_report, masked_reports)
-from repro.fl.async_server import AsyncAFLServer
+from repro.fl.async_server import AsyncAFLServer, SubmitAborted
 from repro.fl.errors import ServiceError
 from repro.fl.mux import (MuxFederationServer, MuxTransport,
                           client_ssl_context, generate_self_signed_cert,
@@ -43,6 +43,7 @@ __all__ = [
     "SCHEMA_VERSION",
     "ServiceError",
     "ShardedCoordinator",
+    "SubmitAborted",
     "Transport",
     "VersionedWeights",
     "WarmStandby",

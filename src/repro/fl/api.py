@@ -418,7 +418,15 @@ def _ingest_upload(report: ClientReport, *, dim: int, gamma: float,
         raise DuplicateClient(f"client {report.client_id} already aggregated")
     if report.gamma != gamma:
         raise GammaMismatch(f"client γ={report.gamma} != server γ={gamma}")
-    raw = np.asarray(report.gram, np.float64) - gamma * np.eye(dim)
+    # subtract γ on the diagonal only — bitwise equal to the full
+    # ``gram − γ·eye`` (x − 0.0 ≡ x in IEEE, −0.0 included) at O(d) instead
+    # of materializing and subtracting a d² identity per report
+    raw = np.array(report.gram, np.float64, copy=True)
+    if raw.shape != (dim, dim):
+        raise ValueError(
+            f"report gram shape {raw.shape} != ({dim}, {dim})")
+    idx = np.arange(dim)
+    raw[idx, idx] -= gamma
     return SuffStats(
         gram=raw,
         moment=np.asarray(report.moment, np.float64),
@@ -649,6 +657,126 @@ class AFLServer:
     def submit_many(self, reports: Iterable[ClientReport]) -> None:
         for r in reports:
             self.submit(r)
+
+    # -- micro-batch fold ---------------------------------------------------
+
+    def _validate_report(self, report: ClientReport, seen):
+        """Validation half of a submit, against a caller-owned ``seen``
+        overlay (so a batch can track intra-batch duplicates without
+        touching coordinator state): reshapes the root, runs the ingest
+        checks, touches nothing. Returns ``(upload, root)`` or raises."""
+        root = report.root
+        if root is not None:
+            root = np.asarray(root, np.float64).reshape(-1, self.dim)
+        upload = _ingest_upload(report, dim=self.dim, gamma=self.gamma,
+                                seen=seen)
+        return upload, root
+
+    def _apply_validated(self, items) -> list:
+        """Application half of a batched submit: ``items`` is a list of
+        ``(client_id, upload, root)`` that already passed
+        :meth:`_validate_report` (``root`` may be None — e.g. stripped by
+        the async deferred-refactor policy). Cannot reject; returns the
+        per-report fold-outcome bools. ONE stacked statistics merge and ONE
+        grouped rank-(Σk) factor sweep replace the per-report passes,
+        bit-for-bit equal to sequential submits."""
+        self._stats = self.engine.merge_many(
+            self._stats, [upload for _, upload, _ in items])
+        for client_id, _, _ in items:
+            self._seen.add(client_id)
+        self._version += len(items)
+        roots = [root for _, _, root in items]
+        self._maintain_sweep_cache_batch(roots)
+        return self._try_factor_update_batch(roots)
+
+    def submit_batch(self, reports: Sequence[ClientReport]) -> list:
+        """Fold a micro-batch of uploads in one pass.
+
+        Each report validates individually — a bad one (duplicate id, γ
+        mismatch, malformed arrays) rejects ALONE, recorded as the exception
+        instance in its slot rather than raised, and the rest of the batch
+        still folds. Returns a list aligned with ``reports``: the
+        fold-outcome bool per accepted report (same meaning as
+        :meth:`submit`) or the rejecting exception. State after the call is
+        bit-for-bit what sequential :meth:`submit` calls (skipping the
+        rejected reports) would leave — the property the conformance suite
+        pins. Unlike bare :meth:`submit`, the root is validated BEFORE any
+        state changes, so a malformed root cannot half-apply.
+        """
+        outcomes: list = [None] * len(reports)
+        seen = set(self._seen)
+        accepted = []
+        for i, report in enumerate(reports):
+            try:
+                upload, root = self._validate_report(report, seen)
+            except Exception as exc:           # noqa: BLE001 — per-report
+                outcomes[i] = exc
+                continue
+            seen.add(report.client_id)
+            accepted.append((i, report.client_id, upload, root))
+        if accepted:
+            flags = self._apply_validated(
+                [(cid, upload, root) for _, cid, upload, root in accepted])
+            for (i, *_), flag in zip(accepted, flags):
+                outcomes[i] = flag
+        return outcomes
+
+    def _maintain_sweep_cache_batch(self, roots) -> None:
+        """Batch twin of :meth:`_maintain_sweep_cache`. A cache-killing root
+        anywhere in the batch drops the handle outright — sequential folds
+        the prefix and then discards it, so skipping the dead projections
+        reaches the identical end state with none of the work."""
+        h = self._sweep_cache
+        if h is None:
+            return
+        rank = h.rank
+        for root in roots:
+            if root is None:
+                self._sweep_cache = None
+                return
+            rank += int(root.shape[0])
+            if rank > self.sweep_rank_budget:
+                self._sweep_cache = None
+                return
+        for root in roots:
+            # per-root projections, in order — bitwise what sequential
+            # rank_update calls produce (each projects against the same
+            # fixed eigenbasis)
+            h = h.rank_update(root)
+        self._sweep_cache = h
+
+    def _try_factor_update_batch(self, roots) -> list:
+        """Batch twin of :meth:`_try_factor_update`: per-report survived
+        flags under sequential semantics, fused execution. Updatable roots
+        ahead of any cache kill fold as ONE grouped rank-(Σk) sweep per
+        cached factor; a killer anywhere clears the cache with no prefix
+        work (sequential's prefix updates die with the cache — same end
+        state, bit for bit)."""
+        flags = []
+        alive = bool(self._factor_cache)
+        updatable = alive and all(
+            f.updatable for f in self._factor_cache.values())
+        fuse = []
+        killed = False
+        for root in roots:
+            if not alive:
+                flags.append(True)         # nothing cached — nothing to do
+                continue
+            if (root is None or root.shape[0] > self.update_rank_budget
+                    or not updatable):
+                flags.append(False)
+                alive = False
+                killed = True
+                continue
+            fuse.append(root)
+            flags.append(True)
+        if killed:
+            self._factor_cache.clear()
+        elif fuse:
+            self._factor_cache = {
+                key: f.rank_update_many(fuse)
+                for key, f in self._factor_cache.items()}
+        return flags
 
     def solve(self, target_gamma: float = 0.0) -> np.ndarray:
         """Exact joint solution over all clients aggregated *so far*.

@@ -10,12 +10,22 @@ protocol (same methods, same return values, awaited):
   * ``submit()`` hands a :class:`~repro.fl.api.ClientReport` to a single
     worker task that drains arrivals in order, and resolves to the same
     fold-outcome bool the synchronous server returns (True: cached factors
-    survived; False: the next solve refactors). ``enqueue()`` is the
-    fire-and-forget variant for producers that must not block on apply.
-  * Each arrival is folded into the live cached Cholesky factors as a
-    **rank-n_k update** (``AFLServer.submit`` → ``engine.factor_update``,
-    O(n_k·d²)) instead of invalidating them — the d³ refactorization
-    disappears from the arrival hot path.
+    survived; False: the next solve refactors). ``enqueue()`` /
+    ``enqueue_many()`` are the fire-and-forget variants for producers that
+    must not block on apply.
+  * The worker folds arrivals as **micro-batches**: each wakeup drains the
+    whole pending queue (up to ``batch_max``), validates every report
+    individually (a bad one rejects alone, exactly as if submitted
+    sequentially), then applies the batch in ONE pass — one stacked
+    SuffStats merge and one grouped rank-(Σk) Cholesky sweep over the
+    concatenated roots (``AFLServer.submit_batch`` machinery) instead of B
+    separate O(d²) merges and column sweeps. The fold is bit-for-bit the
+    sequential result at f64; outcomes fan back to the per-report futures.
+  * Usable low-rank arrivals therefore still fold into the live cached
+    factors as **rank updates** (O(Σn_k·d²) per batch) instead of
+    invalidating them — the d³ refactorization stays off the arrival hot
+    path, now with the per-arrival wakeup/lock/merge overhead amortized
+    across the batch.
   * ``solve()`` / ``solve_multi_gamma()`` / ``sweep()`` serve concurrently
     from the live factor: they reflect every arrival *applied* so far and
     never block on submissions still queued (``join()`` waits for the queue
@@ -49,7 +59,7 @@ per arrival, and pure-submission periods never pay d³ at all.
 from __future__ import annotations
 
 import asyncio
-import dataclasses
+import collections
 from typing import Dict, Iterable, Optional, Sequence
 
 import numpy as np
@@ -58,7 +68,23 @@ from repro.fl.api import (AFLServer, ClientReport, GammaSweep,
                           VersionedWeights, _sweep_from_weights)
 from repro.fl.errors import Backpressure
 
-__all__ = ["AsyncAFLServer"]
+__all__ = ["AsyncAFLServer", "SubmitAborted"]
+
+
+class SubmitAborted(RuntimeError):
+    """A report in a :meth:`AsyncAFLServer.submit_many` pipeline was skipped
+    because an earlier report in the same call was rejected — sync
+    stop-at-first-rejection semantics: the skipped report was NOT
+    aggregated."""
+
+
+class _SubmitGroup:
+    """Shared abort token for one pipelined ``submit_many`` call."""
+
+    __slots__ = ("failed",)
+
+    def __init__(self):
+        self.failed = False
 
 
 class AsyncAFLServer:
@@ -85,6 +111,8 @@ class AsyncAFLServer:
         refactor_rank: Optional[int] = None,
         error_budget: float = 1e-8,
         max_pending: Optional[int] = None,
+        batch_max: int = 32,
+        rejected_max: int = 256,
         server: Optional[AFLServer] = None,
     ):
         # ``server`` adopts an existing aggregate (e.g. restored from a
@@ -107,15 +135,28 @@ class AsyncAFLServer:
         # reports (the backpressure signal transports surface as HTTP 429).
         # submit() is unaffected — an awaiting producer IS the backpressure.
         self.max_pending = None if max_pending is None else int(max_pending)
+        # micro-batch fold cap: the worker drains up to this many queued
+        # reports per wakeup and folds them in ONE pass (one stacked
+        # statistics merge + one grouped rank-(Σk) factor sweep). 1 restores
+        # strict per-report apply; larger values amortize the per-wakeup
+        # lock/future/sweep overhead at the cost of coarser fold latency.
+        self.batch_max = max(1, int(batch_max))
         self._queue: asyncio.Queue = asyncio.Queue()
         self._lock = asyncio.Lock()
         self._worker: Optional[asyncio.Task] = None
         self._applied_rank = 0
         # observability: arrivals folded as rank updates vs cache kills,
-        # plus uploads the wrapped server refused (duplicate id, γ mismatch)
+        # plus uploads the wrapped server refused (duplicate id, γ mismatch).
+        # ``rejected`` is BOUNDED (a long-lived server facing a misbehaving
+        # client must not leak); overflow evicts the oldest entry and bumps
+        # ``rejected_dropped``.
         self.updates = 0
         self.deferred_refactors = 0
-        self.rejected: list = []
+        self.rejected: collections.deque = collections.deque(
+            maxlen=max(1, int(rejected_max)))
+        self.rejected_dropped = 0
+        self.batches_folded = 0
+        self.last_batch = 0
 
     # -- protocol surface (delegated) ---------------------------------------
 
@@ -162,7 +203,7 @@ class AsyncAFLServer:
         upload (duplicate id, γ mismatch, malformed report) raises here —
         exactly like the sync server — without killing the worker."""
         fut: asyncio.Future = asyncio.get_running_loop().create_future()
-        await self._queue.put((report, fut))
+        await self._queue.put((report, fut, None))
         return await fut
 
     async def enqueue(self, report: ClientReport) -> None:
@@ -177,15 +218,44 @@ class AsyncAFLServer:
             raise Backpressure(
                 f"ingest queue at high-watermark ({self._queue.qsize()} "
                 f"pending ≥ max_pending={self.max_pending})")
-        await self._queue.put((report, None))
+        await self._queue.put((report, None, None))
+
+    async def enqueue_many(self, reports: Sequence[ClientReport]) -> int:
+        """Bulk fire-and-forget: queue reports until the ``max_pending``
+        watermark trips, returning how many were admitted (the rest were
+        NOT queued — back off and resubmit them). One event-loop crossing
+        for the whole batch, which is what lets a streaming transport hand
+        the worker real micro-batches instead of a report per crossing."""
+        admitted = 0
+        for report in reports:
+            if self.max_pending is not None \
+                    and self._queue.qsize() >= self.max_pending:
+                break
+            self._queue.put_nowait((report, None, None))
+            admitted += 1
+        return admitted
 
     async def submit_many(self, reports: Iterable[ClientReport]) -> None:
         """Bulk submit with sync semantics: applied in order, stopping at
-        the first rejection (later reports are NOT aggregated) — so post-
-        exception state matches :meth:`AFLServer.submit_many` exactly. Use
-        :meth:`enqueue` per report for fire-and-forget pipelining."""
+        the first rejection (later reports are NOT aggregated) — post-
+        exception state matches :meth:`AFLServer.submit_many` exactly.
+        Pipelined: the whole iterable is enqueued before any outcome is
+        awaited, so the worker folds it as micro-batches; the
+        stop-at-first-rejection contract survives via a shared abort token
+        the worker checks per report (reports after a rejection are skipped,
+        never validated or aggregated)."""
+        loop = asyncio.get_running_loop()
+        group = _SubmitGroup()
+        futs = []
         for r in reports:
-            await self.submit(r)
+            fut: asyncio.Future = loop.create_future()
+            await self._queue.put((r, fut, group))
+            futs.append(fut)
+        outcomes = await asyncio.gather(*futs, return_exceptions=True)
+        for out in outcomes:
+            if isinstance(out, BaseException) \
+                    and not isinstance(out, SubmitAborted):
+                raise out
 
     async def join(self) -> None:
         """Wait until every enqueued submission has been applied."""
@@ -193,50 +263,104 @@ class AsyncAFLServer:
 
     async def _run(self) -> None:
         while True:
-            report, fut = await self._queue.get()
+            batch = [await self._queue.get()]
+            while len(batch) < self.batch_max:
+                try:
+                    batch.append(self._queue.get_nowait())
+                except asyncio.QueueEmpty:
+                    break
             try:
                 async with self._lock:
-                    outcome = self._apply(report)
-                if fut is not None and not fut.cancelled():
-                    fut.set_result(outcome)
-            except Exception as e:
-                # a bad upload (duplicate id, γ mismatch, malformed arrays)
-                # must not kill the serving loop
-                self.rejected.append((getattr(report, "client_id", None),
-                                      str(e)))
-                if fut is not None and not fut.cancelled():
-                    fut.set_exception(e)
+                    self._fold_batch(batch)
+            except Exception as e:             # noqa: BLE001 — worker must
+                # survive; _fold_batch already fanned out per-report errors,
+                # so anything landing here is systemic — fail the batch's
+                # still-unresolved futures rather than hang their awaiters
+                for _, fut, _ in batch:
+                    self._resolve(fut, exc=e)
             finally:
-                self._queue.task_done()
+                for _ in batch:
+                    self._queue.task_done()
 
-    def _apply(self, report: ClientReport) -> bool:
+    def _fold_batch(self, batch) -> None:
+        """Fold one drained micro-batch under the lock: per-report
+        validation and deferred-refactor policy in arrival order (each bad
+        report rejects alone, bit-for-bit the sequential semantics), then
+        ONE :meth:`AFLServer._apply_validated` pass — one stacked statistics
+        merge, one grouped rank-(Σk) factor sweep — with the fold outcomes
+        fanned back to the per-report futures."""
         srv = self._server
-        rank = (0 if report.root is None
-                else int(np.asarray(report.root).reshape(-1, srv.dim).shape[0]))
-        # rank 0 (an empty client's root) folds trivially — same outcome as
-        # the sync server, no reason to kill the cache
-        usable = report.root is not None and rank <= srv.update_rank_budget
-        over = (self._applied_rank + rank > self.refactor_rank
-                or self._error_proxy(self._applied_rank + rank)
-                > self.error_budget)
-        had_factor = bool(srv._factor_cache)
-        if usable and not over:
-            survived = srv.submit(report)
+        seen = set(srv._seen)
+        items = []                    # (client_id, upload, root-or-None)
+        futs = []                     # aligned with items
+        # the policy trajectory is fully determined by root ranks and the
+        # cache-alive state, so simulate the sequential per-report decisions
+        # upfront; _try_factor_update_batch then reproduces exactly these
+        # survived flags from the roots we hand it
+        cache_alive = bool(srv._factor_cache)
+        updatable = cache_alive and all(
+            f.updatable for f in srv._factor_cache.values())
+        applied = self._applied_rank
+        for report, fut, group in batch:
+            if group is not None and group.failed:
+                self._resolve(fut, exc=SubmitAborted(
+                    "skipped: an earlier report in this submit_many call "
+                    "was rejected"))
+                continue
+            try:
+                upload, root = srv._validate_report(report, seen)
+            except Exception as e:             # noqa: BLE001 — per-report
+                self._record_rejected(report, e)
+                if group is not None:
+                    group.failed = True
+                self._resolve(fut, exc=e)
+                continue
+            seen.add(report.client_id)
+            rank = 0 if root is None else int(root.shape[0])
+            # rank 0 (an empty client's root) folds trivially — same
+            # outcome as the sync server, no reason to kill the cache
+            usable = root is not None and rank <= srv.update_rank_budget
+            over = (applied + rank > self.refactor_rank
+                    or self._error_proxy(applied + rank) > self.error_budget)
+            if not (usable and not over):
+                # policy says refactor: strip the root so the cache dies and
+                # the NEXT solve pays the d³ once for this and any further
+                # cache-killing arrivals in the burst
+                root = None
+            if cache_alive:
+                survived = root is not None and updatable
+                if survived:
+                    applied += rank
+                    self.updates += 1 if rank else 0
+                else:
+                    # fold refused (policy, or non-updatable pinv fallback)
+                    applied = 0
+                    cache_alive = False
+                    self.deferred_refactors += 1
+            items.append((report.client_id, upload, root))
+            futs.append(fut)
+        self._applied_rank = applied
+        if items:
+            flags = srv._apply_validated(items)
+            for fut, flag in zip(futs, flags):
+                self._resolve(fut, result=flag)
+        self.batches_folded += 1
+        self.last_batch = len(batch)
+
+    def _record_rejected(self, report, exc: Exception) -> None:
+        if len(self.rejected) == self.rejected.maxlen:
+            self.rejected_dropped += 1
+        self.rejected.append((getattr(report, "client_id", None), str(exc)))
+
+    @staticmethod
+    def _resolve(fut: Optional[asyncio.Future], result=None,
+                 exc: Optional[BaseException] = None) -> None:
+        if fut is None or fut.done():
+            return
+        if exc is not None:
+            fut.set_exception(exc)
         else:
-            # policy says refactor: strip the root so the cache dies and the
-            # NEXT solve pays the d³ once for this and any further
-            # cache-killing arrivals in the burst
-            survived = srv.submit(dataclasses.replace(report, root=None))
-        if not had_factor:
-            return survived                 # no live factor — nothing to track
-        if survived:
-            self._applied_rank += rank
-            self.updates += 1 if rank else 0
-        else:
-            # fold refused (policy, or a non-updatable pinv-fallback factor)
-            self._applied_rank = 0
-            self.deferred_refactors += 1
-        return survived
+            fut.set_result(result)
 
     def _error_proxy(self, applied_rank: int) -> float:
         """Worst-case relative drift of a factor after ``applied_rank``

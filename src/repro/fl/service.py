@@ -238,6 +238,19 @@ class _AppliedMap:
         return len(self._d)
 
 
+class _Flight:
+    """One in-flight coalesced read: the leader computes, followers wait on
+    the event and share the leader's encoded response (or its exception)."""
+
+    __slots__ = ("token", "event", "result", "exc")
+
+    def __init__(self, token: tuple):
+        self.token = token
+        self.event = threading.Event()
+        self.result: Optional[bytes] = None
+        self.exc: Optional[BaseException] = None
+
+
 class _Federation:
     """Adapter making any coordinator callable from transport threads.
 
@@ -282,6 +295,31 @@ class _Federation:
         # cleared by FederationService.restore_federation or the promote
         # route (which flips a hosted standby live)
         self.suspended = False
+        # single-flight read coalescing: concurrent identical read requests
+        # (same route + body) at the same epoch share ONE computation and
+        # ONE encoded response. Entries are valid only while read_token()
+        # is unchanged — any epoch bump (submit, grow/shrink, promote; a
+        # restore replaces the _Federation wholesale) changes the token, so
+        # a stale head can never be served. coalesced_hits counts requests
+        # answered without touching the coordinator.
+        self.coalesce_lock = threading.Lock()
+        self.read_cache: "OrderedDict[tuple, tuple]" = OrderedDict()
+        self.inflight: Dict[tuple, "_Flight"] = {}
+        self.coalesced_hits = 0
+
+    def read_token(self) -> tuple:
+        """Identity-plus-epoch fingerprint of everything a read-route
+        response can depend on: the coordinator instance, its ETag salt
+        (promotion mints a new one), the submission epoch, and the mesh
+        epoch (grow/shrink bumps it without necessarily bumping version).
+        Plain attribute reads — safe from transport threads."""
+        c = self.coordinator
+        salt = getattr(c, "_etag_salt", None)
+        if salt is None:       # async wrapper / read replica: salt lives on
+            inner = getattr(c, "server", None) or getattr(c, "_coord", None)
+            salt = getattr(inner, "_etag_salt", None)
+        return (id(c), salt, int(getattr(c, "version", -1)),
+                int(getattr(c, "mesh_epoch", -1)))
 
     def start(self) -> "_Federation":
         if self.is_async and self._loop is None:
@@ -524,6 +562,8 @@ class FederationService:
                 raise E.ReadOnlyFederation(
                     f"{route!r} on read-only federation {federation!r} — "
                     "replicas never ingest; send writes to the primary")
+            if route in self._COALESCED_ROUTES:
+                return self._coalesced(fed, route, handler, bytes(body)), 200
             return handler(self, fed, bytes(body)), 200
         except E.ServiceError as exc:
             return self._error(exc)
@@ -547,6 +587,70 @@ class FederationService:
             arrays: Sequence[Tuple[str, np.ndarray]] = (),
             blob: bytes = b"") -> bytes:
         return pack_message({"ok": True, **header}, arrays, blob=blob)
+
+    # -- single-flight read coalescing ----------------------------------------
+
+    _COALESCE_CACHE_MAX = 64
+
+    def _coalesced(self, fed: _Federation, route: str, handler,
+                   body: bytes) -> bytes:
+        """Single-flight dispatch for read routes: identical concurrent
+        requests (same route + request bytes — which carry the γ / grid /
+        if_etag) at the same :meth:`_Federation.read_token` share ONE
+        underlying computation and ONE encoded response; repeats within the
+        same epoch answer from the per-federation response cache. The token
+        captures instance + salt + version + mesh epoch, so every epoch
+        bump invalidates implicitly — a stale head can never be served, and
+        N pollers between arrivals cost one solve. Works identically over
+        in-proc, HTTP, and mux: coalescing sits under ``handle``, above the
+        transports. Errors propagate to every waiter and are never cached.
+        """
+        key = (route, body)
+        token = fed.read_token()
+        with fed.coalesce_lock:
+            entry = fed.read_cache.get(key)
+            if entry is not None:
+                if entry[0] == token:
+                    fed.read_cache.move_to_end(key)
+                    fed.coalesced_hits += 1
+                    return entry[1]
+                del fed.read_cache[key]    # stale epoch — drop eagerly
+            flight = fed.inflight.get(key)
+            if flight is not None and flight.token == token:
+                leader = None
+            else:
+                leader = flight = _Flight(token)
+                fed.inflight[key] = flight
+        if leader is None:
+            # follower: wait for the leader's response (the leader's
+            # ``finally`` always signals, even on error). If an epoch
+            # bumped mid-flight the answer is still linearizable — it is
+            # what a direct dispatch would have returned moments earlier.
+            flight.event.wait()
+            if flight.exc is not None:
+                raise flight.exc
+            with fed.coalesce_lock:
+                fed.coalesced_hits += 1
+            return flight.result
+        try:
+            resp = handler(self, fed, body)
+        except BaseException as exc:
+            flight.exc = exc
+            raise
+        else:
+            flight.result = resp
+            return resp
+        finally:
+            with fed.coalesce_lock:
+                if fed.inflight.get(key) is flight:
+                    del fed.inflight[key]
+                # cache only when no arrival landed during the compute —
+                # otherwise the NEXT request recomputes under its own token
+                if flight.exc is None and fed.read_token() == flight.token:
+                    fed.read_cache[key] = (flight.token, flight.result)
+                    while len(fed.read_cache) > self._COALESCE_CACHE_MAX:
+                        fed.read_cache.popitem(last=False)
+            flight.event.set()
 
     # -- shared ingest helpers ----------------------------------------------
 
@@ -641,6 +745,19 @@ class FederationService:
             info["mesh_epoch"] = int(getattr(c, "mesh_epoch", 0))
         if ledger_seq is not None:
             info["ledger_seq"] = ledger_seq
+        # read-path observability: requests answered without recomputing
+        info["coalesced_hits"] = int(fed.coalesced_hits)
+        # ingest observability for batching coordinators (AsyncAFLServer):
+        # live queue depth plus the fold counters a capacity planner needs
+        # to size batch_max against arrival rate
+        if getattr(c, "batches_folded", None) is not None:
+            info["ingest"] = {
+                "queue_depth": fed.pending,
+                "batch_max": int(getattr(c, "batch_max", 1)),
+                "last_batch": int(getattr(c, "last_batch", 0)),
+                "batches_folded": int(c.batches_folded),
+                "rejected_dropped": int(getattr(c, "rejected_dropped", 0)),
+            }
         return self._ok(info)
 
     def _r_grow(self, fed: _Federation, body: bytes) -> bytes:
@@ -704,11 +821,16 @@ class FederationService:
     def _r_submit_stream(self, fed: _Federation, body: bytes) -> bytes:
         """Framed multi-report upload; each frame is accepted/rejected
         independently, so one corrupt report in a batch cannot poison the
-        rest. Queue-backed coordinators ingest fire-and-forget through
-        ``enqueue`` (the transport answer is *queued*, not *folded*);
-        backpressure — the service watermark or the coordinator's own —
+        rest. Queue-backed coordinators ingest fire-and-forget: every
+        admissible frame in the stream crosses into the coordinator loop in
+        ONE ``enqueue_many`` call (the transport answer is *queued*, not
+        *folded*) — so a 64-frame stream costs one loop wakeup, not 64.
+        Backpressure — the service watermark (projected over the frames
+        already admitted from this stream) or the coordinator's own —
         rejects a frame without touching state."""
         frames = _unframe_reports(body)
+        if fed.is_async:
+            return self._stream_async(fed, frames)
         results: List[Dict[str, Any]] = []
         accepted = appended = 0
         for frame in frames:
@@ -718,35 +840,18 @@ class FederationService:
                     results.append({"ok": True, "duplicate": True})
                     accepted += 1
                     continue
-                if fed.is_async:
-                    self._check_backpressure(fed)
-                    # fire-and-forget: the fold outcome is unknown at ack
-                    # time, so the idempotency answer for an evicted map
-                    # entry must come from disk BEFORE re-enqueueing
-                    if (self._client_known(fed, report.client_id)
-                            and self._ledger_replayed(fed, report, frame)):
+                try:
+                    folded = fed.call("submit", report)
+                except E.DuplicateClient:
+                    if self._ledger_replayed(fed, report, frame):
                         results.append({"ok": True, "duplicate": True})
                         accepted += 1
                         continue
-                    fed.call("enqueue", report)
-                    results.append({"ok": True, "queued": True})
-                else:
-                    try:
-                        folded = fed.call("submit", report)
-                    except E.DuplicateClient:
-                        if self._ledger_replayed(fed, report, frame):
-                            results.append({"ok": True, "duplicate": True})
-                            accepted += 1
-                            continue
-                        raise
-                    results.append({"ok": True, "queued": False,
-                                    "folded": bool(folded)})
+                    raise
+                results.append({"ok": True, "queued": False,
+                                "folded": bool(folded)})
                 fed.applied.set(report.client_id, zlib.crc32(frame))
                 if fed.ledger is not None:
-                    # queued frames are appended the moment they are
-                    # admitted — a crash before the worker applies them
-                    # still drains them into the standby (zero loss for
-                    # fire-and-forget ingest)
                     fed.ledger.append(frame, report.client_id)
                     appended += 1
                 accepted += 1
@@ -757,6 +862,102 @@ class FederationService:
             except ValueError as exc:
                 results.append({"ok": False, "error": E.BadRequest.code,
                                 "message": str(exc), "retryable": False})
+        if appended:
+            fed.ledger.sync()              # ONE fsync per stream batch
+        return self._ok({"results": results, "accepted": accepted,
+                         "pending": fed.pending,
+                         "version": int(fed.coordinator.version)})
+
+    def _stream_async(self, fed: _Federation,
+                      frames: Sequence[bytes]) -> bytes:
+        """Queue-backed half of ``submit_stream``: admit every valid frame
+        first (parse, replay/idempotency, projected watermark), then hand
+        the whole admissible batch to the coordinator in one
+        ``enqueue_many`` crossing. Bookkeeping (idempotency map + ledger)
+        happens only for frames the coordinator actually admitted — its own
+        watermark may shave the tail, which answers retryable backpressure
+        exactly as a per-frame enqueue would have."""
+        results: List[Optional[Dict[str, Any]]] = []
+        # provisionally admitted frames: (result slot, report, frame, crc)
+        slots: List[Tuple[int, ClientReport, bytes, int]] = []
+        # intra-stream duplicates ride on their original's admission:
+        # result slot → index into ``slots`` they duplicate
+        dup_of: List[Tuple[int, int]] = []
+        batch_seen: Dict[int, Tuple[int, int]] = {}   # client → (crc, slot#)
+        accepted = appended = 0
+        for frame in frames:
+            try:
+                report = self._parse_report(frame)
+                if self._replayed(fed, report, frame) is not None:
+                    results.append({"ok": True, "duplicate": True})
+                    accepted += 1
+                    continue
+                crc = zlib.crc32(frame)
+                prior = batch_seen.get(report.client_id)
+                if prior is not None and prior[0] == crc:
+                    # identical bytes earlier in this very stream — final
+                    # answer depends on whether that frame is admitted
+                    dup_of.append((len(results), prior[1]))
+                    results.append(None)
+                    continue
+                if self.max_pending is not None and (
+                        fed.pending + len(slots) >= self.max_pending):
+                    raise E.Backpressure(
+                        f"{fed.pending + len(slots)} reports pending ≥ "
+                        f"max_pending={self.max_pending}")
+                # fire-and-forget: the fold outcome is unknown at ack time,
+                # so the idempotency answer for an evicted map entry must
+                # come from disk BEFORE re-enqueueing
+                if (self._client_known(fed, report.client_id)
+                        and self._ledger_replayed(fed, report, frame)):
+                    results.append({"ok": True, "duplicate": True})
+                    accepted += 1
+                    continue
+                batch_seen[report.client_id] = (crc, len(slots))
+                slots.append((len(results), report, frame, crc))
+                results.append(None)
+            except E.ServiceError as exc:
+                results.append({"ok": False, "error": exc.code,
+                                "message": str(exc),
+                                "retryable": exc.retryable})
+            except ValueError as exc:
+                results.append({"ok": False, "error": E.BadRequest.code,
+                                "message": str(exc), "retryable": False})
+        admitted = 0
+        if slots:
+            reports = [s[1] for s in slots]
+            if getattr(fed.coordinator, "enqueue_many", None) is not None:
+                admitted = int(fed.call("enqueue_many", reports))
+            else:
+                try:
+                    for report in reports:
+                        fed.call("enqueue", report)
+                        admitted += 1
+                except E.ServiceError:
+                    pass                   # tail answers backpressure below
+        shaved = {"ok": False, "error": E.Backpressure.code,
+                  "message": "coordinator queue full — retry",
+                  "retryable": True}
+        for n, (idx, report, frame, crc) in enumerate(slots):
+            if n < admitted:
+                results[idx] = {"ok": True, "queued": True}
+                fed.applied.set(report.client_id, crc)
+                if fed.ledger is not None:
+                    # queued frames are appended the moment they are
+                    # admitted — a crash before the worker applies them
+                    # still drains them into the standby (zero loss for
+                    # fire-and-forget ingest)
+                    fed.ledger.append(frame, report.client_id)
+                    appended += 1
+                accepted += 1
+            else:
+                results[idx] = dict(shaved)
+        for idx, slot in dup_of:
+            if slot < admitted:
+                results[idx] = {"ok": True, "duplicate": True}
+                accepted += 1
+            else:
+                results[idx] = dict(shaved)
         if appended:
             fed.ledger.sync()              # ONE fsync per stream batch
         return self._ok({"results": results, "accepted": accepted,
@@ -890,6 +1091,14 @@ class FederationService:
     # read-only (replica) federation
     _MUTATING_ROUTES = frozenset(
         {"submit", "submit_stream", "grow", "shrink"})
+
+    # pure read routes whose responses depend only on (request bytes, head
+    # epoch) — safe to single-flight and cache per read_token. ``state`` and
+    # ``describe`` are deliberately excluded: state is a snapshot/backup path
+    # (cheap, rarely concurrent-identical) and describe reports live queue
+    # depth that must not be frozen within an epoch.
+    _COALESCED_ROUTES = frozenset(
+        {"solve", "solve_multi_gamma", "sweep", "weights"})
 
 
 # ---------------------------------------------------------------------------

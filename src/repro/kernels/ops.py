@@ -49,6 +49,12 @@ def interpret_default() -> bool:
     return not _ON_TPU
 
 
+def chol_rank_update(l: jax.Array, xs: jax.Array, **kw) -> jax.Array:
+    """Fused rank-k Cholesky factor update L → chol(LLᵀ + xsᵀxs)."""
+    kw.setdefault("interpret", not _ON_TPU)
+    return _solve.chol_rank_update(l, xs, **kw)
+
+
 def streamed_cholesky(a: jax.Array, **kw) -> jax.Array:
     """Single-system (d, d) lower Cholesky via HBM→VMEM panel streaming."""
     kw.setdefault("interpret", not _ON_TPU)

@@ -71,6 +71,7 @@ __all__ = [
     "tile_cholesky_solve",
     "streamed_cholesky",
     "streamed_cholesky_solve",
+    "chol_rank_update",
     "panel_width",
     "DEFAULT_BLOCK",
     "DEFAULT_GAMMA_BLOCK",
@@ -724,3 +725,83 @@ def streamed_cholesky_solve(l: jax.Array, b: jax.Array, *,
         lp, bp, None, shard=0, n_shards=1, gather=lambda v: v[None],
         psum=lambda v: v, block=bs, precision=precision, interpret=interpret)
     return x[:d]
+
+
+# ---------------------------------------------------------------------------
+# Fused rank-k Cholesky update (the batched-ingest fold)
+# ---------------------------------------------------------------------------
+
+
+def _rank_update_kernel(l_ref, xt_ref, o_ref):
+    """Householder column sweep folding ``xtᵀ`` rows into a lower factor.
+
+    Whole-resident: L (d_p, d_p) and the stacked update tail xt (d_p, k_p)
+    live in VMEM for the entire sweep — one kernel launch for the whole
+    rank-k update instead of k rank-1 sweeps (or a host-driven loop). Each
+    column step annihilates all k update entries with a single
+    (k+1)-reflection; masked full-width updates keep every iteration
+    static-shape under ``fori_loop``. Zero update rows (s == 0 — including
+    every identity-tail padding column) reduce to r = |a| with vanishing
+    corrections, so padding needs no masking of its own.
+    """
+    dp = l_ref.shape[-1]
+    rows = jnp.arange(dp)
+
+    def body(i, carry):
+        l, xt = carry
+        w = xt[i, :]
+        s = jnp.sum(w * w)
+        s_ = jnp.where(s > 0, s, 1.0)      # w == 0 ⇒ t == 0, updates vanish
+        a = l[i, i]
+        r = jnp.sqrt(a * a + s)
+        amr = -s / (r + a)                 # a − r without cancellation
+        beta = (r + a) / (r * s_)          # 2 / uᵀu for u = [a−r; w]
+        below = rows > i
+        col = l[:, i]
+        t = amr * col + xt @ w
+        new_col = jnp.where(below, col - (beta * amr) * t, col)
+        new_col = jnp.where(rows == i, r, new_col)
+        l = l.at[:, i].set(new_col)
+        xt = jnp.where(below[:, None],
+                       xt - (beta * t)[:, None] * w[None, :], xt)
+        return l, xt
+
+    l, _ = lax.fori_loop(0, dp, body, (l_ref[...], xt_ref[...]))
+    o_ref[...] = l
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def chol_rank_update(l: jax.Array, xs: jax.Array, *,
+                     interpret: bool = False) -> jax.Array:
+    """Fused rank-k Cholesky update: ``L (d, d)`` lower with ``A = LLᵀ``,
+    update rows ``xs (k, d)`` → ``chol(A + xsᵀxs)`` in ONE ``pallas_call``.
+
+    This is the micro-batch ingest fold's device path: a whole batch of
+    client roots, stacked, folds into the cached factor in a single kernel
+    launch — versus the non-kernel jax path's per-column ``fori_loop``
+    dispatched from ``jit`` (same flops, k× the launch/carry overhead when
+    applied per report). The update is positive (a Gram delta), so the
+    sweep cannot break down; non-finite inputs surface as NaNs, which
+    ``AnalyticEngine.factor_update`` detects and routes to a full refactor.
+    Whole-resident in VMEM like :func:`blocked_cholesky` — same d ≲ 1024
+    f32 bound; wider serving systems refactor via the streamed path anyway.
+    """
+    d = l.shape[-1]
+    k = xs.shape[0]
+    if k == 0:
+        return l
+    bs = min(DEFAULT_BLOCK, _ceil_mult(d, 8))
+    d_p = _ceil_mult(d, bs)
+    k_p = _ceil_mult(k, 8)
+    lp = _pad_spd(l[None], d_p)[0]
+    xt = jnp.pad(xs.T.astype(l.dtype), ((0, d_p - d), (0, k_p - k)))
+    out = pl.pallas_call(
+        _rank_update_kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((d_p, d_p), lambda i: (0, 0)),
+                  pl.BlockSpec((d_p, k_p), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((d_p, d_p), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((d_p, d_p), l.dtype),
+        interpret=interpret,
+    )(lp, xt)
+    return out[:d, :d]

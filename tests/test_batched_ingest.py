@@ -1,0 +1,516 @@
+"""Batched ingest: micro-batch fold, pipelined uploads, read coalescing.
+
+Three claims, each load-bearing for the ingest fast path:
+
+  * **Micro-batch fold ≡ sequential submits, bit-for-bit at f64.** The
+    batched paths (:meth:`AFLServer.submit_batch`, the
+    :class:`AsyncAFLServer` worker draining its queue) must perform the
+    exact sequential operation schedule — grouped Householder sweep,
+    strict-left-fold merge — so a federation cannot tell whether its
+    uploads arrived one at a time or sixty-four at once. Pinned here
+    deterministically for the hard edges (mid-batch rejection, rank-budget
+    overflow, empty and rank-0 roots) and, when ``hypothesis`` is installed
+    (requirements-dev.txt), over randomized batch schedules.
+  * **Pipelined ``submit_many`` / bounded rejection history.** The async
+    uploader enqueues the whole iterable before awaiting, preserves
+    stop-at-first-rejection, and the rejected log is a bounded deque with a
+    drop counter instead of an unbounded list.
+  * **Single-flight read coalescing.** Concurrent identical reads share ONE
+    computation and ONE encoded response; repeats within an epoch answer
+    from cache; any epoch bump invalidates; errors propagate to every
+    waiter and are never cached.
+"""
+
+import asyncio
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.engine import AnalyticEngine
+from repro.fl import (AFLServer, AsyncAFLServer, ClientReport,
+                      FederationService, InProcTransport, RemoteCoordinator,
+                      SubmitAborted, make_report)
+from repro.fl import errors as E
+from repro.fl.service import frame_reports, pack_message, unpack_message
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS,
+    reason="property tests need hypothesis (requirements-dev.txt)")
+
+DIM, C, GAMMA = 16, 3, 1.0
+
+
+def _report(client_id, rows=4, seed=None, gamma=GAMMA, root=True):
+    """One upload; ``rows=0`` exercises the empty (rank-0) root edge."""
+    rng = np.random.default_rng(client_id if seed is None else seed)
+    x = rng.standard_normal((rows, DIM))
+    y = np.eye(C)[rng.integers(0, C, rows)] if rows else np.zeros((0, C))
+    rep = make_report(client_id, x, y, gamma)
+    if not root:
+        rep = ClientReport(rep.client_id, rep.gram, rep.moment,
+                           rep.gamma, rep.count, None)
+    return rep
+
+
+def _assert_same_state(a: AFLServer, b: AFLServer):
+    """Bit-for-bit: aggregate, identity sets, caches, and solved heads."""
+    np.testing.assert_array_equal(np.asarray(a._stats.gram),
+                                  np.asarray(b._stats.gram))
+    np.testing.assert_array_equal(np.asarray(a._stats.moment),
+                                  np.asarray(b._stats.moment))
+    assert float(a._stats.count) == float(b._stats.count)
+    assert float(a._stats.clients) == float(b._stats.clients)
+    assert a._seen == b._seen
+    assert a.version == b.version
+    assert set(a._factor_cache) == set(b._factor_cache)
+    for key in a._factor_cache:
+        ha, hb = a._factor_cache[key].handle, b._factor_cache[key].handle
+        np.testing.assert_array_equal(np.asarray(ha), np.asarray(hb))
+    assert (a._sweep_cache is None) == (b._sweep_cache is None)
+    if a._sweep_cache is not None:
+        np.testing.assert_array_equal(a._sweep_cache.u, b._sweep_cache.u)
+    np.testing.assert_array_equal(a.solve(0.5), b.solve(0.5))
+    for wa, wb in zip(a.solve_multi_gamma([0.0, GAMMA]),
+                      b.solve_multi_gamma([0.0, GAMMA])):
+        np.testing.assert_array_equal(np.asarray(wa), np.asarray(wb))
+
+
+def _seeded_pair(n=6, warm=True):
+    """Two identical servers, optionally with factor + sweep caches warm
+    (so the batch paths exercise the incremental-update machinery, not just
+    the cold fold)."""
+    a, b = AFLServer(DIM, C, gamma=GAMMA), AFLServer(DIM, C, gamma=GAMMA)
+    for i in range(n):
+        rep = _report(1000 + i, rows=6)
+        a.submit(rep)
+        b.submit(rep)
+    if warm:
+        for srv in (a, b):
+            srv.solve(0.5)
+            srv.solve_multi_gamma([0.0, GAMMA])
+    return a, b
+
+
+def _sequential_oracle(srv: AFLServer, reports):
+    """Per-report submits, collecting the exact flag-or-exception per slot —
+    the reference schedule submit_batch must reproduce bit-for-bit."""
+    out = []
+    for rep in reports:
+        try:
+            out.append(srv.submit(rep))
+        except Exception as exc:                       # noqa: BLE001
+            out.append(exc)
+    return out
+
+
+class TestSubmitBatchBitForBit:
+    def test_plain_batch_matches_sequential(self):
+        a, b = _seeded_pair()
+        reports = [_report(i, rows=1 + (i % 3)) for i in range(8)]
+        flags = a.submit_batch(reports)
+        ref = _sequential_oracle(b, reports)
+        assert flags == ref
+        _assert_same_state(a, b)
+
+    def test_mid_batch_rejections_reject_alone(self):
+        """A duplicate id, a γ mismatch, and an intra-batch duplicate each
+        reject their own slot; everything around them folds as if the bad
+        reports were never sent."""
+        a, b = _seeded_pair()
+        good = _report(7)
+        reports = [_report(1, rows=2),
+                   _report(1000, rows=3),              # pre-seeded id
+                   _report(5, gamma=GAMMA + 1.0),      # γ mismatch
+                   good,
+                   _report(good.client_id, seed=99),   # intra-batch dup
+                   _report(9, rows=2)]
+        flags = a.submit_batch(reports)
+        ref = _sequential_oracle(b, reports)
+        assert [type(f) for f in flags] == [type(r) for r in ref]
+        assert flags[1].__class__ is E.DuplicateClient
+        assert flags[2].__class__ is E.GammaMismatch
+        assert flags[4].__class__ is E.DuplicateClient
+        _assert_same_state(a, b)
+
+    def test_rank_budget_overflow_and_rootless_reports(self):
+        """Roots past the update budget (and absent roots) kill / bypass the
+        incremental caches exactly as sequential submits do."""
+        a, b = _seeded_pair()
+        reports = [_report(1, rows=1),
+                   _report(2, rows=6),                 # > d//16 budget
+                   _report(3, rows=1, root=False),     # no root → refactor
+                   _report(4, rows=1)]
+        flags = a.submit_batch(reports)
+        assert flags == _sequential_oracle(b, reports)
+        _assert_same_state(a, b)
+
+    def test_empty_batch_and_empty_roots(self):
+        a, b = _seeded_pair()
+        assert a.submit_batch([]) == []
+        _assert_same_state(a, b)
+        reports = [_report(1, rows=0), _report(2, rows=2)]
+        flags = a.submit_batch(reports)
+        assert flags == _sequential_oracle(b, reports)
+        _assert_same_state(a, b)
+
+    def test_cold_server_batch(self):
+        """First-ever contact arriving as a batch: the seeding refactor path
+        (rank-deficient pinv fallback included) matches sequential."""
+        a, b = AFLServer(DIM, C, gamma=GAMMA), AFLServer(DIM, C, gamma=GAMMA)
+        reports = [_report(i, rows=3) for i in range(4)]   # 12 < d rows
+        flags = a.submit_batch(reports)
+        assert flags == _sequential_oracle(b, reports)
+        _assert_same_state(a, b)
+
+
+if HAVE_HYPOTHESIS:
+    class TestSubmitBatchProperty:
+        """Randomized schedules: any batch split of any report sequence —
+        duplicates, γ mismatches, rank-0 and missing roots included —
+        leaves the server bit-for-bit where sequential submits leave its
+        twin."""
+
+        @settings(max_examples=25, deadline=None)
+        @given(st.data())
+        def test_batched_equals_sequential(self, data):
+            specs = data.draw(st.lists(
+                st.tuples(st.integers(0, 5),       # client id (collisions!)
+                          st.integers(0, 6),       # rows (0 = empty root)
+                          st.booleans(),           # carry root?
+                          st.booleans()),          # γ mismatch?
+                min_size=1, max_size=10))
+            reports = [
+                _report(cid, rows=rows, seed=i, root=root,
+                        gamma=GAMMA + (0.5 if bad_gamma else 0.0))
+                for i, (cid, rows, root, bad_gamma) in enumerate(specs)]
+            a, b = _seeded_pair(n=4)
+            # arbitrary batch split of the same sequence
+            cut = data.draw(st.integers(0, len(reports)))
+            flags = (a.submit_batch(reports[:cut])
+                     + a.submit_batch(reports[cut:]))
+            assert flags == _sequential_oracle(b, reports)
+            _assert_same_state(a, b)
+else:
+    class TestSubmitBatchProperty:
+        @needs_hypothesis
+        def test_batched_equals_sequential(self):
+            """Placeholder so the skip is visible in the test report."""
+
+
+class TestAsyncBatchedFold:
+    def test_worker_folds_batches_bit_for_bit(self):
+        """Reports pipelined through the async queue fold in real batches
+        (batch counters prove it) and the end state is bit-for-bit the
+        sequential sync fold."""
+        oracle = AFLServer(DIM, C, gamma=GAMMA)
+        reports = [_report(i, rows=2) for i in range(20)]
+        for rep in reports:
+            oracle.submit(rep)
+
+        async def body():
+            async with AsyncAFLServer(DIM, C, gamma=GAMMA,
+                                      batch_max=8) as srv:
+                await srv.submit_many(reports)
+                w = await srv.solve(0.5)
+                return srv, w
+
+        srv, w = asyncio.run(body())
+        np.testing.assert_array_equal(w, oracle.solve(0.5))
+        _assert_same_state(srv.server, oracle)
+        assert srv.batches_folded >= 1
+        assert 1 <= srv.last_batch <= 8
+        # pipelining produced real multi-report folds, not 20 singletons
+        assert srv.batches_folded < len(reports)
+
+    def test_submit_many_stops_at_first_rejection(self):
+        """Pipelined submit_many preserves stop-at-first-rejection: the bad
+        report's error surfaces, reports after it in the SAME call are
+        aborted (not folded), state matches the sync server that stopped at
+        the same place."""
+        oracle = AFLServer(DIM, C, gamma=GAMMA)
+        good = [_report(i) for i in range(3)]
+        bad = _report(1, seed=77)                      # duplicate of good[1]
+        tail = [_report(10), _report(11)]
+        for rep in good:
+            oracle.submit(rep)
+
+        async def body():
+            async with AsyncAFLServer(DIM, C, gamma=GAMMA) as srv:
+                with pytest.raises(E.DuplicateClient):
+                    await srv.submit_many(good + [bad] + tail)
+                await srv.join()
+                return srv
+
+        srv = asyncio.run(body())
+        _assert_same_state(srv.server, oracle)
+        assert srv.server.num_clients == len(good)
+
+    def test_aborted_reports_are_retryable(self):
+        """Reports behind a rejection are aborted (SubmitAborted), never
+        half-folded — retrying them afterwards succeeds."""
+        async def body():
+            async with AsyncAFLServer(DIM, C, gamma=GAMMA) as srv:
+                await srv.submit(_report(0))
+                with pytest.raises(E.DuplicateClient):
+                    await srv.submit_many([_report(0, seed=5), _report(1)])
+                assert srv.server.num_clients == 1     # tail NOT folded
+                assert isinstance(await srv.submit(_report(1)), bool)
+                return srv.server.num_clients
+
+        assert asyncio.run(body()) == 2
+        assert issubclass(SubmitAborted, RuntimeError)
+
+    def test_rejected_deque_is_bounded(self):
+        async def body():
+            async with AsyncAFLServer(DIM, C, gamma=GAMMA,
+                                      rejected_max=3) as srv:
+                await srv.submit(_report(0))
+                for seed in range(5):
+                    with pytest.raises(E.DuplicateClient):
+                        await srv.submit(_report(0, seed=100 + seed))
+                return len(srv.rejected), srv.rejected_dropped
+
+        kept, dropped = asyncio.run(body())
+        assert kept == 3
+        assert dropped == 2
+
+    def test_enqueue_many_respects_watermark(self):
+        async def body():
+            srv = AsyncAFLServer(DIM, C, gamma=GAMMA, max_pending=4)
+            # worker NOT started: the queue only fills
+            admitted = await srv.enqueue_many(
+                [_report(i) for i in range(10)])
+            return admitted, srv.pending
+
+        admitted, pending = asyncio.run(body())
+        assert admitted == 4
+        assert pending == 4
+
+
+def _service_with(server, **kw):
+    svc = FederationService(server, **kw)
+    return svc, InProcTransport(svc)
+
+
+class TestReadCoalescing:
+    def _loaded_service(self):
+        srv = AFLServer(DIM, C, gamma=GAMMA)
+        svc, t = _service_with(srv)
+        for i in range(4):
+            svc.handle("submit", _report(i, rows=6).to_bytes())
+        return srv, svc, t
+
+    def test_concurrent_identical_reads_share_one_solve(self):
+        srv, svc, t = self._loaded_service()
+        fed = svc._fed("default")
+        calls, release = [], threading.Event()
+        orig = srv.solve
+
+        def slow_solve(tg=0.0):
+            calls.append(tg)
+            release.wait(2.0)
+            return orig(tg)
+
+        srv.solve = slow_solve
+        body = pack_message({"target_gamma": 0.5})
+        outs = [None] * 8
+
+        def go(i):
+            outs[i] = t.request("solve", body)
+
+        threads = [threading.Thread(target=go, args=(i,)) for i in range(8)]
+        for th in threads:
+            th.start()
+        while not calls:                               # leader reached solve
+            pass
+        release.set()
+        for th in threads:
+            th.join()
+        assert len(calls) == 1                         # ONE computation
+        assert all(o == outs[0] for o in outs)         # ONE encoded response
+        assert fed.coalesced_hits == 7
+        # repeat within the same epoch: answered from cache
+        assert t.request("solve", body) == outs[0]
+        assert len(calls) == 1
+        assert fed.coalesced_hits == 8
+
+    def test_epoch_bump_invalidates(self):
+        srv, svc, t = self._loaded_service()
+        body = pack_message({"target_gamma": 0.5})
+        first = t.request("solve", body)
+        svc.handle("submit", _report(50, rows=6).to_bytes())
+        second = t.request("solve", body)
+        assert second != first
+        header, arrays, _ = unpack_message(second)
+        np.testing.assert_array_equal(arrays["weight"], srv.solve(0.5))
+
+    def test_distinct_requests_do_not_coalesce(self):
+        _, svc, t = self._loaded_service()
+        fed = svc._fed("default")
+        a = t.request("solve", pack_message({"target_gamma": 0.25}))
+        b = t.request("solve", pack_message({"target_gamma": 0.75}))
+        assert a != b
+        assert fed.coalesced_hits == 0
+
+    def test_etags_stay_correct_across_epoch_bump(self):
+        """The weights route through coalescing: a cached fresh-ETag answer
+        must never survive a submit."""
+        srv, svc, t = self._loaded_service()
+        rc = RemoteCoordinator(t)
+        w1 = rc.weights(0.5)
+        assert rc.weights(0.5, if_etag=w1.etag).etag == w1.etag
+        svc.handle("submit", _report(60, rows=6).to_bytes())
+        w2 = rc.weights(0.5, if_etag=w1.etag)
+        assert w2.etag != w1.etag
+        np.testing.assert_array_equal(w2.weight, srv.solve(0.5))
+
+    def test_errors_propagate_and_are_not_cached(self):
+        srv, svc, t = self._loaded_service()
+
+        boom = [True]
+        orig = srv.solve
+
+        def flaky(tg=0.0):
+            if boom[0]:
+                raise RuntimeError("transient")
+            return orig(tg)
+
+        srv.solve = flaky
+        body = pack_message({"target_gamma": 0.5})
+        resp = t.request("solve", body)
+        assert unpack_message(resp)[0]["ok"] is False
+        boom[0] = False
+        header, arrays, _ = unpack_message(t.request("solve", body))
+        assert header["ok"] is True                    # error was not cached
+        np.testing.assert_array_equal(arrays["weight"], orig(0.5))
+
+    def test_describe_reports_ingest_and_coalescing_counters(self):
+        async_reports = [_report(i) for i in range(6)]
+
+        srv = AsyncAFLServer(DIM, C, gamma=GAMMA, batch_max=4)
+        svc, t = _service_with(srv)
+        frames = frame_reports(r.to_bytes() for r in async_reports)
+        header, _, _ = unpack_message(t.request("submit_stream", frames))
+        assert header["accepted"] == len(async_reports)
+        deadline = 50
+        while svc._fed("default").pending and deadline:
+            import time
+            time.sleep(0.05)
+            deadline -= 1
+        t.request("solve", pack_message({"target_gamma": 0.5}))
+        t.request("solve", pack_message({"target_gamma": 0.5}))
+        info, _, _ = unpack_message(t.request("describe"))
+        assert info["coalesced_hits"] >= 1
+        ingest = info["ingest"]
+        assert ingest["batches_folded"] >= 1
+        assert 1 <= ingest["last_batch"] <= 4
+        assert ingest["batch_max"] == 4
+        assert ingest["queue_depth"] == 0
+        assert ingest["rejected_dropped"] == 0
+        svc.close()
+
+
+class TestStreamBatchedEnqueue:
+    def _frames(self, reports):
+        return frame_reports(r.to_bytes() for r in reports)
+
+    def test_stream_admits_in_one_crossing_and_folds(self):
+        srv = AsyncAFLServer(DIM, C, gamma=GAMMA, batch_max=16)
+        svc, t = _service_with(srv)
+        oracle = AFLServer(DIM, C, gamma=GAMMA)
+        reports = [_report(i, rows=2) for i in range(12)]
+        for r in reports:
+            oracle.submit(r)
+        header, _, _ = unpack_message(
+            t.request("submit_stream", self._frames(reports)))
+        assert header["accepted"] == len(reports)
+        assert all(r["ok"] and r.get("queued") for r in header["results"])
+        # drain, then compare bit-for-bit with the sequential oracle
+        import time
+        for _ in range(100):
+            if not svc._fed("default").pending:
+                break
+            time.sleep(0.05)
+        _assert_same_state(srv.server, oracle)
+        svc.close()
+
+    def test_stream_backpressure_shaves_the_tail(self):
+        srv = AsyncAFLServer(DIM, C, gamma=GAMMA)
+        svc, t = _service_with(srv, max_pending=3)
+        # stall the worker so admitted frames stay queued
+        reports = [_report(i) for i in range(6)]
+        header, _, _ = unpack_message(
+            t.request("submit_stream", self._frames(reports)))
+        oks = [r["ok"] for r in header["results"]]
+        assert oks == [True] * 3 + [False] * 3
+        assert all(r["error"] == E.Backpressure.code
+                   and r["retryable"] for r in header["results"][3:])
+        assert header["accepted"] == 3
+        svc.close()
+
+    def test_intra_stream_duplicate_answers_idempotently(self):
+        srv = AsyncAFLServer(DIM, C, gamma=GAMMA)
+        svc, t = _service_with(srv)
+        rep = _report(0)
+        header, _, _ = unpack_message(
+            t.request("submit_stream", self._frames([rep, rep])))
+        assert header["results"][0] == {"ok": True, "queued": True}
+        assert header["results"][1] == {"ok": True, "duplicate": True}
+        assert header["accepted"] == 2
+        svc.close()
+
+
+class TestEngineBatchPrimitives:
+    """The engine-layer primitives under the fold, pinned directly."""
+
+    def test_merge_many_is_left_fold(self):
+        eng = AnalyticEngine("numpy_f64", gamma=GAMMA)
+        rng = np.random.default_rng(0)
+        stats = eng.init(DIM, C)
+        uploads = []
+        for i in range(5):
+            x = rng.standard_normal((4, DIM))
+            y = np.eye(C)[rng.integers(0, C, 4)]
+            uploads.append(eng.client_stats(x, y))
+        seq = stats
+        for u in uploads:
+            seq = eng.merge(seq, u)
+        batched = eng.merge_many(stats, uploads)
+        np.testing.assert_array_equal(batched.gram, seq.gram)
+        np.testing.assert_array_equal(batched.moment, seq.moment)
+        assert float(batched.count) == float(seq.count)
+        assert float(batched.clients) == float(seq.clients)
+
+    def test_rank_update_many_matches_sequential(self):
+        eng = AnalyticEngine("numpy_f64", gamma=GAMMA)
+        rng = np.random.default_rng(1)
+        x = rng.standard_normal((4 * DIM, DIM))
+        stats = eng.client_stats(x, np.eye(C)[rng.integers(0, C, 4 * DIM)])
+        f = eng.factor(stats, target_gamma=0.5)
+        roots = [rng.standard_normal((k, DIM)) for k in (1, 3, 2)]
+        seq = f
+        for r in roots:
+            seq = seq.rank_update(r)
+        grouped = f.rank_update_many(roots)
+        np.testing.assert_array_equal(np.asarray(grouped.handle),
+                                      np.asarray(seq.handle))
+
+    def test_rank_update_many_with_empty_groups(self):
+        eng = AnalyticEngine("numpy_f64", gamma=GAMMA)
+        rng = np.random.default_rng(2)
+        x = rng.standard_normal((4 * DIM, DIM))
+        stats = eng.client_stats(x, np.eye(C)[rng.integers(0, C, 4 * DIM)])
+        f = eng.factor(stats, target_gamma=0.5)
+        roots = [np.zeros((0, DIM)), rng.standard_normal((2, DIM)),
+                 np.zeros((0, DIM))]
+        grouped = f.rank_update_many(roots)
+        seq = f.rank_update(roots[1])
+        np.testing.assert_array_equal(np.asarray(grouped.handle),
+                                      np.asarray(seq.handle))

@@ -189,6 +189,42 @@ class TestCoordinatorConformance:
         np.testing.assert_allclose(w_all, al.ridge_solve(x, y, 0.0),
                                    **TOL[kind])
 
+    def test_batched_ingest_is_bit_for_bit_with_sequential(self, kind):
+        """Micro-batched ingest (``submit_batch`` on the sync server, the
+        pipelined ``submit_many`` everywhere else) must be indistinguishable
+        from a client that uploaded the same reports one at a time — at f64
+        that means *bit-for-bit*: the batched fold performs the exact
+        sequential operation schedule, not merely an equivalent one. The
+        sharded kind accumulates on an f32 device mesh, so it keeps its
+        usual tolerance."""
+        _, _, reps = _reports(n_clients=12, rows_each=6, seed=11)
+        oracle = AFLServer(DIM, C, gamma=GAMMA)
+        for r in reps:
+            oracle.submit(r)
+        w_ref = np.asarray(oracle.solve())
+        sweep_ref = [np.asarray(w)
+                     for w in oracle.solve_multi_gamma([0.0, 0.5, GAMMA])]
+
+        async def body():
+            async with _make(kind) as coord:
+                if kind == "sync":
+                    flags = coord.submit_batch(reps)
+                    assert all(f is True for f in flags)
+                else:
+                    await _call(coord.submit_many(reps))
+                w = await _call(coord.solve())
+                ws = await _call(coord.solve_multi_gamma([0.0, 0.5, GAMMA]))
+                assert coord.num_clients == len(reps)
+                return np.asarray(w), [np.asarray(v) for v in ws]
+
+        w, ws = asyncio.run(body())
+        if kind == "sharded":
+            np.testing.assert_allclose(w, w_ref, **TOL[kind])
+            return
+        np.testing.assert_array_equal(w, w_ref)
+        for got, ref in zip(ws, sweep_ref):
+            np.testing.assert_array_equal(got, ref)
+
     def test_duplicate_and_gamma_mismatch_raise(self, kind):
         """A CONFLICTING duplicate (same client id, different statistics)
         raises on every kind. Byte-identical resubmission is deliberately

@@ -75,6 +75,28 @@ class TestKernelParityF32:
             np.testing.assert_allclose(w[i], ref, rtol=2e-3,
                                        atol=2e-4 * np.abs(ref).max())
 
+    @pytest.mark.parametrize("d,k", [(32, 2), (48, 5), (130, 3)])
+    def test_chol_rank_update(self, d, k):
+        """Fused rank-k factor update vs a fresh Cholesky of A + xsᵀxs,
+        covering padded d (130) and k below/above the minimal pad."""
+        rng = np.random.default_rng(7)
+        a = _spd(d, seed=6)
+        l = np.linalg.cholesky(a)
+        xs = rng.standard_normal((k, d))
+        out = np.asarray(ops.chol_rank_update(
+            jnp.asarray(l, jnp.float32), jnp.asarray(xs, jnp.float32)))
+        ref = np.linalg.cholesky(a + xs.T @ xs)
+        np.testing.assert_allclose(out, ref, rtol=1e-3,
+                                   atol=5e-4 * np.abs(ref).max())
+        # clean lower factor: strict upper triangle exactly zero
+        assert np.array_equal(np.triu(out, 1), np.zeros_like(out))
+
+    def test_chol_rank_zero_is_identity(self):
+        l = np.linalg.cholesky(_spd(24, seed=8))
+        out = np.asarray(ops.chol_rank_update(
+            jnp.asarray(l, jnp.float32), jnp.zeros((0, 24), jnp.float32)))
+        assert np.array_equal(out, l.astype(np.float32))
+
     def test_singular_system_yields_nans_not_garbage(self):
         """γ=0 on a rank-deficient Gram must be *loud* (NaNs trip the
         engine's eigendecomposition fallback), never silently wrong."""
@@ -472,6 +494,44 @@ _X64_KERNEL_PARITY = textwrap.dedent(
     leaf = ShardedCoordinator(d8, c8, gamma=1.0)
     leaf.submit_many(reps8)
     assert np.abs(tiled.solve(0.0) - leaf.solve(0.0)).max() < 1e-6
+
+    # 5) fused rank-k Cholesky update vs the host Householder sweep,
+    #    covering padding edges (d % block != 0) and k past a lane multiple
+    from repro.core.engine import _chol_rank_update, _chol_rank_update_grouped
+    for d5, k5 in [(24, 3), (29, 5), (64, 9), (130, 2)]:
+        x = rng.standard_normal((4 * d5, d5))
+        a = x.T @ x + 0.7 * np.eye(d5)
+        l = np.linalg.cholesky(a)
+        xs = rng.standard_normal((k5, d5))
+        out = ops.chol_rank_update(jnp.asarray(l), jnp.asarray(xs))
+        ref = _chol_rank_update(l.T, xs).T     # host sweeps the upper R=L.T
+        assert rel(out, ref) < TOL, ("rank_update", d5, rel(out, ref))
+        # strict upper triangle stays exactly zero through the kernel
+        assert np.array_equal(np.triu(np.asarray(out), 1),
+                              np.zeros((d5, d5)))
+        # k = 0 is the identity
+        out0 = ops.chol_rank_update(jnp.asarray(l), jnp.zeros((0, d5)))
+        assert np.array_equal(np.asarray(out0), l)
+        # stacked micro-batch: one fused call over concatenated roots vs
+        # the host grouped sweep over the same sequence
+        parts = [xs[:2], np.zeros((0, d5)), xs[2:]]
+        outm = ops.chol_rank_update(
+            jnp.asarray(l), jnp.asarray(np.concatenate(parts, 0)))
+        refm = _chol_rank_update_grouped(l.T, parts).T
+        assert rel(outm, refm) < TOL, ("rank_update_many", d5, rel(outm, refm))
+
+    # 6) engine route: factor_update with a LIST of roots folds through
+    #    rank_update_many / the fused kernel and matches the host engine
+    root_list = [rng.standard_normal((1, d)) for _ in range(3)]
+    delta = SuffStats(
+        jnp.asarray(sum(np.asarray(r).T @ np.asarray(r) for r in root_list)),
+        jnp.zeros_like(sk.moment), jnp.asarray(0.0), jnp.asarray(0.0))
+    sk2 = eng_k.merge(sk, delta)
+    fk2 = eng_k.factor_update(f, sk2, root=root_list, target_gamma=0.5)
+    sh2 = SuffStats(np.asarray(sk2.gram), np.asarray(sk2.moment),
+                    float(sk2.count), float(sk2.clients))
+    assert rel(eng_k.factor_solve(fk2, sk2.moment),
+               eng_h.solve(sh2, target_gamma=0.5)) < TOL
     print("OK")
     """
 )
